@@ -1,0 +1,113 @@
+"""Shared benchmark harness for the paper's experiments (§4).
+
+Each figure-bench runs the same protocol: M workers, a loss, a sampler,
+one engine per algorithm {adam, cada1, cada2, lag, local_momentum, fedadam},
+recording loss / cumulative uploads / cumulative gradient evaluations per
+iteration — the three x-axes of the paper's Figures 2-5.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import CADAEngine, make_sampler
+from repro.core.local_update import LocalUpdateEngine
+from repro.core.rules import CommRule
+from repro.optim.adam import adam
+from repro.optim.sgd import sgd
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+
+@dataclass
+class RunResult:
+    algo: str
+    loss: np.ndarray        # (iters,)
+    uploads: np.ndarray     # (iters,) cumulative
+    grad_evals: np.ndarray  # (iters,) cumulative
+    wall_s: float
+
+    def row(self) -> dict:
+        return {
+            "algo": self.algo,
+            "final_loss": float(np.mean(self.loss[-10:])),
+            "total_uploads": int(self.uploads[-1]),
+            "total_grad_evals": int(self.grad_evals[-1]),
+            "iters": len(self.loss),
+            "wall_s": round(self.wall_s, 2),
+        }
+
+
+def run_engine_algo(algo: str, loss_fn, params, sample, *, m: int,
+                    iters: int, lr: float, c: float = 0.6, d_max: int = 10,
+                    max_delay: int = 100, h_period: int = 10,
+                    lag_lr: float = 0.1, seed: int = 1,
+                    monte_carlo: int = 1) -> RunResult:
+    """One algorithm on one problem; averaged over ``monte_carlo`` runs."""
+    losses, ups, evals = [], [], []
+    t0 = time.time()
+    for mc in range(monte_carlo):
+        key = jax.random.PRNGKey(seed + 1000 * mc)
+        if algo in ("adam", "cada1", "cada2", "lag"):
+            kind = "always" if algo == "adam" else algo
+            opt = (adam(lr=lr) if algo != "lag" else sgd(lr=lag_lr))
+            eng = CADAEngine(loss_fn, opt,
+                             CommRule(kind=kind, c=c, d_max=d_max,
+                                      max_delay=max_delay), m)
+            st = eng.init(params)
+            batches = jax.vmap(sample)(jax.random.split(key, iters))
+            _, mets = jax.jit(eng.run)(st, batches)
+            losses.append(np.asarray(mets["loss"]))
+            ups.append(np.cumsum(np.asarray(mets["uploads"])))
+            evals.append(np.cumsum(np.asarray(mets["grad_evals"])))
+        elif algo in ("local_momentum", "fedadam"):
+            eng = LocalUpdateEngine(loss_fn, n_workers=m, h_period=h_period,
+                                    algo=algo, lr=lag_lr, server_lr=lr)
+            st = eng.init(params)
+            rounds = iters // h_period
+            batches = jax.vmap(sample)(jax.random.split(key,
+                                                        rounds * h_period))
+            batches = jax.tree.map(
+                lambda x: x.reshape((rounds, h_period) + x.shape[1:]),
+                batches)
+            _, mets = jax.jit(eng.run)(st, batches)
+            losses.append(np.asarray(mets["loss"]).reshape(-1))
+            ups.append(np.cumsum(
+                np.repeat(np.asarray(mets["uploads"]), h_period)
+                / h_period))
+            evals.append(np.cumsum(
+                np.repeat(np.asarray(mets["grad_evals"]), h_period)
+                / h_period))
+        else:
+            raise ValueError(algo)
+    return RunResult(algo, np.mean(losses, axis=0), np.mean(ups, axis=0),
+                     np.mean(evals, axis=0), time.time() - t0)
+
+
+def uploads_to_target(res: RunResult, target_loss: float) -> int | None:
+    """Communication complexity: cumulative uploads at the first iteration
+    after which the (smoothed) loss stays at/below ``target_loss`` for the
+    rest of the run — the paper's headline metric, made transient-proof."""
+    w = 10
+    smooth = np.convolve(res.loss, np.ones(w) / w, mode="valid")
+    # suffix max: smallest i with max(smooth[i:]) <= target
+    suffix_max = np.maximum.accumulate(smooth[::-1])[::-1]
+    ok = suffix_max <= target_loss * 1.02
+    if not ok.any():
+        return None
+    hit = int(np.argmax(ok))
+    return int(res.uploads[min(hit + w - 1, len(res.uploads) - 1)])
+
+
+def save_rows(name: str, rows: list[dict]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return path

@@ -1,0 +1,96 @@
+"""Roofline report: renders the dry-run JSONL rows (produced by
+``python -m repro.launch.dryrun --all --out ...``) into the EXPERIMENTS.md
+§Roofline table and flags the dominant term per (arch × shape × mesh).
+
+This module does NOT lower anything itself (the dry-run needs 512 fake
+devices; benches run with 1) — it is the analysis/reporting half.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from collections import defaultdict
+
+HW_NOTE = ("TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI")
+
+
+def load(paths: list[str]) -> list[dict]:
+    rows = []
+    for p in paths:
+        if not os.path.exists(p):
+            continue
+        with open(p) as f:
+            for line in f:
+                rows.append(json.loads(line))
+    # keep the latest row per (arch, shape, mesh, step)
+    dedup = {}
+    for r in rows:
+        dedup[(r["arch"], r["shape"], r["mesh"], r.get("step"))] = r
+    return list(dedup.values())
+
+
+def _fmt(x: float) -> str:
+    return f"{x:.2e}"
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | step | compute s | memory s | "
+           "collective s | dominant | 6ND/HLO | note |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        note = r.get("rule", "") or ""
+        if r.get("sliding_window"):
+            note += f" window={r['sliding_window']}"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['step']} "
+            f"| {_fmt(r['t_compute_s'])} | {_fmt(r['t_memory_s'])} "
+            f"| {_fmt(r['t_collective_s'])} | **{r['dominant']}** "
+            f"| {r['useful_flops_ratio']:.2f} | {note} |")
+    return "\n".join(lines)
+
+
+def summary(rows: list[dict]) -> str:
+    by_dom = defaultdict(list)
+    for r in rows:
+        by_dom[r["dominant"]].append(f"{r['arch']}×{r['shape']}")
+    out = [f"{len(rows)} combos; {HW_NOTE}"]
+    for dom, items in sorted(by_dom.items()):
+        out.append(f"  dominant={dom}: {len(items)}")
+    # the three §Perf candidates
+    train = [r for r in rows if r["shape"] == "train_4k"
+             and r["mesh"] == "16x16"]
+    if train:
+        worst = min(train, key=lambda r: r["useful_flops_ratio"])
+        coll = max(train, key=lambda r: r["t_collective_s"]
+                   / max(r["t_compute_s"] + r["t_memory_s"], 1e-12))
+        out.append(f"  worst useful-flops ratio: {worst['arch']} "
+                   f"({worst['useful_flops_ratio']:.2f})")
+        out.append(f"  most collective-bound: {coll['arch']} "
+                   f"(coll/compute+mem = "
+                   f"{coll['t_collective_s'] / (coll['t_compute_s'] + coll['t_memory_s']):.2f})")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--in", dest="inputs", nargs="+",
+                    default=["results/dryrun_single.jsonl",
+                             "results/dryrun_multi.jsonl"])
+    ap.add_argument("--md-out", default="results/roofline.md")
+    args = ap.parse_args()
+    rows = load(args.inputs)
+    if not rows:
+        print("no dry-run rows found — run: PYTHONPATH=src python -m "
+              "repro.launch.dryrun --all --out results/dryrun_single.jsonl")
+        return
+    table = markdown_table(rows)
+    with open(args.md_out, "w") as f:
+        f.write(table + "\n")
+    print(summary(rows))
+    print(f"table -> {args.md_out}")
+
+
+if __name__ == "__main__":
+    main()

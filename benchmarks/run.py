@@ -1,0 +1,90 @@
+"""Benchmark aggregator: one entry per paper table/figure + the beyond-paper
+benches. Prints a CSV summary and writes per-bench JSON under results/.
+
+  python -m benchmarks.run            # fast settings (CI-sized)
+  python -m benchmarks.run --full     # paper-sized iteration counts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-list: logreg,nn,lag,hier,roofline")
+    args = ap.parse_args()
+    full = args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    rows = []
+
+    def emit(bench, r):
+        r = dict(r)
+        r["bench"] = bench
+        rows.append(r)
+
+    if only is None or "logreg" in only:
+        from benchmarks import paper_logreg
+        t0 = time.time()
+        for ds in ("covtype", "ijcnn1"):
+            for r in paper_logreg.run(ds, iters=1000 if full else 500,
+                                      monte_carlo=3 if full else 1):
+                emit("paper_logreg(Fig2-3)", r)
+        print(f"[logreg done in {time.time() - t0:.0f}s]", file=sys.stderr)
+
+    if only is None or "nn" in only:
+        from benchmarks import paper_nn
+        t0 = time.time()
+        for model in (("cnn", "mlp") if full else ("mlp",)):
+            for r in paper_nn.run(model=model,
+                                  iters=800 if full else 300):
+                emit("paper_nn(Fig4)", r)
+        print(f"[nn done in {time.time() - t0:.0f}s]", file=sys.stderr)
+
+    if only is None or "lag" in only:
+        from benchmarks import lag_ineffectiveness
+        for r in lag_ineffectiveness.run(iters=800 if full else 400):
+            emit("lag_ineffectiveness(§2.1)", r)
+
+    if only is None or "hier" in only:
+        from benchmarks import hierarchical_cada
+        for r in hierarchical_cada.run(steps=80 if full else 40):
+            emit("hierarchical_cada(beyond-paper)", r)
+
+    if only is None or "ablations" in only:
+        from benchmarks import ablations
+        iters = 600 if full else 300
+        for r in (ablations.sweep_c(iters) + ablations.sweep_D(iters)
+                  + ablations.sweep_bits(iters) + ablations.sweep_H(iters)):
+            emit("ablations(supplement)", r)
+
+    if only is None or "roofline" in only:
+        from benchmarks import roofline
+        rl = roofline.load(["results/dryrun_single.jsonl",
+                            "results/dryrun_multi.jsonl"])
+        for r in rl:
+            emit("roofline(§Dry-run)", {
+                "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "dominant": r["dominant"],
+                "t_compute_s": r["t_compute_s"],
+                "t_memory_s": r["t_memory_s"],
+                "t_collective_s": r["t_collective_s"],
+                "useful": r["useful_flops_ratio"]})
+
+    # ------------------------------------------------------------- CSV out
+    keys = ["bench"]
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Quickstart: communication-adaptive distributed Adam in ~40 lines.
+
+Ten workers with heterogeneous (label-skewed) data collaboratively fit a
+logistic regression. CADA2 skips the uninformative uploads; distributed
+Adam uploads every worker every step. Run:
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core.engine import CADAEngine, make_sampler
+from repro.core.rules import CommRule
+from repro.data.partition import dirichlet_partition, pad_to_matrix
+from repro.data.synthetic import ijcnn1_like
+from repro.models.small import logreg_init, logreg_loss
+from repro.optim.adam import adam
+
+M, ITERS = 10, 500
+
+ds = ijcnn1_like(n=8000)
+shards = pad_to_matrix(dirichlet_partition(ds.y, m=M, alpha=0.3, seed=0))
+sample = make_sampler(ds.x, ds.y, shards, batch_size=32)
+params = logreg_init(None, dim=ds.x.shape[1], n_classes=ds.n_classes)
+
+for name, rule in [
+    ("distributed Adam", CommRule(kind="always")),
+    ("CADA2           ", CommRule(kind="cada2", c=0.6, d_max=10,
+                                  max_delay=100)),
+]:
+    engine = CADAEngine(logreg_loss, adam(lr=0.01), rule, n_workers=M)
+    state = engine.init(params)
+    batches = jax.vmap(sample)(
+        jax.random.split(jax.random.PRNGKey(1), ITERS))
+    state, metrics = jax.jit(engine.run)(state, batches)
+    loss = float(np.asarray(metrics["loss"])[-20:].mean())
+    uploads = int(np.asarray(metrics["uploads"]).sum())
+    print(f"{name}  final loss {loss:.4f}   worker uploads "
+          f"{uploads:5d} / {ITERS * M}")

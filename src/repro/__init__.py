@@ -1,0 +1,27 @@
+"""repro — production-grade JAX reproduction of
+"CADA: Communication-Adaptive Distributed Adam" (Chen, Guo, Sun, Yin, 2020).
+
+Public API (stable entry points; everything else is internal):
+
+    repro.CommRule, repro.CADAEngine        # paper Algorithm 1
+    repro.TrainHParams, repro.jit_train_step  # pod-scale trainer
+    repro.get_config, repro.list_archs      # the 10-arch registry
+"""
+
+__version__ = "0.1.0"
+
+
+def __getattr__(name):  # lazy: importing repro must not touch jax devices
+    if name in ("CommRule",):
+        from repro.core.rules import CommRule
+        return CommRule
+    if name in ("CADAEngine",):
+        from repro.core.engine import CADAEngine
+        return CADAEngine
+    if name in ("TrainHParams", "jit_train_step"):
+        from repro.distributed import trainer
+        return getattr(trainer, name)
+    if name in ("get_config", "get_smoke_config", "list_archs"):
+        import repro.configs as _c
+        return getattr(_c, name)
+    raise AttributeError(name)

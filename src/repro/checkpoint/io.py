@@ -1,0 +1,83 @@
+"""Pytree checkpointing: .npz payload + json manifest (treedef + shapes).
+
+Deliberately dependency-free (no orbax). Arrays are gathered to host before
+save; restore reproduces the exact treedef and dtypes, and can re-shard via a
+``device_put_fn`` hook (used by the launcher to put leaves back on the mesh).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save(path: str, tree: Any, step: int | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    paths, leaves, _ = _flatten_with_paths(tree)
+    host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+    # npz can't round-trip ml_dtypes (bfloat16/fp8) — store widened fp32
+    # bits and record the logical dtype in the manifest.
+    stored = [a.astype(np.float32)
+              if a.dtype not in (np.float32, np.float64, np.float16,
+                                 np.int8, np.int16, np.int32, np.int64,
+                                 np.uint8, np.uint16, np.uint32, np.uint64,
+                                 np.bool_)
+              else a for a in host_leaves]
+    np.savez(os.path.join(path, "arrays.npz"),
+             **{f"leaf_{i}": a for i, a in enumerate(stored)})
+    manifest = {
+        "version": 1,
+        "step": step,
+        "paths": paths,
+        "shapes": [list(a.shape) for a in host_leaves],
+        "dtypes": [str(a.dtype) for a in host_leaves],
+    }
+    tmp = os.path.join(path, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(tmp, os.path.join(path, "manifest.json"))
+
+
+def restore(path: str, like: Any,
+            device_put_fn: Callable[[str, np.ndarray], Any] | None = None
+            ) -> tuple[Any, int | None]:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    paths, leaves, treedef = _flatten_with_paths(like)
+    if paths != manifest["paths"]:
+        raise ValueError(
+            "checkpoint tree mismatch:\n saved: "
+            f"{manifest['paths'][:5]}...\n expected: {paths[:5]}...")
+    out = []
+    for i, (p, ref) in enumerate(zip(paths, leaves)):
+        a = data[f"leaf_{i}"]
+        if list(a.shape) != list(np.shape(ref)):
+            raise ValueError(f"shape mismatch at {p}: {a.shape} vs "
+                             f"{np.shape(ref)}")
+        if str(a.dtype) != str(np.dtype(getattr(ref, "dtype", a.dtype))):
+            # widened-on-save leaves come back via jnp (ml_dtypes cast)
+            import jax.numpy as jnp
+            a = np.asarray(jnp.asarray(a).astype(ref.dtype))
+        out.append(device_put_fn(p, a) if device_put_fn else a)
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]
+
+
+def latest_step_dir(root: str) -> str | None:
+    if not os.path.isdir(root):
+        return None
+    steps = [d for d in os.listdir(root) if d.startswith("step_")]
+    if not steps:
+        return None
+    return os.path.join(root, max(steps, key=lambda s: int(s.split("_")[1])))

@@ -1,0 +1,18 @@
+"""Architecture registry: the 10 assigned architectures (+ paper-native
+problems live in repro.models.small / benchmarks). Importing this package
+registers every config.
+"""
+from repro.configs import (  # noqa: F401  (registration side effects)
+    falcon_mamba_7b, granite_moe_1b, grok_1_314b, internlm2_1_8b,
+    llama3_405b, musicgen_medium, qwen2_vl_2b, stablelm_1_6b, yi_34b,
+    zamba2_2_7b,
+)
+from repro.configs.base import (
+    SHAPES, InputShape, adapt_for_shape, get_config, get_smoke_config,
+    input_specs, list_archs,
+)
+
+__all__ = [
+    "SHAPES", "InputShape", "adapt_for_shape", "get_config",
+    "get_smoke_config", "input_specs", "list_archs",
+]

@@ -1,0 +1,123 @@
+"""Input shapes, spec builders, and the architecture registry.
+
+The four assigned input shapes (fixed by the task):
+    train_4k     seq=4,096    global_batch=256   (training)
+    prefill_32k  seq=32,768   global_batch=32    (inference-prefill)
+    decode_32k   seq=32,768   global_batch=128   (inference-decode: 1 token,
+                                                  KV/SSM state of length seq)
+    long_500k    seq=524,288  global_batch=1     (long-context decode —
+                                                  requires sub-quadratic
+                                                  attention or SSM state)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs for every model
+input of a (config, shape) pair — shardable, no device allocation — which is
+what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import init_cache
+
+TRAIN, PREFILL, DECODE = "train", "prefill", "decode"
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq: int
+    batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, TRAIN),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, PREFILL),
+    "decode_32k": InputShape("decode_32k", 32768, 128, DECODE),
+    "long_500k": InputShape("long_500k", 524288, 1, DECODE),
+}
+
+LONG_CONTEXT_WINDOW = 8192  # sliding window used by full-attention archs
+#                             for long_500k (DESIGN.md §Arch-applicability)
+
+
+def adapt_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Per-shape config tweaks: full-attention archs switch to a sliding
+    window for 500k-context decode (the sub-quadratic requirement)."""
+    if shape.kind == DECODE and shape.seq > 65536 and not cfg.subquadratic:
+        return cfg.with_(sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for the step function's *data* arguments.
+
+    train  -> {"tokens"} or {"embeds","labels"} (+ "positions" for M-RoPE)
+    prefill-> same minus labels
+    decode -> {"tokens"/"embeds"} one token + {"cache"} primed at seq.
+    """
+    cfg = adapt_for_shape(cfg, shape)
+    b, s = shape.batch, shape.seq
+    emb_dtype = cfg.jnp_dtype
+
+    def positions(seq):
+        return _sds((3, b, seq), jnp.int32) if cfg.mrope else None
+
+    if shape.kind == TRAIN:
+        if cfg.embed_input:
+            specs = {"tokens": _sds((b, s + 1), jnp.int32)}
+        else:
+            specs = {"embeds": _sds((b, s, cfg.d_model), emb_dtype),
+                     "labels": _sds((b, s), jnp.int32)}
+        if cfg.mrope:
+            specs["positions"] = positions(s)
+        return {"batch": specs}
+
+    if shape.kind == PREFILL:
+        if cfg.embed_input:
+            specs = {"tokens": _sds((b, s), jnp.int32)}
+        else:
+            specs = {"embeds": _sds((b, s, cfg.d_model), emb_dtype)}
+        if cfg.mrope:
+            specs["positions"] = positions(s)
+        return specs
+
+    # decode: one new token against a cache primed at `seq`.
+    cache = jax.eval_shape(partial(init_cache, cfg, b, s))
+    if cfg.embed_input:
+        return {"tokens": _sds((b,), jnp.int32), "cache": cache}
+    return {"embeds": _sds((b, 1, cfg.d_model), emb_dtype), "cache": cache}
+
+
+# ------------------------------------------------------------- registry
+
+_REGISTRY: dict[str, dict] = {}
+
+
+def register(name: str, config_fn, smoke_fn):
+    _REGISTRY[name] = {"config": config_fn, "smoke": smoke_fn}
+
+
+def get_config(name: str) -> ModelConfig:
+    return _REGISTRY[name]["config"]()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    """Reduced same-family variant: <=2 layers, d_model<=512, <=4 experts."""
+    cfg = _REGISTRY[name]["smoke"]()
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    return cfg
+
+
+def list_archs() -> list[str]:
+    return sorted(_REGISTRY)

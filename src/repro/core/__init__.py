@@ -1,0 +1,11 @@
+"""The paper's primary contribution: CADA rules, server/worker engine, and
+the per-iteration / local-update baselines it is benchmarked against."""
+from repro.core.engine import CADAEngine, EngineState, make_sampler
+from repro.core.local_update import LocalState, LocalUpdateEngine
+from repro.core.rules import RULES, CommRule
+
+__all__ = [
+    "CADAEngine", "EngineState", "make_sampler",
+    "LocalUpdateEngine", "LocalState",
+    "CommRule", "RULES",
+]

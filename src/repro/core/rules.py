@@ -1,0 +1,48 @@
+"""CADA communication rules (paper eqs. 5, 7, 10).
+
+A rule decides, per worker and per iteration, whether the fresh stochastic
+gradient is informative enough to upload. All rules share the RHS
+    (c/d_max) * Σ_{d=1..d_max} ||θ^{k+1-d} − θ^{k-d}||²
+(the recent-progress measure, tracked as a ring buffer of d_max scalars) and
+the max-staleness override τ_m ≥ D.
+
+Rules:
+  * ``cada1`` (eq. 7)  — SVRG-style innovation vs. a snapshot θ̃ refreshed
+    every D iterations:  ||δ̃_m^k − δ̃_m^{k−τ}||² ≤ RHS.
+  * ``cada2`` (eq. 10) — same-sample two-iterate difference:
+    ||∇ℓ(θ^k;ξ_m^k) − ∇ℓ(θ^{k−τ_m};ξ_m^k)||² ≤ RHS.
+  * ``lag``   (eq. 5)  — naive stochastic LAG (different samples — shown
+    ineffective in §2.1; reproduced as a baseline).
+  * ``always``          — threshold never satisfied ⇒ distributed Adam.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+RULES = ("cada1", "cada2", "lag", "always")
+
+
+@dataclass(frozen=True)
+class CommRule:
+    """Hyper-parameters of the adaptive-communication condition."""
+    kind: str = "cada2"
+    c: float = 0.6          # threshold constant (paper grid {0.05..1.8})
+    d_max: int = 10         # averaging window of the RHS (paper: 10 / 2)
+    max_delay: int = 50     # D — forces an upload and snapshot period
+    quantize_bits: int = 0  # 0 = off; b-bit uniform innovation upload
+    #                         (LAQ-style composition — beyond-paper)
+
+    def __post_init__(self):
+        if self.kind not in RULES:
+            raise ValueError(f"rule kind must be one of {RULES}")
+        if self.d_max < 1 or self.max_delay < 1:
+            raise ValueError("d_max and max_delay must be >= 1")
+        if self.c < 0:
+            raise ValueError("threshold c must be >= 0")
+        if self.quantize_bits and not 2 <= self.quantize_bits < 32:
+            raise ValueError("quantize_bits must be 0 or in [2, 32)")
+
+    @property
+    def grad_evals_per_iter(self) -> int:
+        """Worker-side gradient evaluations per iteration (paper §2.2)."""
+        return 2 if self.kind in ("cada1", "cada2") else 1

@@ -1,0 +1,15 @@
+from repro.data import partition, synthetic
+from repro.data.synthetic import (
+    Dataset, covtype_like, ijcnn1_like, lm_tokens, mnist_like,
+)
+from repro.data.partition import (
+    dirichlet_partition, pad_to_matrix, random_sizes_partition,
+    uniform_partition,
+)
+
+__all__ = [
+    "partition", "synthetic", "Dataset",
+    "covtype_like", "ijcnn1_like", "lm_tokens", "mnist_like",
+    "dirichlet_partition", "pad_to_matrix", "random_sizes_partition",
+    "uniform_partition",
+]

@@ -1,0 +1,5 @@
+"""Distributed runtime: sharding policies, the hierarchical CADA trainer,
+and the serving (prefill/decode) step builders."""
+from repro.distributed.sharding import (  # noqa: F401
+    batch_pspecs, cache_pspecs, param_pspecs, to_named, wants_fsdp,
+)

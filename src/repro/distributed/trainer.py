@@ -1,0 +1,538 @@
+"""Hierarchical CADA: the paper's server/worker protocol mapped onto TPU
+pods (DESIGN.md §3).
+
+The paper's "worker" becomes the unit that actually pays for communication:
+  * multi-pod mesh (pod, data, model): worker = pod (M = n_pods). Within a
+    pod gradients average over cheap ICI; ACROSS pods the all-reduce of the
+    masked innovations (eq. 3) is what CADA gates — skipped rounds eliminate
+    the DCN transfer of a full fp32 gradient.
+  * single-pod mesh (data, model): worker = data-parallel group (M = 16),
+    matching the paper's M ≈ 10-20; the gated collective rides ICI.
+
+Everything is a single pjit'd step: per-worker gradients are a `vmap` over
+the M-leading axis (sharded over the worker axis of the mesh), per-worker
+stale state is stored with that same M-leading sharding so each worker's
+copy lives on its own slice of the machine, and the server's AMSGrad update
+runs redundantly on every chip (standard SPMD "virtual server").
+
+State-memory policy knobs (production necessities for the 314B/405B archs):
+  * ``cada_dtype``   — storage dtype of {∇ (nabla), per-worker stale trees}
+  * ``microbatches`` — gradient accumulation inside the step (activation
+    memory /= microbatches at fixed global batch)
+  * moments are fp32 {h, v̂} only (see kernels/cada_update.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.rules import CommRule
+from repro.launch.mesh import DATA, POD
+from repro.models.config import ModelConfig
+from repro.models.model import abstract_params, init_params, lm_loss
+from repro.distributed.sharding import (batch_pspecs, param_pspecs,
+                                        to_named, wants_fsdp)
+
+
+@dataclass(frozen=True)
+class TrainHParams:
+    rule: CommRule = field(default_factory=lambda: CommRule(kind="cada2"))
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    microbatches: int = 1
+    cada_dtype: str = "float32"     # nabla / stale-tree storage
+    moments_dtype: str = "float32"  # {h, v̂} storage (bf16 = beyond-paper)
+    fsdp: bool | None = None        # None = auto (sharding.wants_fsdp)
+    fsdp_axes: tuple = ("data",)    # params: gathered per layer per micro
+    state_fsdp_axes: tuple = ()     # () = same as fsdp_axes. Set to
+    #   ("data","pod") to ZeRO the OPTIMIZER state across pods while params
+    #   stay pod-local: state is touched once per step, so the pod-spanning
+    #   reshard rides DCN once — vs per-layer-per-microbatch param gathers
+    #   (measured 1.9e3 s/step on llama3-405b — §Perf).
+    shard_cada_state: bool = False  # shard nabla/stale trees over "data"
+    #                                 even when params don't FSDP (§Perf)
+
+    @property
+    def cada_jnp_dtype(self):
+        return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+            self.cada_dtype]
+
+    @property
+    def moments_jnp_dtype(self):
+        return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+            self.moments_dtype]
+
+
+class DistTrainState(NamedTuple):
+    step: jnp.ndarray        # k
+    params: Any              # θ^k
+    h: Any                   # first moment (fp32)
+    vhat: Any                # running max second moment (fp32)
+    nabla: Any               # ∇^{k-1} aggregated stale gradient (eq. 3)
+    stale_grads: Any         # (M,)-leading: last contributed ∇ℓ(θ̂_m;ξ̂_m)
+    snapshot: Any            # θ̃ (cada1) else None
+    stale_delta: Any         # (M,)-leading δ̃_m^{k−τ} (cada1) else None
+    worker_params: Any       # (M,)-leading θ^{k−τ_m} (cada2) else None
+    staleness: jnp.ndarray   # (M,) int32
+    diff_hist: jnp.ndarray   # (d_max,) fp32 ring buffer
+
+
+# ------------------------------------------------------------------- specs
+
+def worker_axis_name(mesh) -> str:
+    return POD if POD in mesh.shape else DATA
+
+
+def _strip_axis(spec: P, axis: str) -> P:
+    """Remove ``axis`` from every dim of a PartitionSpec."""
+    dims = []
+    for d in spec:
+        if d == axis:
+            dims.append(None)
+        elif isinstance(d, tuple):
+            kept = tuple(a for a in d if a != axis)
+            dims.append(kept if kept else None)
+        else:
+            dims.append(d)
+    return P(*dims)
+
+
+def _prepend_worker(specs, axis: str):
+    """(M, ...)-leading per-worker tree: worker axis leads; inner dims keep
+    their param sharding minus the worker axis (no axis may repeat)."""
+    return jax.tree.map(
+        lambda s: P(axis, *_strip_axis(s, axis)), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def train_state_specs(cfg: ModelConfig, mesh, hp: TrainHParams
+                      ) -> DistTrainState:
+    psp = param_pspecs(cfg, mesh, hp.fsdp, hp.fsdp_axes)
+    waxis = worker_axis_name(mesh)
+    wsp = _prepend_worker(psp, waxis)
+    # optimizer moments may ZeRO over more axes than params (see hparams)
+    msp = (param_pspecs(cfg, mesh, True, hp.state_fsdp_axes)
+           if hp.state_fsdp_axes else psp)
+    # gradient-shaped CADA state has no compute locality: shard it over
+    # every axis available regardless of the params' FSDP choice (§Perf —
+    # cuts the cross-pod innovation all-reduce per-chip volume).
+    gsp = (param_pspecs(cfg, mesh, True, ("data",))
+           if hp.shard_cada_state else psp)
+    gwsp = _prepend_worker(gsp, waxis)
+    r = hp.rule
+    none = None
+    return DistTrainState(
+        step=P(),
+        params=psp,
+        h=msp, vhat=msp,
+        nabla=gsp if r.kind != "always" else none,
+        stale_grads=gwsp if r.kind != "always" else none,
+        snapshot=psp if r.kind == "cada1" else none,
+        stale_delta=gwsp if r.kind == "cada1" else none,
+        worker_params=wsp if r.kind == "cada2" else none,
+        staleness=P(None) if r.kind != "always" else none,
+        diff_hist=P(None) if r.kind != "always" else none,
+    )
+
+
+def train_batch_specs(mesh) -> dict:
+    """Worker-split batch: leaves are (M, b_m, ...); M shards over the
+    worker axis, b_m over 'data' on the multi-pod mesh (where the worker is
+    a whole pod). M-RoPE positions are (M, 3, b_m, S)."""
+    waxis = worker_axis_name(mesh)
+    inner = DATA if waxis == POD else None
+
+    def spec_for(key, ndim):
+        if key == "positions":
+            return P(waxis, None, inner, *(None,) * (ndim - 3))
+        return P(waxis, inner, *(None,) * (ndim - 2))
+
+    return spec_for
+
+
+def worker_split(batch: dict, m: int) -> dict:
+    """Global batch -> (M, b_m, ...) per-worker leading axis (positions:
+    (3, B, S) -> (M, 3, b_m, S))."""
+    out = {}
+    for key, leaf in batch.items():
+        if key == "positions":
+            three, b = leaf.shape[0], leaf.shape[1]
+            rest = leaf.shape[2:]
+            out[key] = leaf.reshape((three, m, b // m) + rest).swapaxes(0, 1)
+        else:
+            b = leaf.shape[0]
+            out[key] = leaf.reshape((m, b // m) + leaf.shape[1:])
+    return out
+
+
+def worker_split_abstract(batch: dict, m: int) -> dict:
+    """ShapeDtypeStruct version of ``worker_split`` (dry-run path)."""
+    out = {}
+    for key, leaf in batch.items():
+        if key == "positions":
+            three, b = leaf.shape[0], leaf.shape[1]
+            shp = (m, three, b // m) + leaf.shape[2:]
+        else:
+            b = leaf.shape[0]
+            shp = (m, b // m) + leaf.shape[1:]
+        out[key] = jax.ShapeDtypeStruct(shp, leaf.dtype)
+    return out
+
+
+# ------------------------------------------------------------------- state
+
+def _per_worker_sq_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    tot = 0.0
+    for leaf in leaves:
+        axes = tuple(range(1, leaf.ndim))
+        tot = tot + jnp.sum(jnp.square(leaf.astype(jnp.float32)), axis=axes)
+    return tot
+
+
+def _bcast_workers(tree, m):
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), tree)
+
+
+def _select_rows(mask, new, old):
+    def leaf(n, o):
+        mm = mask.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(mm, n.astype(o.dtype), o)
+    return jax.tree.map(leaf, new, old)
+
+
+def init_train_state(cfg: ModelConfig, hp: TrainHParams, m: int, rng
+                     ) -> DistTrainState:
+    params = init_params(cfg, rng)
+    r = hp.rule
+    cdt = hp.cada_jnp_dtype
+    zeros_f32 = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, hp.moments_jnp_dtype), params)
+    zeros_c = jax.tree.map(lambda p: jnp.zeros(p.shape, cdt), params)
+    wzeros = _bcast_workers(zeros_c, m) if r.kind != "always" else None
+    return DistTrainState(
+        step=jnp.zeros([], jnp.int32),
+        params=params,
+        h=zeros_f32, vhat=zeros_f32,
+        nabla=zeros_c if r.kind != "always" else None,
+        stale_grads=wzeros,
+        snapshot=params if r.kind == "cada1" else None,
+        stale_delta=(_bcast_workers(zeros_c, m)
+                     if r.kind == "cada1" else None),
+        worker_params=(_bcast_workers(params, m)
+                       if r.kind == "cada2" else None),
+        staleness=(jnp.full((m,), r.max_delay, jnp.int32)
+                   if r.kind != "always" else None),
+        diff_hist=(jnp.zeros((r.d_max,), jnp.float32)
+                   if r.kind != "always" else None),
+    )
+
+
+def abstract_train_state(cfg: ModelConfig, hp: TrainHParams, m: int):
+    return jax.eval_shape(
+        partial(init_train_state, cfg, hp, m), jax.random.PRNGKey(0))
+
+
+# -------------------------------------------------------------------- step
+
+def _amsgrad_apply(params, h, vhat, grad, hp: TrainHParams):
+    """The paper's (2a)-(2c) in sharded jnp (XLA fuses the stream); returns
+    (params', h', vhat', ||Δθ||²). Math in fp32; storage dtype follows the
+    incoming state (hp.moments_dtype)."""
+    h_new = jax.tree.map(
+        lambda m, g: (hp.b1 * m.astype(jnp.float32)
+                      + (1 - hp.b1) * g.astype(jnp.float32)).astype(m.dtype),
+        h, grad)
+    vhat_new = jax.tree.map(
+        lambda s, g: jnp.maximum(
+            hp.b2 * s.astype(jnp.float32)
+            + (1 - hp.b2) * jnp.square(g.astype(jnp.float32)),
+            s.astype(jnp.float32)).astype(s.dtype),
+        vhat, grad)
+    upd = jax.tree.map(
+        lambda m, s: (-hp.lr * m.astype(jnp.float32)
+                      / jnp.sqrt(hp.eps + s.astype(jnp.float32))),
+        h_new, vhat_new)
+    new_params = jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, upd)
+    dsq = sum(jnp.sum(jnp.square(u)) for u in jax.tree.leaves(upd))
+    return new_params, h_new, vhat_new, dsq
+
+
+def make_pod_vgrads(cfg: ModelConfig, hp: TrainHParams, mesh):
+    """Per-worker gradients as a PARTIAL-AUTO shard_map: manual over the
+    pod axis, auto (GSPMD) over data/model.
+
+    A plain `vmap` over the worker axis lets the partitioner replicate the
+    per-pod gradient computation across pods (measured: 2-4× total-flop
+    inflation on the 2×16×16 mesh — §Perf). The manual pod axis makes the
+    locality structural: each pod can only ever compute its own worker's
+    gradient.
+    """
+    psp = param_pspecs(cfg, mesh, hp.fsdp, hp.fsdp_axes)
+
+    def manual_only(spec):
+        dims = []
+        for d in spec:
+            if d == POD:
+                dims.append(POD)
+            elif isinstance(d, tuple) and POD in d:
+                dims.append(POD)
+            else:
+                dims.append(None)
+        return P(*dims)
+
+    params_in = jax.tree.map(manual_only, psp,
+                             is_leaf=lambda x: isinstance(x, P))
+    wparams_in = jax.tree.map(lambda s: P(POD, *s), params_in,
+                              is_leaf=lambda x: isinstance(x, P))
+
+    def _shardmapped(f, in_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=(P(POD), P(POD)),
+                             axis_names={POD}, check_vma=False)
+
+    def make(worker_grad):
+        def body_bcast(params, batch):
+            wb = jax.tree.map(lambda x: x[0], batch)
+            loss, g = worker_grad(params, wb)
+            return (jnp.asarray(loss)[None],
+                    jax.tree.map(lambda x: x[None], g))
+
+        def body_per(wparams, batch):
+            wp = jax.tree.map(lambda x: x[0], wparams)
+            wb = jax.tree.map(lambda x: x[0], batch)
+            loss, g = worker_grad(wp, wb)
+            return (jnp.asarray(loss)[None],
+                    jax.tree.map(lambda x: x[None], g))
+
+        vgrad = _shardmapped(body_bcast, (params_in, P(POD)))
+        vgrad_per = _shardmapped(body_per, (wparams_in, P(POD)))
+        return vgrad, vgrad_per
+
+    return make
+
+
+def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
+                    wconstrain=None, vgrad_factory=None,
+                    micro_constrain=None):
+    """Pure (state, batch) -> (state, metrics) hierarchical-CADA step.
+
+    ``batch`` leaves carry an (M,)-leading worker axis. Shard with
+    ``train_state_specs`` / ``train_batch_specs`` and wrap in jax.jit.
+    ``wconstrain`` (optional) pins per-worker gradient trees via
+    with_sharding_constraint; ``vgrad_factory`` (optional, from
+    ``make_pod_vgrads``) replaces the worker vmap with a pod-manual
+    shard_map; ``micro_constrain`` (optional) re-pins the data-axis
+    sharding after the microbatch reshape — without it GSPMD partially
+    replicates the per-pod batch (measured 4× flop inflation — §Perf).
+    """
+    r = hp.rule
+    cdt = hp.cada_jnp_dtype
+    if wconstrain is None:
+        wconstrain = lambda t: t  # noqa: E731
+    if micro_constrain is None:
+        micro_constrain = lambda mb: mb  # noqa: E731
+
+    def loss_fn(params, wbatch):
+        return lm_loss(cfg, params, wbatch)[0]
+
+    def worker_grad(params, wbatch):
+        """One worker's mean gradient, with microbatch accumulation."""
+        bm = jax.tree.leaves(wbatch)[0].shape[0]
+        nm = min(hp.microbatches, bm)
+        while bm % nm:  # largest feasible count <= requested (static)
+            nm -= 1
+        if nm == 1:
+            return jax.value_and_grad(loss_fn)(params, wbatch)
+
+        def split(leaf, batch_axis=0):
+            b = leaf.shape[batch_axis]
+            return leaf.reshape(leaf.shape[:batch_axis] + (nm, b // nm)
+                                + leaf.shape[batch_axis + 1:])
+
+        mb = micro_constrain(
+            {k: (split(v, 1).swapaxes(0, 1) if k == "positions"
+                 else split(v)) for k, v in wbatch.items()})
+
+        def acc(carry, micro):
+            loss_a, g_a = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, micro)
+            return (loss_a + loss,
+                    jax.tree.map(jnp.add, g_a, g)), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_s, g_s), _ = jax.lax.scan(acc, (0.0, zeros), mb)
+        return loss_s / nm, jax.tree.map(lambda g: g / nm, g_s)
+
+    if vgrad_factory is not None:
+        vgrad, vgrad_per = vgrad_factory(worker_grad)
+    else:
+        vgrad = jax.vmap(worker_grad, in_axes=(None, 0))
+        vgrad_per = jax.vmap(worker_grad, in_axes=(0, 0))
+
+    # ---------------- distributed Adam/AMSGrad baseline (rule: always)
+    def step_always(state: DistTrainState, batch):
+        losses, fresh = vgrad(state.params, batch)
+        grad = jax.tree.map(lambda g: jnp.mean(g, axis=0), fresh)
+        params, h, vhat, dsq = _amsgrad_apply(
+            state.params, state.h, state.vhat, grad, hp)
+        new_state = state._replace(step=state.step + 1, params=params,
+                                   h=h, vhat=vhat)
+        return new_state, {"loss": jnp.mean(losses),
+                           "uploads": jnp.asarray(m, jnp.int32),
+                           "skip_rate": jnp.zeros([], jnp.float32),
+                           "dtheta_sq": dsq}
+
+    if r.kind == "always":
+        return step_always
+
+    # ---------------- CADA1 / CADA2 / stochastic-LAG
+    def step(state: DistTrainState, batch):
+        k = state.step
+        snapshot = state.snapshot
+        if r.kind == "cada1":
+            refresh = (k % r.max_delay) == 0
+            snapshot = jax.tree.map(
+                lambda s, p: jnp.where(refresh, p, s), snapshot,
+                state.params)
+
+        losses, fresh = vgrad(state.params, batch)
+        fresh = wconstrain(fresh)
+
+        delta_fresh = None
+        if r.kind == "cada1":
+            _, snap_grads = vgrad(snapshot, batch)
+            snap_grads = wconstrain(snap_grads)
+            delta_fresh = jax.tree.map(jnp.subtract, fresh, snap_grads)
+            lhs = _per_worker_sq_norm(jax.tree.map(
+                lambda a, b: a - b.astype(jnp.float32),
+                delta_fresh, state.stale_delta))
+        elif r.kind == "cada2":
+            _, stale_now = vgrad_per(state.worker_params, batch)
+            stale_now = wconstrain(stale_now)
+            lhs = _per_worker_sq_norm(
+                jax.tree.map(jnp.subtract, fresh, stale_now))
+        else:  # lag
+            lhs = _per_worker_sq_norm(jax.tree.map(
+                lambda a, b: a - b.astype(jnp.float32),
+                fresh, state.stale_grads))
+
+        rhs = (r.c / r.d_max) * jnp.sum(state.diff_hist)
+        upload = (lhs > rhs) | (state.staleness >= r.max_delay)
+
+        # eq. (3): the gated cross-worker all-reduce. On the multi-pod mesh
+        # this mean over the M axis IS the DCN collective CADA gates. With
+        # cada_dtype=bfloat16 the innovation is cast BEFORE the mean, so
+        # the cross-pod wire format is bf16 (LAQ-adjacent, beyond-paper —
+        # halves DCN bytes; noted in EXPERIMENTS §Perf).
+        def refine(nab, f, s):
+            mask = upload.reshape((-1,) + (1,) * (f.ndim - 1))
+            d = jnp.where(mask, f - s.astype(jnp.float32), 0.0)
+            d = d.astype(cdt)
+            return (nab.astype(jnp.float32)
+                    + jnp.mean(d, axis=0).astype(jnp.float32)
+                    ).astype(nab.dtype)
+
+        nabla = jax.tree.map(refine, state.nabla, fresh, state.stale_grads)
+        stale_grads = _select_rows(upload, fresh, state.stale_grads)
+        staleness = jnp.where(upload, 1, state.staleness + 1)
+        stale_delta = state.stale_delta
+        if r.kind == "cada1":
+            stale_delta = _select_rows(upload, delta_fresh,
+                                       state.stale_delta)
+        worker_params = state.worker_params
+        if r.kind == "cada2":
+            worker_params = _select_rows(
+                upload, _bcast_workers(state.params, m),
+                state.worker_params)
+
+        params, h, vhat, dsq = _amsgrad_apply(
+            state.params, state.h, state.vhat,
+            jax.tree.map(lambda x: x.astype(jnp.float32), nabla), hp)
+        diff_hist = jax.lax.dynamic_update_index_in_dim(
+            state.diff_hist, dsq.astype(jnp.float32), k % r.d_max, axis=0)
+
+        uploads = jnp.sum(upload.astype(jnp.int32))
+        new_state = DistTrainState(
+            step=k + 1, params=params, h=h, vhat=vhat, nabla=nabla,
+            stale_grads=stale_grads, snapshot=snapshot,
+            stale_delta=stale_delta, worker_params=worker_params,
+            staleness=staleness, diff_hist=diff_hist)
+        metrics = {
+            "loss": jnp.mean(losses),
+            "uploads": uploads,
+            "skip_rate": 1.0 - uploads.astype(jnp.float32) / m,
+            "dtheta_sq": dsq,
+            "rhs": rhs,
+            "max_staleness": jnp.max(staleness),
+        }
+        return new_state, metrics
+
+    return step
+
+
+def jit_train_step(cfg: ModelConfig, mesh, hp: TrainHParams):
+    """jit the step with explicit in/out shardings for ``mesh``.
+
+    Returns (jitted_step, state_specs, m). Metrics are replicated.
+    """
+    waxis = worker_axis_name(mesh)
+    m = mesh.shape[waxis]
+    sspecs = train_state_specs(cfg, mesh, hp)
+
+    # NOTE: constraining the vmapped gradient trees directly
+    # (with_sharding_constraint to the stale_grads specs) was measured to
+    # be a no-op for locality AND trips an XLA SPMD-partitioner CHECK when
+    # combined with data-sharded CADA state — micro_constrain below is the
+    # effective (and stable) mechanism. The pod-manual shard_map is opt-in:
+    # it crashes the XLA partitioner when combined with FSDP param specs
+    # (spmd_partitioner_util.cc:504 CHECK), so it is enabled only for
+    # non-FSDP configs. Env switches for §Perf ablations.
+    import os as _os
+    use_podmap = (waxis == POD
+                  and not _os.environ.get("REPRO_NO_PODMAP")
+                  and not (hp.fsdp
+                           or (hp.fsdp is None and wants_fsdp(cfg, mesh))))
+    vgrad_factory = make_pod_vgrads(cfg, hp, mesh) if use_podmap else None
+
+    def micro_constrain(mb):
+        if waxis != POD or _os.environ.get("REPRO_NO_MICROCONSTRAIN"):
+            return mb  # single-pod: the worker IS the data group
+
+        def spec_for(key, ndim):
+            if key == "positions":
+                return P(None, None, DATA, *(None,) * (ndim - 3))
+            return P(None, DATA, *(None,) * (ndim - 2))
+
+        return {k: jax.lax.with_sharding_constraint(
+                    v, to_named(mesh, spec_for(k, v.ndim)))
+                for k, v in mb.items()}
+
+    step = make_train_step(
+        cfg, hp, m,
+        vgrad_factory=vgrad_factory, micro_constrain=micro_constrain)
+    sshard = jax.tree.map(lambda s: to_named(mesh, s), sspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    spec_for = train_batch_specs(mesh)
+
+    def batch_shardings(batch_sds):
+        return {k: to_named(mesh, spec_for(k, v.ndim))
+                for k, v in batch_sds.items()}
+
+    def make(batch_sds):
+        return jax.jit(step,
+                       in_shardings=(sshard, batch_shardings(batch_sds)),
+                       out_shardings=(sshard, None))
+
+    return make, sspecs, m

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  cada_update.py — fused AMSGrad/CADA optimizer step + ||Δθ||² (one HBM pass)
+  ssm_scan.py    — fused selective scan (Mamba1/2) with VMEM state carry
+  ops.py         — jit'd wrappers (interpret=True on CPU, Mosaic on TPU)
+  ref.py         — pure-jnp oracles used by tests/test_kernels.py
+"""
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    diff_sq_norm, diff_sq_norm_flat, fused_amsgrad_flat, fused_cada_update,
+    selective_scan,
+)

@@ -1,0 +1,107 @@
+"""Flash (blockwise) causal attention — Pallas TPU kernel.
+
+The TPU adaptation of the CUDA flash-attention idea: tile queries into
+(q_blk, hd) VMEM blocks, stream KV blocks through VMEM, and carry the
+running softmax state (m, l, acc) in fp32 scratch so the (S, S) score
+matrix never touches HBM.
+
+Grid = (B·H, S/q_blk, S/kv_blk) with the KV axis innermost (sequential on
+TPU): scratch persists across KV steps, is initialized at kv==0 and the
+normalized output is written at the LAST kv step. Causality is handled two
+ways: fully-masked KV blocks (block_start > q_end) are skipped with
+`pl.when` (no MXU work), diagonal blocks get an elementwise mask.
+
+MXU alignment: q_blk/kv_blk default 128 and hd is padded by the wrapper to
+a multiple of 128 if needed. GQA is handled by the wrapper mapping each Q
+head to its KV head (the kernel sees one head pair per grid row).
+
+Validated in interpret mode against models/attention.naive_attention.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLK = 128
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, q_blk: int, kv_blk: int, n_kv: int, scale: float,
+                  window: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * q_blk
+    k_start = ki * kv_blk
+    # causal: the block is live unless it starts after the last query
+    live = k_start <= q_start + q_blk - 1
+    if window:
+        live &= k_start + kv_blk - 1 >= q_start - window + 1
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale       # (q_blk, hd)
+        k = k_ref[0].astype(jnp.float32)               # (kv_blk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = q @ k.T                                    # (q_blk, kv_blk)
+        rel = (q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+               - (k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape,
+                                                     1)))
+        mask = rel >= 0
+        if window:
+            mask &= rel < window
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _emit():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, window: int = 0,
+                           q_blk: int = DEFAULT_BLK,
+                           kv_blk: int = DEFAULT_BLK,
+                           interpret: bool = False):
+    """q (G, S, hd), k/v (G, S, hd) — one KV head per G row (the ops.py
+    wrapper expands GQA). Returns (G, S, hd) in q.dtype."""
+    g, s, hd = q.shape
+    q_blk = min(q_blk, s)
+    kv_blk = min(kv_blk, s)
+    assert s % q_blk == 0 and s % kv_blk == 0, (s, q_blk, kv_blk)
+    n_kv = s // kv_blk
+    grid = (g, s // q_blk, n_kv)
+    scale = 1.0 / float(hd) ** 0.5
+
+    qs = pl.BlockSpec((1, q_blk, hd), lambda gi, qi, ki: (gi, qi, 0))
+    ks = pl.BlockSpec((1, kv_blk, hd), lambda gi, qi, ki: (gi, ki, 0))
+
+    return pl.pallas_call(
+        partial(_flash_kernel, q_blk=q_blk, kv_blk=kv_blk, n_kv=n_kv,
+                scale=scale, window=window),
+        grid=grid,
+        in_specs=[qs, ks, ks],
+        out_specs=qs,
+        out_shape=jax.ShapeDtypeStruct((g, s, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((q_blk, 1), jnp.float32),
+                        pltpu.VMEM((q_blk, 1), jnp.float32),
+                        pltpu.VMEM((q_blk, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,134 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute in ``interpret=True`` mode (the
+kernel body runs in Python-on-CPU for bit-faithful validation); on a real TPU
+``interpret=False`` compiles the same BlockSpec tiling to Mosaic. The flag
+defaults from the backend so user code never branches.
+
+``fused_cada_update`` is the pytree-level entry point used by the optimizer:
+it flattens the parameter pytree into one padded fp32 stream, runs the fused
+kernel, and scatters back — giving the one-HBM-pass optimizer step plus the
+CADA rule's ||Δθ||² for free.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cada_update as _cu
+from repro.kernels import ssm_scan as _ss
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------------------------ flat ops
+
+@partial(jax.jit, static_argnames=("b1", "b2", "eps", "interpret"))
+def fused_amsgrad_flat(theta, h, vhat, grad, lr, *, b1=0.9, b2=0.999,
+                       eps=1e-8, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _cu.fused_amsgrad_flat(theta, h, vhat, grad, lr, b1=b1, b2=b2,
+                                  eps=eps, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def diff_sq_norm_flat(a, b, *, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _cu.diff_sq_norm_flat(a, b, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk", "dblk", "interpret"))
+def selective_scan(dt, x, a, b, c, *, chunk=_ss.DEFAULT_CHUNK,
+                   dblk=_ss.DEFAULT_DBLK, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ss.selective_scan(dt, x, a, b, c, chunk=chunk, dblk=dblk,
+                              interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("window", "q_blk", "kv_blk",
+                                   "interpret"))
+def flash_attention(q, k, v, *, window=0, q_blk=None, kv_blk=None,
+                    interpret=None):
+    """GQA flash attention via the Pallas kernel.
+
+    q (B, S, Hq, hd); k/v (B, S, Hkv, hd). Each Q head is paired with its
+    KV head and flattened onto the kernel's G axis.
+    """
+    from repro.kernels import flash_attention as _fa
+    if interpret is None:
+        interpret = _default_interpret()
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    grp = hq // hkv
+    qg = q.transpose(0, 2, 1, 3).reshape(b * hq, s, hd)
+    kg = jnp.repeat(k.transpose(0, 2, 1, 3), grp, axis=1).reshape(
+        b * hq, s, hd)
+    vg = jnp.repeat(v.transpose(0, 2, 1, 3), grp, axis=1).reshape(
+        b * hq, s, hd)
+    kw = {}
+    if q_blk:
+        kw["q_blk"] = q_blk
+    if kv_blk:
+        kw["kv_blk"] = kv_blk
+    o = _fa.flash_attention_kernel(qg, kg, vg, window=window,
+                                   interpret=interpret, **kw)
+    return o.reshape(b, hq, s, hd).transpose(0, 2, 1, 3)
+
+
+# --------------------------------------------------------------- pytree ops
+
+def _flatten_padded(tree, dtype, block=_cu.BLOCK):
+    """Concat all leaves (as ``dtype``) into one flat buffer padded to a
+    whole number of kernel blocks. Returns (flat, unflatten_fn)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    sizes = [l.size for l in leaves]
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1).astype(dtype) for l in leaves])
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+
+    def unflatten(buf, out_dtypes=None):
+        out_dtypes = out_dtypes or dtypes
+        outs, off = [], 0
+        for sz, shp, dt in zip(sizes, shapes, out_dtypes):
+            outs.append(buf[off:off + sz].reshape(shp).astype(dt))
+            off += sz
+        return jax.tree.unflatten(treedef, outs)
+
+    return flat, unflatten
+
+
+def fused_cada_update(params, h, vhat, grads, lr, *, b1=0.9, b2=0.999,
+                      eps=1e-8, interpret=None):
+    """Pytree-level fused CADA/AMSGrad step.
+
+    Returns (params', h', vhat', ||θ'−θ||²). Padding lanes carry zero
+    gradients, so their moments stay exactly zero and the update there is 0 —
+    the norm is unaffected (eps > 0).
+    """
+    pf, unflat_p = _flatten_padded(params, jnp.float32)
+    hf, unflat_m = _flatten_padded(h, jnp.float32)
+    vhf, _ = _flatten_padded(vhat, jnp.float32)
+    gf, _ = _flatten_padded(grads, jnp.float32)
+    pt, ht, vht, sq = fused_amsgrad_flat(
+        pf, hf, vhf, gf, lr, b1=b1, b2=b2, eps=eps, interpret=interpret)
+    f32 = [jnp.float32] * len(jax.tree.leaves(h))
+    p_dtypes = [l.dtype for l in jax.tree.leaves(params)]
+    return (unflat_p(pt, p_dtypes), unflat_m(ht, f32),
+            unflat_m(vht, f32), sq)
+
+
+def diff_sq_norm(tree_a, tree_b, *, interpret=None):
+    """||a − b||² over two same-structure pytrees (CADA rule LHS)."""
+    af, _ = _flatten_padded(tree_a, jnp.float32)
+    bf, _ = _flatten_padded(tree_b, jnp.float32)
+    return diff_sq_norm_flat(af, bf, interpret=interpret)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the tests' source of truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def amsgrad_ref(theta, h, vhat, grad, lr, *, b1=0.9, b2=0.999, eps=1e-8):
+    """Reference fused AMSGrad/CADA update on flat fp32/bf16 buffers.
+
+    Matches optim/adam.py (paper eqs. 2a-2c: v from v̂, ε inside the sqrt;
+    v itself is a temporary — only {h, v̂} persist).
+    Returns (theta', h', vhat', ||update||²).
+    """
+    g = grad.astype(jnp.float32)
+    h_new = b1 * h + (1.0 - b1) * g
+    v_new = b2 * vhat + (1.0 - b2) * g * g
+    vhat_new = jnp.maximum(v_new, vhat)
+    upd = -lr * h_new / jnp.sqrt(eps + vhat_new)
+    theta_new = (theta.astype(jnp.float32) + upd).astype(theta.dtype)
+    return theta_new, h_new, vhat_new, jnp.sum(upd * upd)
+
+
+def diff_sq_norm_ref(a, b):
+    d = a.astype(jnp.float32) - b.astype(jnp.float32)
+    return jnp.sum(d * d)
+
+
+def selective_scan_ref(dt, x, a, b, c):
+    """Reference selective scan (plain lax.scan over time).
+
+    dt/x: (G, S, D); a: (G, D, N); b/c: (G, S, N).
+    Returns y (G, S, D) fp32 (no D·x skip, no gating) and h_final (G, D, N).
+    """
+    dt = dt.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    g, s, d = dt.shape
+    n = a.shape[-1]
+
+    def step(h, ins):
+        dt_t, x_t, b_t, c_t = ins          # (G,D) (G,D) (G,N) (G,N)
+        decay = jnp.exp(dt_t[..., None] * a)
+        h = decay * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y_t = jnp.einsum("gdn,gn->gd", h, c_t)
+        return h, y_t
+
+    h0 = jnp.zeros((g, d, n), jnp.float32)
+    swap = lambda t: jnp.swapaxes(t, 0, 1)   # noqa: E731 — time-major
+    h_final, y = jax.lax.scan(step, h0, (swap(dt), swap(x), swap(b), swap(c)))
+    return swap(y), h_final

@@ -1,0 +1,114 @@
+"""Selective-scan (Mamba1/Mamba2) — Pallas TPU kernel.
+
+The CUDA selective-scan fuses the SSM recurrence
+    h_t = exp(Δ_t ⊙ A) ⊙ h_{t-1} + (Δ_t x_t) ⊗ B_t ,   y_t = h_t · C_t
+into one kernel so the (S, D, N) state trajectory never touches HBM. The TPU
+adaptation keeps that insight but restructures for the VMEM hierarchy:
+
+  * grid = (G, D/blk, S/chunk) with the CHUNK axis innermost — the TPU grid
+    is executed sequentially, so a (blk, N) fp32 state tile lives in VMEM
+    scratch and is carried across chunk steps (the Pallas equivalent of the
+    CUDA per-threadblock register carry);
+  * within a chunk the recurrence is a `fori_loop` over time; decay
+    exp(Δ_t ⊙ A) and drive (Δ_t x_t) ⊗ B_t are computed IN the kernel from
+    the (chunk, blk) Δ/x tiles and the (blk, N) A tile — the big (S, D, N)
+    decay/drive tensors of the jnp reference are never materialized;
+  * y_t = h_t · C_t is an N-contraction on the VPU (N = 16/64 ≪ 128 lanes:
+    layout is state-minor; documented trade-off vs. transposing to put D on
+    the lane axis, which the D-tiling already achieves for the heavy operand).
+
+One kernel serves both variants via the group axis G:
+  mamba1: G = batch,        D = d_inner,  A = per-(D, N) matrix
+  mamba2: G = batch × heads, D = head_dim, A = a_h · 1 (broadcast per group)
+
+Validated in ``interpret=True`` mode against ``ref.py``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+DEFAULT_DBLK = 128
+
+
+def _scan_kernel(dt_ref, x_ref, a_ref, b_ref, c_ref, y_ref, hfin_ref, h_scr,
+                 *, chunk: int):
+    """One (group, D-block) tile; called sequentially over S/chunk chunks.
+
+    Block shapes (leading group dim squeezed by the BlockSpec):
+      dt/x: (chunk, blk)   a: (blk, N)   b/c: (chunk, N)
+      y: (chunk, blk)      hfin: (blk, N)   h_scr: (blk, N) fp32 scratch
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[...]                              # (blk, N) fp32
+
+    def step(t, h):
+        dt_t = dt_ref[t, :].astype(jnp.float32)            # (blk,)
+        x_t = x_ref[t, :].astype(jnp.float32)              # (blk,)
+        b_t = b_ref[t, :].astype(jnp.float32)              # (N,)
+        c_t = c_ref[t, :].astype(jnp.float32)              # (N,)
+        decay = jnp.exp(dt_t[:, None] * a)                 # (blk, N)
+        h = decay * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_ref[t, :] = jnp.sum(h * c_t[None, :], axis=1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+    hfin_ref[...] = h                            # last chunk's write wins
+
+
+def selective_scan(dt, x, a, b, c, *, chunk: int = DEFAULT_CHUNK,
+                   dblk: int = DEFAULT_DBLK, interpret: bool = False):
+    """Fused selective scan.
+
+    Args:
+      dt: (G, S, D) fp32 — softplus'd step sizes Δ.
+      x:  (G, S, D)      — post-conv/silu inputs.
+      a:  (G, D, N) fp32 — negative-definite state matrix (mamba2 passes the
+          per-head scalar broadcast to (D, N)).
+      b, c: (G, S, N)    — input/output projections B_t, C_t.
+    Returns:
+      y: (G, S, D) fp32 — WITHOUT the D·x skip / gating (done by the caller).
+      h_final: (G, D, N) fp32.
+    """
+    g, s, d = dt.shape
+    n = a.shape[-1]
+    chunk = min(chunk, s)
+    dblk = min(dblk, d)
+    assert s % chunk == 0, (s, chunk)
+    assert d % dblk == 0, (d, dblk)
+
+    grid = (g, d // dblk, s // chunk)
+    sd = pl.BlockSpec((1, chunk, dblk), lambda gi, di, ci: (gi, ci, di))
+    sn = pl.BlockSpec((1, chunk, n), lambda gi, di, ci: (gi, ci, 0))
+    sa = pl.BlockSpec((1, dblk, n), lambda gi, di, ci: (gi, di, 0))
+
+    def squeeze_lead(kernel):
+        # Block leading dims of size 1 arrive as real axes; index them away.
+        def wrapped(dt_r, x_r, a_r, b_r, c_r, y_r, hf_r, h_scr):
+            kernel(dt_r.at[0], x_r.at[0], a_r.at[0], b_r.at[0], c_r.at[0],
+                   y_r.at[0], hf_r.at[0], h_scr)
+        return wrapped
+
+    y, hfin = pl.pallas_call(
+        squeeze_lead(partial(_scan_kernel, chunk=chunk)),
+        grid=grid,
+        in_specs=[sd, sd, sa, sn, sn],
+        out_specs=(sd, sa),
+        out_shape=(
+            jax.ShapeDtypeStruct((g, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((g, d, n), jnp.float32),
+        ),
+        scratch_shapes=[pltpu.VMEM((dblk, n), jnp.float32)],
+        interpret=interpret,
+    )(dt, x, a, b, c)
+    return y, hfin

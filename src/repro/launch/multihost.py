@@ -1,0 +1,63 @@
+"""Multi-host bootstrap for the production meshes.
+
+A v5e-256 pod is 64 hosts × 4 chips; the 2×16×16 multi-pod mesh is 128
+hosts. Each host runs the same binary; this module wires
+``jax.distributed.initialize`` from the scheduler's environment (GKE/GCE
+metadata or explicit flags) and asserts the global device count matches
+the requested mesh before any jit is traced.
+
+Usage (every host):
+    from repro.launch.multihost import bootstrap
+    bootstrap()                       # no-op on single-process runs
+    mesh = make_production_mesh(...)  # now sees the global fleet
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+EXPECTED = {"16x16": 256, "2x16x16": 512}
+
+
+def bootstrap(coordinator: str | None = None,
+              num_processes: int | None = None,
+              process_id: int | None = None) -> bool:
+    """Initialize jax.distributed from args or environment.
+
+    Environment (set by launch/cluster.sh or the job scheduler):
+      REPRO_COORDINATOR   host:port of process 0
+      REPRO_NUM_PROCESSES total host count
+      REPRO_PROCESS_ID    this host's rank
+
+    Returns True if distributed init ran, False for single-process runs
+    (the CPU container, unit tests).
+    """
+    coordinator = coordinator or os.environ.get("REPRO_COORDINATOR")
+    if not coordinator:
+        return False
+    num_processes = int(num_processes
+                        or os.environ["REPRO_NUM_PROCESSES"])
+    process_id = int(process_id
+                     if process_id is not None
+                     else os.environ["REPRO_PROCESS_ID"])
+    jax.distributed.initialize(
+        coordinator_address=coordinator,
+        num_processes=num_processes,
+        process_id=process_id,
+    )
+    return True
+
+
+def assert_fleet(mesh_name: str) -> None:
+    """Fail fast (before tracing) if the fleet doesn't match the mesh."""
+    want = EXPECTED[mesh_name]
+    have = jax.device_count()
+    if have != want:
+        raise RuntimeError(
+            f"mesh {mesh_name} needs {want} chips; the fleet has {have}. "
+            "Check REPRO_NUM_PROCESSES / TPU topology flags.")
+
+
+def is_coordinator() -> bool:
+    return jax.process_index() == 0

@@ -1,0 +1,111 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Runs the hierarchical-CADA trainer on whatever devices exist (the host
+mesh), with checkpointing and metric logging. On a real TPU fleet the same
+code runs under the production meshes of launch/mesh.py (the dry-run proves
+every assigned architecture lowers against those).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.checkpoint import io as ckpt
+from repro.core.rules import CommRule
+from repro.data.synthetic import lm_tokens
+from repro.distributed.trainer import (TrainHParams, init_train_state,
+                                       jit_train_step, worker_split)
+from repro.launch.mesh import make_host_mesh
+
+
+def make_token_batches(cfg, *, global_batch, seq, steps, seed=0):
+    """Zipfian LM stream -> (steps, B, S+1) token batches."""
+    toks = lm_tokens(steps * global_batch * (seq + 1) + 1, cfg.vocab,
+                     seed=seed)
+    n = steps * global_batch * (seq + 1)
+    return toks[:n].reshape(steps, global_batch, seq + 1)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", required=True, choices=C.list_archs())
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced config (CPU-sized)")
+    p.add_argument("--rule", default="cada2",
+                   choices=["cada1", "cada2", "lag", "always"])
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--global-batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--c", type=float, default=1.0)
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--workers", type=int, default=0,
+                   help="0 = mesh data-axis size")
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-every", type=int, default=0)
+    p.add_argument("--log-every", type=int, default=10)
+    args = p.parse_args()
+
+    cfg = (C.get_smoke_config(args.arch) if args.smoke
+           else C.get_config(args.arch))
+    if not cfg.embed_input:
+        raise SystemExit(f"{args.arch} consumes modality embeddings; use "
+                         "examples/serve_decode.py or the dry-run for it")
+    mesh = make_host_mesh()
+    hp = TrainHParams(rule=CommRule(kind=args.rule, c=args.c, d_max=10,
+                                    max_delay=50),
+                      lr=args.lr, microbatches=args.microbatches)
+    make, _, m = jit_train_step(cfg, mesh, hp)
+    if args.workers:
+        m = args.workers  # host-mesh override (simulated workers)
+        from repro.distributed.trainer import make_train_step
+        step = jax.jit(make_train_step(cfg, hp, m))
+    else:
+        step = None
+
+    batches = make_token_batches(cfg, global_batch=args.global_batch,
+                                 seq=args.seq, steps=args.steps)
+    with jax.set_mesh(mesh):
+        state = init_train_state(cfg, hp, m, jax.random.PRNGKey(0))
+        if step is None:
+            sds = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                worker_split({"tokens": batches[0]}, m))
+            step = make(sds)
+
+        t0 = time.time()
+        history = []
+        for i in range(args.steps):
+            batch = worker_split({"tokens": batches[i]}, m)
+            state, mets = step(state, batch)
+            if i % args.log_every == 0 or i == args.steps - 1:
+                row = {k: float(v) for k, v in mets.items()}
+                row["step"] = i
+                row["wall_s"] = round(time.time() - t0, 1)
+                history.append(row)
+                print(f"step {i:5d} loss={row['loss']:.4f} "
+                      f"uploads={int(row['uploads'])}/{m} "
+                      f"skip={row['skip_rate']:.2f} "
+                      f"({row['wall_s']}s)", flush=True)
+            if (args.ckpt_every and args.ckpt_dir
+                    and i and i % args.ckpt_every == 0):
+                ckpt.save(os.path.join(args.ckpt_dir, f"step_{i}"),
+                          state.params, step=i)
+
+    if args.ckpt_dir:
+        ckpt.save(os.path.join(args.ckpt_dir, f"step_{args.steps}"),
+                  state.params, step=args.steps)
+        with open(os.path.join(args.ckpt_dir, "history.json"), "w") as f:
+            json.dump(history, f, indent=1)
+    final = np.mean([h["loss"] for h in history[-3:]])
+    print(f"done: final loss {final:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from repro.models.config import (
+    ModelConfig, active_param_count, param_count,
+)
+from repro.models.model import (
+    DecodeCache, abstract_params, decode_step, forward, init_cache,
+    init_params, lm_loss, prefill,
+)
+
+__all__ = [
+    "ModelConfig", "param_count", "active_param_count",
+    "DecodeCache", "abstract_params", "decode_step", "forward",
+    "init_cache", "init_params", "lm_loss", "prefill",
+]

@@ -1,0 +1,214 @@
+"""Attention: GQA with RoPE / partial-RoPE / M-RoPE, causal training path,
+KV-cache decode path with optional sliding-window ring buffer.
+
+Implementation notes (TPU-minded):
+  * logits/softmax in fp32, values in the model dtype;
+  * GQA is computed grouped (no KV head repetition in memory) via a
+    (B, G, Hq/G, S, hd) reshape so the MXU contraction stays dense;
+  * the sliding-window decode cache is a ring buffer of size W — position
+    validity is reconstructed from absolute positions stored alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+_NEG = -1e30
+
+
+# ----------------------------------------------------------------- RoPE
+
+def rope_angles(positions, dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., dim/2)."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions, dim: int, theta: float, sections):
+    """M-RoPE (Qwen2-VL): positions (3, B, S) for (t, h, w) axes; the head
+    dim halves are split into per-axis sections."""
+    half = dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang_per_axis = positions.astype(jnp.float32)[..., None] * freqs  # (3,B,S,half)
+    chunks = []
+    start = 0
+    for axis, sec in enumerate(sections):
+        chunks.append(ang_per_axis[axis, ..., start:start + sec])
+        start += sec
+    ang = jnp.concatenate(chunks, axis=-1)  # (B, S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, rotary_pct: float = 1.0):
+    """x (..., S, H, hd); cos/sin (..., S, rot/2) broadcast over heads."""
+    hd = x.shape[-1]
+    rot = int(hd * rotary_pct)
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    c = cos[..., None, : rot // 2]
+    s = sin[..., None, : rot // 2]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ------------------------------------------------------------- projections
+
+def qkv(params, cfg: ModelConfig, x):
+    """x (B,S,d) -> q (B,S,Hq,hd), k/v (B,S,Hkv,hd)."""
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+    k = (x @ params["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = (x @ params["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    return q, k, v
+
+
+def out_proj(params, x):
+    b, s = x.shape[:2]
+    return x.reshape(b, s, -1) @ params["wo"]
+
+
+# ------------------------------------------------------------ core attention
+
+def _grouped_scores(q, k):
+    """q (B,Sq,Hq,hd), k (B,Sk,Hkv,hd) -> scores (B,Hq,Sq,Sk) via GQA groups."""
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    return scores.reshape(b, hq, sq, k.shape[1]) / jnp.sqrt(hd).astype(
+        jnp.float32)
+
+
+def _grouped_values(probs, v):
+    """probs (B,Hq,Sq,Sk), v (B,Sk,Hkv,hd) -> (B,Sq,Hq,hd)."""
+    b, hq, sq, sk = probs.shape
+    hkv = v.shape[2]
+    g = hq // hkv
+    pg = probs.reshape(b, hkv, g, sq, sk)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", pg, v.astype(probs.dtype))
+    return out.reshape(b, sq, hq, v.shape[3])
+
+
+FLASH_THRESHOLD = 2048   # use blockwise attention at/above this seq length
+FLASH_Q_CHUNK = 1024
+FLASH_KV_CHUNK = 1024
+
+
+def naive_attention(q, k, v, positions_q=None, positions_k=None,
+                    window: int = 0, dtype=jnp.bfloat16):
+    """Reference O(S²)-memory attention (tests / short sequences)."""
+    sq, sk = q.shape[1], k.shape[1]
+    if positions_q is None:
+        positions_q = jnp.arange(sq)
+    if positions_k is None:
+        positions_k = jnp.arange(sk)
+    scores = _grouped_scores(q, k)
+    rel = positions_q[:, None] - positions_k[None, :]        # (Sq, Sk)
+    mask = rel >= 0
+    if window:
+        mask &= rel < window
+    scores = jnp.where(mask[None, None], scores, _NEG)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _grouped_values(probs, v).astype(dtype)
+
+
+def flash_attention(q, k, v, window: int = 0, dtype=jnp.bfloat16,
+                    q_chunk: int = FLASH_Q_CHUNK,
+                    kv_chunk: int = FLASH_KV_CHUNK):
+    """Blockwise (flash-style) causal attention — O(S·chunk) memory.
+
+    Outer Python loop over Sq/q_chunk query blocks (static, so each block's
+    KV extent is trimmed to the causal/window range: true FLOP savings, not
+    just masking); inner `lax.scan` over KV blocks carrying the running
+    (max, sum, acc) softmax state in fp32.
+
+    Self-attention only (Sq == Sk, standard positions). GQA is computed
+    grouped, matching `naive_attention` numerics to ~1e-3 (softmax order).
+    """
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    kv_chunk = min(kv_chunk, q_chunk)  # causal trim needs kv | q blocks
+    assert s % q_chunk == 0 and q_chunk % kv_chunk == 0, (s, q_chunk,
+                                                          kv_chunk)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qg = q.reshape(b, s, hkv, g, hd)
+
+    outs = []
+    for qi in range(s // q_chunk):
+        q_lo = qi * q_chunk
+        q_hi = q_lo + q_chunk
+        # Static causal/window KV extent for this query block.
+        kv_lo = 0 if not window else max(0, (q_lo - window) // kv_chunk
+                                         * kv_chunk)
+        kv_hi = q_hi  # causal: keys beyond the block's last query are dead
+        qb = qg[:, q_lo:q_hi].astype(jnp.float32)           # (B,qc,Hkv,G,hd)
+        pos_q = q_lo + jnp.arange(q_chunk)
+        nkv = (kv_hi - kv_lo) // kv_chunk
+        kb = k[:, kv_lo:kv_hi].reshape(b, nkv, kv_chunk, hkv, hd)
+        vb = v[:, kv_lo:kv_hi].reshape(b, nkv, kv_chunk, hkv, hd)
+
+        def kv_step(carry, xs, pos_q=pos_q, kv_lo=kv_lo):
+            m, l, acc = carry
+            kc, vc, ki = xs                                  # (B,kc,Hkv,hd)
+            pos_k = kv_lo + ki * kv_chunk + jnp.arange(kv_chunk)
+            sc = jnp.einsum("bqkgh,bskh->bkgqs", qb,
+                            kc.astype(jnp.float32)) * scale  # (B,Hkv,G,qc,kc)
+            rel = pos_q[:, None] - pos_k[None, :]
+            mask = rel >= 0
+            if window:
+                mask &= rel < window
+            sc = jnp.where(mask[None, None, None], sc, _NEG)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, vc.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(nkv)))
+        ob = acc / l[..., None]                              # (B,Hkv,G,qc,hd)
+        outs.append(ob.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, hq, hd))
+    return jnp.concatenate(outs, axis=1).astype(dtype)
+
+
+def causal_attention(q, k, v, positions_q=None, positions_k=None,
+                     window: int = 0, dtype=jnp.bfloat16):
+    """Causal (optionally sliding-window) attention for train/prefill.
+
+    Dispatches to the flash path for long self-attention (the memory-safe
+    production path) and the naive reference otherwise.
+    """
+    sq, sk = q.shape[1], k.shape[1]
+    flashable = (sq == sk and sq >= FLASH_THRESHOLD
+                 and sq % FLASH_Q_CHUNK == 0 and sk % FLASH_KV_CHUNK == 0
+                 and positions_q is None and positions_k is None)
+    if flashable:
+        return flash_attention(q, k, v, window=window, dtype=dtype)
+    return naive_attention(q, k, v, positions_q, positions_k, window, dtype)
+
+
+def decode_attention(q, k_cache, v_cache, valid, dtype=jnp.bfloat16):
+    """One-token attention over a (possibly ring-buffered) cache.
+
+    q (B,1,Hq,hd); k/v_cache (B,W,Hkv,hd); valid (B,W) bool.
+    """
+    scores = _grouped_scores(q, k_cache)                     # (B,Hq,1,W)
+    scores = jnp.where(valid[:, None, None, :], scores, _NEG)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _grouped_values(probs, v_cache).astype(dtype)

@@ -1,0 +1,43 @@
+"""Modality frontend STUBS (the single allowed carve-out).
+
+qwen2-vl's ViT and musicgen's EnCodec are not implemented; instead the
+frontends provide precomputed patch/frame embeddings of the right shape —
+random but deterministic for smoke tests, ShapeDtypeStructs for the dry-run.
+M-RoPE position ids for the VLM are synthesized as a (text, image-grid) plan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def vision_embeds(cfg: ModelConfig, rng, batch: int, seq: int):
+    """Stub ViT+projector output: (B, S, d) patch+text embedding stream."""
+    return jax.random.normal(rng, (batch, seq, cfg.d_model),
+                             jnp.float32).astype(cfg.jnp_dtype)
+
+
+def audio_embeds(cfg: ModelConfig, rng, batch: int, seq: int):
+    """Stub EnCodec frame embeddings (sum over codebooks): (B, S, d)."""
+    return jax.random.normal(rng, (batch, seq, cfg.d_model),
+                             jnp.float32).astype(cfg.jnp_dtype)
+
+
+def mrope_positions(batch: int, seq: int, image_grid: tuple = (16, 16)):
+    """(3, B, S) t/h/w positions: a text prefix followed by an image whose
+    patches advance h/w but share t (the Qwen2-VL dynamic-resolution plan)."""
+    gh, gw = image_grid
+    n_img = gh * gw
+    n_txt = max(seq - n_img, 0)
+    t_txt = jnp.arange(n_txt)
+    img_t = jnp.full((min(n_img, seq),), n_txt)
+    h_img = jnp.repeat(jnp.arange(gh), gw)[: min(n_img, seq)]
+    w_img = jnp.tile(jnp.arange(gw), gh)[: min(n_img, seq)]
+    t = jnp.concatenate([t_txt, img_t])[:seq]
+    h = jnp.concatenate([t_txt, h_img + n_txt])[:seq]
+    w = jnp.concatenate([t_txt, w_img + n_txt])[:seq]
+    pos = jnp.stack([t, h, w])                      # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq)).astype(
+        jnp.int32)

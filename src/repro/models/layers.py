@@ -1,0 +1,57 @@
+"""Shared layer primitives: RMSNorm, FFNs (plain and expert-stacked),
+causal depthwise conv (for Mamba)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+_GATE_ACT = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu}
+
+
+def ffn(params, cfg: ModelConfig, x):
+    """Dense FFN: gated (swiglu/geglu: w_gate,w_up,w_down) or plain gelu."""
+    act = _GATE_ACT.get(cfg.mlp_act)
+    if act is not None:
+        h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+def ffn_stacked(params, cfg: ModelConfig, x):
+    """Expert-stacked FFN: x (E, C, d) with weights (E, d, ff)/(E, ff, d)."""
+    act = _GATE_ACT.get(cfg.mlp_act)
+    up = jnp.einsum("ecd,edf->ecf", x, params["w_up"])
+    if act is not None:
+        h = act(jnp.einsum("ecd,edf->ecf", x, params["w_gate"])) * up
+    else:
+        h = jax.nn.gelu(up)
+    return jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv: x (B, S, C), w (K, C), b (C,)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(k):  # K is tiny (4); unrolled shifts beat a real conv op
+        out = out + pad[:, j:j + x.shape[1], :].astype(jnp.float32) * w[j]
+    return (out + b).astype(x.dtype)
+
+
+def conv1d_step(conv_state, x_t, w, b):
+    """One decode step. conv_state (B, K-1, C) holds the last K-1 inputs;
+    x_t (B, C). Returns (new_state, y_t)."""
+    k = w.shape[0]
+    full = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", full.astype(jnp.float32), w) + b
+    return full[:, 1:, :], y.astype(x_t.dtype)

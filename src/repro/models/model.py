@@ -1,0 +1,516 @@
+"""Model assembly: parameter init, scan-over-layers forward, LM loss,
+prefill, and single-token decode with KV/SSM caches.
+
+Layout conventions
+  * params["blocks"]: every per-layer tensor stacked with leading n_layers
+    (hybrid reshapes to (stages, per_stage) at scan time);
+  * one `lax.scan` over layers keeps the HLO small enough to compile
+    126-layer configs on this CPU container and is the production idiom;
+  * logits are produced in the model dtype; losses accumulate in fp32.
+
+Decode caches
+  * attention: roped K/V ring buffer (L, B, W, Hkv, hd) + shared slot->abs
+    position table; sliding-window and full caches use the same mechanism;
+  * mamba1/2: conv tail (L, B, K-1, di) + fp32 SSM state.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.config import ModelConfig
+from repro.models.layers import ffn, rmsnorm
+from repro.models.moe import moe_ffn
+from repro.models.ssm import (
+    mamba1_block, mamba1_decode, mamba2_block, mamba2_decode,
+)
+
+INIT_STD = 0.02
+
+
+# ================================================================== init
+
+def _dense(rng, shape, dtype, std=INIT_STD):
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+def _attn_params(cfg: ModelConfig, rng, dtype):
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": _dense(k1, (d, hq * hd), dtype),
+        "wk": _dense(k2, (d, hkv * hd), dtype),
+        "wv": _dense(k3, (d, hkv * hd), dtype),
+        "wo": _dense(k4, (hq * hd, d), dtype),
+    }
+
+
+def _ffn_params(cfg: ModelConfig, rng, dtype, stacked_experts: int = 0):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d, ff = cfg.d_model, cfg.d_ff
+    lead = (stacked_experts,) if stacked_experts else ()
+    p = {
+        "w_up": _dense(k1, lead + (d, ff), dtype),
+        "w_down": _dense(k2, lead + (ff, d), dtype),
+    }
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        p["w_gate"] = _dense(k3, lead + (d, ff), dtype)
+    return p
+
+
+def _block_params(cfg: ModelConfig, rng, dtype):
+    d = cfg.d_model
+    if cfg.block in ("dense", "moe"):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        p = {
+            "ln1": jnp.ones((d,), dtype),
+            "ln2": jnp.ones((d,), dtype),
+            "attn": _attn_params(cfg, k1, dtype),
+        }
+        if cfg.block == "moe":
+            p["mlp"] = _ffn_params(cfg, k2, dtype,
+                                   stacked_experts=cfg.n_experts)
+            p["mlp"]["router"] = _dense(k3, (d, cfg.n_experts), jnp.float32)
+        else:
+            p["mlp"] = _ffn_params(cfg, k2, dtype)
+        return p
+    if cfg.block == "mamba1":
+        di, n, r = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+        ks = jax.random.split(rng, 8)
+        return {
+            "ln": jnp.ones((d,), dtype),
+            "in_x": _dense(ks[0], (d, di), dtype),
+            "in_z": _dense(ks[1], (d, di), dtype),
+            "conv_w": _dense(ks[2], (cfg.ssm_conv, di), jnp.float32, 0.1),
+            "conv_b": jnp.zeros((di,), jnp.float32),
+            "xp_dt": _dense(ks[3], (di, r), dtype),
+            "xp_b": _dense(ks[4], (di, n), dtype),
+            "xp_c": _dense(ks[5], (di, n), dtype),
+            "dt_proj": _dense(ks[6], (r, di), jnp.float32, 1.0 / r ** 0.5),
+            "dt_bias": jnp.full((di,), -4.0, jnp.float32),
+            "A_log": jnp.log(jnp.broadcast_to(
+                jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+            "D": jnp.ones((di,), jnp.float32),
+            "out_proj": _dense(ks[7], (di, d), dtype),
+        }
+    if cfg.block == "mamba2":
+        di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        ks = jax.random.split(rng, 7)
+        return {
+            "ln": jnp.ones((d,), dtype),
+            "in_z": _dense(ks[0], (d, di), dtype),
+            "in_x": _dense(ks[1], (d, di), dtype),
+            "in_b": _dense(ks[2], (d, n), dtype),
+            "in_c": _dense(ks[3], (d, n), dtype),
+            "in_dt": _dense(ks[4], (d, h), dtype),
+            "conv_w": _dense(ks[5], (cfg.ssm_conv, di), jnp.float32, 0.1),
+            "conv_b": jnp.zeros((di,), jnp.float32),
+            "dt_bias": jnp.full((h,), -4.0, jnp.float32),
+            "A_log": jnp.zeros((h,), jnp.float32),
+            "D": jnp.ones((h,), jnp.float32),
+            "out_norm": jnp.ones((di,), dtype),
+            "out_proj": _dense(ks[6], (di, d), dtype),
+        }
+    raise ValueError(cfg.block)
+
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    cfg.validate()
+    dtype = cfg.jnp_dtype
+    k_emb, k_blocks, k_head, k_shared = jax.random.split(rng, 4)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda k: _block_params(cfg, k, dtype))(block_keys)
+    params = {
+        "embed": _dense(k_emb, (cfg.vocab, cfg.d_model), dtype),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense(k_head, (cfg.d_model, cfg.vocab), dtype)
+    if cfg.attn_every:  # zamba2-style single shared attention+MLP block
+        ka, kf = jax.random.split(k_shared)
+        params["shared"] = {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "attn": _attn_params(cfg, ka, dtype),
+            "mlp": _ffn_params(cfg, kf, dtype),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig, rng=None):
+    """ShapeDtypeStructs of init_params without allocating (dry-run path)."""
+    return jax.eval_shape(partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+# ================================================================ forward
+
+def _attn_mlp_block(params, cfg: ModelConfig, x, cos, sin, window):
+    h = rmsnorm(x, params["ln1"], cfg.norm_eps)
+    q, k, v = attn.qkv(params["attn"], cfg, h)
+    q = attn.apply_rope(q, cos, sin, cfg.rotary_pct)
+    k = attn.apply_rope(k, cos, sin, cfg.rotary_pct)
+    a = attn.causal_attention(q, k, v, window=window, dtype=x.dtype)
+    x = x + attn.out_proj(params["attn"], a)
+    h2 = rmsnorm(x, params["ln2"], cfg.norm_eps)
+    if cfg.block == "moe" and "router" in params["mlp"]:
+        y, aux = moe_ffn(params["mlp"], cfg, h2)
+    else:
+        y, aux = ffn(params["mlp"], cfg, h2), jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def _rope_tables(cfg: ModelConfig, positions, batch, seq):
+    if not cfg.has_attention:
+        return None, None
+    if cfg.mrope:
+        if positions is None:
+            base = jnp.arange(seq)[None].repeat(batch, 0)
+            positions = jnp.stack([base] * 3)                  # (3,B,S)
+        return attn.mrope_angles(positions, cfg.hd, cfg.rope_theta,
+                                 cfg.mrope_sections_)
+    if positions is None:
+        positions = jnp.arange(seq)[None]                      # (1,S) bcast
+    return attn.rope_angles(positions, int(cfg.hd * cfg.rotary_pct),
+                            cfg.rope_theta)
+
+
+def hidden_states(cfg: ModelConfig, params, tokens=None, embeds=None,
+                  positions=None):
+    """Token/embedding input -> final hidden states (B, S, d), aux loss."""
+    if embeds is None:
+        x = params["embed"][tokens]
+    else:
+        x = embeds.astype(cfg.jnp_dtype)
+    b, s, _ = x.shape
+    cos, sin = _rope_tables(cfg, positions, b, s)
+    window = cfg.sliding_window
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.block in ("dense", "moe"):
+        def body(carry, lp):
+            h, aux = carry
+            h, a = _attn_mlp_block(lp, cfg, h, cos, sin, window)
+            return (h, aux + a), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["blocks"])
+    elif cfg.attn_every:  # hybrid: stages of SSM layers + shared attention
+        stages = cfg.n_layers // cfg.attn_every
+        staged = jax.tree.map(
+            lambda p: p.reshape((stages, cfg.attn_every) + p.shape[1:]),
+            params["blocks"])
+        ssm_fn = mamba2_block if cfg.block == "mamba2" else mamba1_block
+
+        def stage(carry, sp):
+            h, aux = carry
+            def inner(hh, lp):
+                return ssm_fn(lp, cfg, hh), None
+            if cfg.remat:
+                inner = jax.checkpoint(inner)
+            h, _ = jax.lax.scan(inner, h, sp)
+            h, a = _attn_mlp_block(params["shared"], cfg, h, cos, sin,
+                                   window)
+            return (h, aux + a), None
+        (x, aux), _ = jax.lax.scan(stage, (x, aux0), staged)
+    else:  # pure SSM
+        ssm_fn = mamba2_block if cfg.block == "mamba2" else mamba1_block
+
+        def body(h, lp):
+            return ssm_fn(lp, cfg, h), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        aux = aux0
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def logits_fn(cfg: ModelConfig, params, hidden):
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    return hidden @ head
+
+
+def forward(cfg: ModelConfig, params, tokens=None, embeds=None,
+            positions=None):
+    hidden, aux = hidden_states(cfg, params, tokens, embeds, positions)
+    return logits_fn(cfg, params, hidden), aux
+
+
+# =================================================================== loss
+
+def lm_loss(cfg: ModelConfig, params, batch) -> tuple[jnp.ndarray, dict]:
+    """batch: {"tokens": (B, S+1)} or {"embeds": (B,S,d), "labels": (B,S)}
+    (+ optional "positions"). Returns (scalar loss, metrics)."""
+    if "tokens" in batch:
+        inputs, labels = batch["tokens"][:, :-1], batch["tokens"][:, 1:]
+        logits, aux = forward(cfg, params, tokens=inputs,
+                              positions=batch.get("positions"))
+    else:
+        logits, aux = forward(cfg, params, embeds=batch["embeds"],
+                              positions=batch.get("positions"))
+        labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss + aux, {"nll": loss, "aux": aux}
+
+
+# ================================================================= decode
+
+class DecodeCache(NamedTuple):
+    """Pytree cache for lock-step batched decode at absolute position
+    ``index``. Attention K/V are stored ALREADY roped; ``slot_pos`` maps ring
+    slots to absolute positions (-1 = empty)."""
+    index: jnp.ndarray          # scalar int32: next absolute position
+    slot_pos: jnp.ndarray       # (W,) int32
+    k: Any = None               # (L_attn, B, W, Hkv, hd)
+    v: Any = None
+    conv: Any = None            # (L_ssm, B, K-1, di)
+    ssm: Any = None             # (L_ssm, B, ...) fp32
+
+
+def cache_width(cfg: ModelConfig, max_seq: int) -> int:
+    if not cfg.has_attention:
+        return 0
+    return min(cfg.sliding_window or max_seq, max_seq)
+
+
+def _n_attn_layers(cfg: ModelConfig) -> int:
+    if cfg.block in ("dense", "moe"):
+        return cfg.n_layers
+    if cfg.attn_every:
+        return cfg.n_layers // cfg.attn_every
+    return 0
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int
+               ) -> DecodeCache:
+    dtype = cfg.jnp_dtype
+    w = cache_width(cfg, max_seq)
+    la = _n_attn_layers(cfg)
+    k = v = conv = ssm = None
+    if la:
+        shape = (la, batch_size, w, cfg.n_kv_heads, cfg.hd)
+        k, v = jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+    if cfg.block in ("mamba1", "mamba2"):
+        conv = jnp.zeros((cfg.n_layers, batch_size, cfg.ssm_conv - 1,
+                          cfg.d_inner), dtype)
+        if cfg.block == "mamba1":
+            sshape = (cfg.n_layers, batch_size, cfg.d_inner, cfg.ssm_state)
+        else:
+            sshape = (cfg.n_layers, batch_size, cfg.ssm_heads,
+                      cfg.mamba_headdim, cfg.ssm_state)
+        ssm = jnp.zeros(sshape, jnp.float32)
+    return DecodeCache(
+        index=jnp.zeros((), jnp.int32),
+        slot_pos=jnp.full((max(w, 1),), -1, jnp.int32),
+        k=k, v=v, conv=conv, ssm=ssm)
+
+
+def _attn_decode_layer(lp, cfg: ModelConfig, x, k_c, v_c, slot, slot_pos,
+                       cos, sin):
+    """x (B,1,d); k_c/v_c (B,W,Hkv,hd). Returns (y, k_c', v_c')."""
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = attn.qkv(lp["attn"], cfg, h)
+    q = attn.apply_rope(q, cos, sin, cfg.rotary_pct)
+    k = attn.apply_rope(k, cos, sin, cfg.rotary_pct)
+    k_c = jax.lax.dynamic_update_slice_in_dim(k_c, k.astype(k_c.dtype), slot,
+                                              axis=1)
+    v_c = jax.lax.dynamic_update_slice_in_dim(v_c, v.astype(v_c.dtype), slot,
+                                              axis=1)
+    valid = (slot_pos >= 0)[None]                              # (1, W)
+    a = attn.decode_attention(q, k_c, v_c, valid, dtype=x.dtype)
+    x = x + attn.out_proj(lp["attn"], a)
+    h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.block == "moe" and "router" in lp["mlp"]:
+        y, _ = moe_ffn(lp["mlp"], cfg, h2)
+    else:
+        y = ffn(lp["mlp"], cfg, h2)
+    return x + y, k_c, v_c
+
+
+def decode_step(cfg: ModelConfig, params, cache: DecodeCache, tokens=None,
+                embeds=None):
+    """One decode step for the whole batch. tokens (B,) or embeds (B,1,d).
+    Returns (logits (B, V), new cache)."""
+    if embeds is None:
+        x = params["embed"][tokens][:, None, :]               # (B,1,d)
+    else:
+        x = embeds.astype(cfg.jnp_dtype)
+    b = x.shape[0]
+    idx = cache.index
+    w = cache.slot_pos.shape[0]
+    slot = (idx % w).astype(jnp.int32)
+    pos = jnp.full((1, 1), idx, jnp.int32)                     # (B=1bc, 1)
+    if cfg.mrope:
+        cos, sin = attn.mrope_angles(
+            jnp.broadcast_to(pos[None], (3, 1, 1)), cfg.hd, cfg.rope_theta,
+            cfg.mrope_sections_)
+    elif cfg.has_attention:
+        cos, sin = attn.rope_angles(pos, int(cfg.hd * cfg.rotary_pct),
+                                    cfg.rope_theta)
+    slot_pos = cache.slot_pos.at[slot].set(idx) if w else cache.slot_pos
+
+    k_cache, v_cache, conv_c, ssm_c = cache.k, cache.v, cache.conv, cache.ssm
+    if cfg.block in ("dense", "moe"):
+        def body(h, xs):
+            lp, k_c, v_c = xs
+            h, k_c, v_c = _attn_decode_layer(
+                lp, cfg, h, k_c, v_c, slot, slot_pos, cos, sin)
+            return h, (k_c, v_c)
+        x, (k_cache, v_cache) = jax.lax.scan(
+            body, x, (params["blocks"], k_cache, v_cache))
+    elif cfg.attn_every:
+        stages = cfg.n_layers // cfg.attn_every
+        staged = jax.tree.map(
+            lambda p: p.reshape((stages, cfg.attn_every) + p.shape[1:]),
+            params["blocks"])
+        conv_s = conv_c.reshape((stages, cfg.attn_every) + conv_c.shape[1:])
+        ssm_s = ssm_c.reshape((stages, cfg.attn_every) + ssm_c.shape[1:])
+        dec = mamba2_decode if cfg.block == "mamba2" else mamba1_decode
+
+        def stage(h, xs):
+            sp, cv, st, k_c, v_c = xs
+            def inner(hh, ys):
+                lp, c1, s1 = ys
+                y, c1, s1 = dec(lp, cfg, hh[:, 0], c1, s1)
+                return y[:, None], (c1, s1)
+            h, (cv, st) = jax.lax.scan(inner, h, (sp, cv, st))
+            h, k_c, v_c = _attn_decode_layer(
+                params["shared"], cfg, h, k_c, v_c, slot, slot_pos, cos, sin)
+            return h, (cv, st, k_c, v_c)
+        x, (conv_s, ssm_s, k_cache, v_cache) = jax.lax.scan(
+            stage, x, (staged, conv_s, ssm_s, k_cache, v_cache))
+        conv_c = conv_s.reshape(conv_c.shape)
+        ssm_c = ssm_s.reshape(ssm_c.shape)
+    else:  # pure SSM
+        dec = mamba2_decode if cfg.block == "mamba2" else mamba1_decode
+
+        def body(h, xs):
+            lp, c1, s1 = xs
+            y, c1, s1 = dec(lp, cfg, h[:, 0], c1, s1)
+            return y[:, None], (c1, s1)
+        x, (conv_c, ssm_c) = jax.lax.scan(body, x, (params["blocks"],
+                                                    conv_c, ssm_c))
+
+    hidden = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(cfg, params, hidden)[:, 0]
+    new_cache = DecodeCache(index=idx + 1, slot_pos=slot_pos,
+                            k=k_cache, v=v_cache, conv=conv_c, ssm=ssm_c)
+    return logits, new_cache
+
+
+# ================================================================ prefill
+
+def prefill(cfg: ModelConfig, params, tokens=None, embeds=None,
+            positions=None, max_seq: int | None = None):
+    """Full-sequence forward that also builds the decode cache.
+
+    Returns (last-token logits (B, V), DecodeCache primed at index=S).
+    Attention K/V are recomputed roped into the cache (one extra pass over
+    the projections — negligible next to the S² attention itself).
+    """
+    if embeds is None:
+        x = params["embed"][tokens]
+    else:
+        x = embeds.astype(cfg.jnp_dtype)
+    b, s, _ = x.shape
+    max_seq = max_seq or s
+    cache = init_cache(cfg, b, max_seq)
+    w = cache.slot_pos.shape[0]
+    cos, sin = _rope_tables(cfg, positions, b, s)
+    window = cfg.sliding_window
+
+    def attn_block_cached(lp, h):
+        hn = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn.qkv(lp["attn"], cfg, hn)
+        q = attn.apply_rope(q, cos, sin, cfg.rotary_pct)
+        k = attn.apply_rope(k, cos, sin, cfg.rotary_pct)
+        a = attn.causal_attention(q, k, v, window=window, dtype=h.dtype)
+        h = h + attn.out_proj(lp["attn"], a)
+        h2 = rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        if cfg.block == "moe" and "router" in lp["mlp"]:
+            y, _ = moe_ffn(lp["mlp"], cfg, h2)
+        else:
+            y = ffn(lp["mlp"], cfg, h2)
+        return h + y, k, v
+
+    def to_ring(t):  # (B, S, Hkv, hd) -> last W entries in ring order
+        tail = t[:, -w:]
+        if s >= w:
+            roll = s % w
+            return jnp.roll(tail, roll, axis=1)
+        return jnp.pad(tail, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+
+    k_c = v_c = conv_c = ssm_c = None
+    n_l = cfg.n_layers
+    if cfg.block in ("dense", "moe"):
+        def body(h, lp):
+            h, k, v = attn_block_cached(lp, h)
+            return h, (to_ring(k), to_ring(v))
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, (k_c, v_c) = jax.lax.scan(body, x, params["blocks"])
+    elif cfg.attn_every:
+        stages = n_l // cfg.attn_every
+        staged = jax.tree.map(
+            lambda p: p.reshape((stages, cfg.attn_every) + p.shape[1:]),
+            params["blocks"])
+
+        def stage(h, sp):
+            def inner(hh, lp):
+                hh, cst, sst = _ssm_block_cached(lp, cfg, hh)
+                return hh, (cst, sst)
+            h, (cst, sst) = jax.lax.scan(inner, h, sp)
+            h, k, v = attn_block_cached(params["shared"], h)
+            return h, (cst, sst, to_ring(k), to_ring(v))
+        if cfg.remat:
+            stage = jax.checkpoint(stage)
+        x, (conv_s, ssm_s, k_c, v_c) = jax.lax.scan(stage, x, staged)
+        conv_c = conv_s.reshape((n_l,) + conv_s.shape[2:])
+        ssm_c = ssm_s.reshape((n_l,) + ssm_s.shape[2:])
+    else:
+        def body(h, lp):
+            h, cst, sst = _ssm_block_cached(lp, cfg, h)
+            return h, (cst, sst)
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, (conv_c, ssm_c) = jax.lax.scan(body, x, params["blocks"])
+    positions_all = jnp.arange(max(s - w, 0), s)
+    slot_pos = jnp.full((w,), -1, jnp.int32)
+    n_fill = min(s, w)
+    slots = (positions_all % w) if s >= w else jnp.arange(n_fill)
+    slot_pos = slot_pos.at[slots].set(positions_all.astype(jnp.int32))
+
+    hidden = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(cfg, params, hidden)[:, 0]
+    return logits, DecodeCache(
+        index=jnp.asarray(s, jnp.int32), slot_pos=slot_pos,
+        k=k_c, v=v_c, conv=conv_c, ssm=ssm_c)
+
+
+def _ssm_block_cached(lp, cfg: ModelConfig, x):
+    """Run an SSM block over the full sequence and emit its decode state."""
+    from repro.models.layers import causal_conv1d
+    import repro.models.ssm as ssm_mod
+    res = x
+    xn = rmsnorm(x, lp["ln"], cfg.norm_eps)
+    if cfg.block == "mamba1":
+        xi = xn @ lp["in_x"]
+        z = xn @ lp["in_z"]
+        xc = jax.nn.silu(causal_conv1d(xi, lp["conv_w"], lp["conv_b"]))
+        out, h_final = ssm_mod.mamba1_inner(lp, cfg, xc, z,
+                                            return_state=True)
+    else:  # mamba2
+        z, xi, b_ssm, c_ssm, dt_raw = ssm_mod._mamba2_split(lp, cfg, xn)
+        xc = jax.nn.silu(causal_conv1d(xi, lp["conv_w"], lp["conv_b"]))
+        out, h_final = ssm_mod.mamba2_inner(lp, cfg, xc, z, b_ssm, c_ssm,
+                                            dt_raw, return_state=True)
+    conv_tail = xi[:, -(cfg.ssm_conv - 1):, :]
+    return res + out, conv_tail, h_final

@@ -1,0 +1,79 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+TPU-minded design (GShard/Switch style, adapted for expert-parallel sharding):
+  * router in fp32; top-k gates renormalized over the selected experts;
+  * each expert takes its top-C tokens by gate score (C = capacity), the
+    rest are dropped — dispatch is two gathers + one scatter-add, so the
+    expert matmuls are dense (E, C, d) x (E, d, ff) einsums whose E axis
+    shards over the "model"/expert axis of the mesh;
+  * load-balance auxiliary loss (Switch eq. 4): E * Σ_e f_e · p_e.
+
+FLOPs are the *active* FLOPs (top_k·tokens·capacity_factor), not E× dense —
+this keeps the roofline's MODEL_FLOPS/HLO_FLOPs ratio honest.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ffn_stacked
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    c = max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly shapes
+    return min(c, n_tokens)     # top_k can't exceed the token count
+
+
+def moe_ffn(params, cfg: ModelConfig, x):
+    """x (B, S, d) -> (y (B, S, d), aux_loss scalar).
+
+    Global dispatch flattens all B·S tokens before the per-expert top-C —
+    maximum routing freedom, but on a sharded mesh the token gather crosses
+    the data axis (GSPMD lowers it to collective-permute chains). With
+    ``cfg.moe_local_dispatch`` routing happens per batch row (vmap over B):
+    capacity is enforced per sequence and every gather/scatter stays on the
+    row's own shard — the §Perf fix for collective-bound MoE prefill.
+    """
+    if cfg.moe_local_dispatch:
+        def row(xr):
+            return _dispatch(params, cfg, xr[None])
+        y, aux = jax.vmap(row)(x)
+        return y.reshape(x.shape), jnp.mean(aux)
+    return _dispatch(params, cfg, x)
+
+
+def _dispatch(params, cfg: ModelConfig, x):
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(n, d)
+
+    logits = (xf.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (N, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)               # (N, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # (N, E) combine weights: renormalized gate if selected else 0.
+    sel = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)        # (N, k, E)
+    combine = jnp.einsum("nk,nke->ne", gate_vals, sel)
+
+    # Capacity dispatch: each expert picks its top-C tokens by gate weight.
+    cap = _capacity(n, cfg)
+    score_en = combine.T                                        # (E, N)
+    top_gate, top_tok = jax.lax.top_k(score_en, cap)            # (E, C)
+
+    xe = xf[top_tok.reshape(-1)].reshape(e, cap, d)             # gather
+    ye = ffn_stacked(params, cfg, xe)                           # (E, C, d)
+    ye = ye * top_gate[..., None].astype(ye.dtype)
+
+    out = jnp.zeros((n, d), ye.dtype).at[top_tok.reshape(-1)].add(
+        ye.reshape(-1, d))
+
+    # Switch-style load-balance loss.
+    frac_tokens = jnp.mean(sel.sum(1), axis=0)                  # f_e
+    mean_prob = jnp.mean(probs, axis=0)                         # p_e
+    aux = cfg.router_aux_coeff * e * jnp.sum(frac_tokens * mean_prob)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,129 @@
+"""Small models for the paper's own experiments (§4): logistic regression,
+an MLP, and a small conv net (the paper's two-conv + two-FC MNIST net).
+
+Pure-jnp init/apply pairs (no flax): ``init(rng, example_x) -> params`` and
+``apply(params, x) -> logits``. Losses are cross-entropy with the paper's
+ℓ2 regularizer λ=1e-5.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+L2_COEFF = 1e-5  # paper §13.2.1
+
+
+def _xent(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def _l2(params, coeff):
+    return coeff * sum(jnp.sum(jnp.square(w))
+                       for w in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------- logistic
+
+def logreg_init(rng, dim: int, n_classes: int):
+    return {
+        "w": jnp.zeros((dim, n_classes), jnp.float32),
+        "b": jnp.zeros((n_classes,), jnp.float32),
+    }
+
+
+def logreg_apply(params, x):
+    return x @ params["w"] + params["b"]
+
+
+def logreg_loss(params, batch, l2: float = L2_COEFF):
+    x, y = batch
+    return _xent(logreg_apply(params, x), y) + _l2(params, l2)
+
+
+# ---------------------------------------------------------------- MLP
+
+def mlp_init(rng, dim: int, hidden: int, n_classes: int):
+    k1, k2 = jax.random.split(rng)
+    s1 = 1.0 / jnp.sqrt(dim)
+    s2 = 1.0 / jnp.sqrt(hidden)
+    return {
+        "w1": jax.random.normal(k1, (dim, hidden)) * s1,
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, n_classes)) * s2,
+        "b2": jnp.zeros((n_classes,)),
+    }
+
+
+def mlp_apply(params, x):
+    x = x.reshape(x.shape[0], -1)
+    h = jax.nn.elu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params, batch, l2: float = L2_COEFF):
+    x, y = batch
+    return _xent(mlp_apply(params, x), y) + _l2(params, l2)
+
+
+# ---------------------------------------------------------------- small CNN
+# Paper: two convolution-ELU-maxpooling layers followed by two FC layers.
+# We keep the structure but shrink channels so CPU Monte-Carlo runs are fast.
+
+def cnn_init(rng, n_classes: int = 10, c1: int = 8, c2: int = 16,
+             fc: int = 64, hw: int = 28, in_ch: int = 1):
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    hw4 = hw // 4
+    flat = hw4 * hw4 * c2
+    return {
+        "conv1": jax.random.normal(k1, (5, 5, in_ch, c1)) * 0.1,
+        "bc1": jnp.zeros((c1,)),
+        "conv2": jax.random.normal(k2, (5, 5, c1, c2)) * 0.1,
+        "bc2": jnp.zeros((c2,)),
+        "w1": jax.random.normal(k3, (flat, fc)) / jnp.sqrt(flat),
+        "b1": jnp.zeros((fc,)),
+        "w2": jax.random.normal(k4, (fc, n_classes)) / jnp.sqrt(fc),
+        "b2": jnp.zeros((n_classes,)),
+    }
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
+
+
+def cnn_apply(params, x):
+    h = jax.lax.conv_general_dilated(
+        x, params["conv1"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["bc1"]
+    h = _maxpool2(jax.nn.elu(h))
+    h = jax.lax.conv_general_dilated(
+        h, params["conv2"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["bc2"]
+    h = _maxpool2(jax.nn.elu(h))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.elu(h @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def cnn_loss(params, batch, l2: float = L2_COEFF):
+    x, y = batch
+    return _xent(cnn_apply(params, x), y) + _l2(params, l2)
+
+
+def make_problem(kind: str, rng, example_x, n_classes: int):
+    """Return (params, loss_fn(params, batch))."""
+    if kind == "logreg":
+        params = logreg_init(rng, example_x.shape[-1], n_classes)
+        return params, partial(logreg_loss)
+    if kind == "mlp":
+        dim = int(jnp.prod(jnp.asarray(example_x.shape[1:])))
+        params = mlp_init(rng, dim, 64, n_classes)
+        return params, partial(mlp_loss)
+    if kind == "cnn":
+        params = cnn_init(rng, n_classes, hw=example_x.shape[1],
+                          in_ch=example_x.shape[-1])
+        return params, partial(cnn_loss)
+    raise ValueError(f"unknown problem kind: {kind}")

@@ -1,0 +1,228 @@
+"""Selective-state-space blocks: Mamba1 (falcon-mamba) and Mamba2 (zamba2).
+
+TPU adaptation (see DESIGN.md §6): the CUDA selective-scan is replaced by a
+*chunked* scan with the decay/drive terms computed PER CHUNK inside the
+`lax.scan` body — the (B, S, D, N) state-trajectory tensors of a naive
+implementation are never materialized (only one (B, chunk, D, N) tile lives
+at a time, exactly the VMEM working set the Pallas kernel
+kernels/ssm_scan.py tiles). Intra-chunk the recurrence is a parallel
+`associative_scan`; inter-chunk a sequential carry.
+
+Both variants lower to ONE generic scan over a flattened channel axis D:
+  mamba1: D = d_inner,             A: (D, N) dense matrix
+  mamba2: D = heads × head_dim,    A/Δ: per-head, repeated across head_dim
+so the jnp path, the Pallas kernel, and ref.py all share one contract:
+  (dt, x, a, b, c) -> (y, h_final)   with h_t = exp(Δ_t A) h + (Δ_t x_t)⊗B_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import causal_conv1d, conv1d_step, rmsnorm
+
+DEFAULT_CHUNK = 128
+
+# scan implementation: "jnp" (chunked associative scan, the XLA path) or
+# "pallas" (kernels/ssm_scan.py — interpret mode on CPU, Mosaic on TPU).
+_SCAN_IMPL = "jnp"
+
+
+def set_scan_impl(name: str) -> None:
+    global _SCAN_IMPL
+    assert name in ("jnp", "pallas"), name
+    _SCAN_IMPL = name
+
+
+def _scan(dt, x, a, b, c, h0, chunk):
+    """Dispatch to the configured scan implementation (same contract)."""
+    if _SCAN_IMPL == "pallas" and h0 is None:
+        from repro.kernels import ops as kops
+        g, _, d = dt.shape
+        a_g = jnp.broadcast_to(a.astype(jnp.float32)[None],
+                               (g, d, a.shape[-1]))
+        return kops.selective_scan(dt.astype(jnp.float32),
+                                   x.astype(jnp.float32), a_g,
+                                   b.astype(jnp.float32),
+                                   c.astype(jnp.float32), chunk=chunk)
+    return selective_scan_jnp(dt, x, a, b, c, h0, chunk)
+
+
+def _assoc_combine(a, b):
+    a1, b1 = a
+    a2, b2 = b
+    return a2 * a1, a2 * b1 + b2
+
+
+def selective_scan_jnp(dt, x, a, b, c, h0=None, chunk: int = DEFAULT_CHUNK):
+    """Chunked fused selective scan.
+
+    dt, x: (B, S, D); a: (D, N); b, c: (B, S, N). All math fp32.
+    Returns (y (B, S, D) fp32 — no D·x skip / gating — and h_final
+    (B, D, N) fp32). Matches kernels/ref.selective_scan_ref.
+    """
+    bsz, s, d = dt.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"seq len {s} not divisible by chunk {chunk}")
+    nc = s // chunk
+
+    dt = dt.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+
+    def to_chunks(t):
+        return t.reshape((bsz, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    def per_chunk(h, xs):
+        dt_c, x_c, b_c, c_c = xs            # (B,chunk,D) ×2, (B,chunk,N) ×2
+        decay = jnp.exp(dt_c[..., None] * a)             # (B,chunk,D,N)
+        drive = (dt_c * x_c)[..., None] * b_c[:, :, None, :]
+        a_in, b_in = jax.lax.associative_scan(
+            _assoc_combine, (decay, drive), axis=1)
+        h_all = a_in * h[:, None] + b_in
+        y_c = jnp.einsum("btdn,btn->btd", h_all, c_c)
+        return h_all[:, -1], y_c
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d, n), jnp.float32)
+    h_final, y = jax.lax.scan(
+        per_chunk, h0, (to_chunks(dt), to_chunks(x), to_chunks(b),
+                        to_chunks(c)))
+    return y.swapaxes(0, 1).reshape(bsz, s, d), h_final
+
+
+# =================================================================== mamba1
+
+def _mamba1_scan_inputs(params, xc):
+    """Post-conv activations -> (dt, a, b, c) of the generic scan."""
+    dt_raw = xc @ params["xp_dt"]                              # (B,S,r)
+    b_ssm = xc @ params["xp_b"]                                # (B,S,N)
+    c_ssm = xc @ params["xp_c"]                                # (B,S,N)
+    dt = jax.nn.softplus((dt_raw @ params["dt_proj"]
+                          + params["dt_bias"]).astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))          # (di, N)
+    return dt, a, b_ssm, c_ssm
+
+
+def mamba1_inner(params, cfg: ModelConfig, xc, z, h0=None,
+                 chunk: int = DEFAULT_CHUNK, return_state: bool = False):
+    """Selective scan after the conv. xc (B,S,di) post-conv+silu, z gate."""
+    dt, a, b_ssm, c_ssm = _mamba1_scan_inputs(params, xc)
+    y, h_final = _scan(dt, xc, a, b_ssm, c_ssm, h0, chunk)
+    y = y + params["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(xc.dtype)
+    out = y @ params["out_proj"]
+    return (out, h_final) if return_state else (out, None)
+
+
+def mamba1_block(params, cfg: ModelConfig, x, chunk: int = DEFAULT_CHUNK):
+    """Full block: norm -> in_proj -> conv -> selective scan -> out_proj."""
+    res = x
+    xn = rmsnorm(x, params["ln"], cfg.norm_eps)
+    xi = xn @ params["in_x"]                                   # (B,S,di)
+    z = xn @ params["in_z"]
+    xc = jax.nn.silu(causal_conv1d(xi, params["conv_w"], params["conv_b"]))
+    out, _ = mamba1_inner(params, cfg, xc, z, chunk=chunk)
+    return res + out
+
+
+def mamba1_decode(params, cfg: ModelConfig, x_t, conv_state, ssm_state):
+    """One-token recurrent step. x_t (B, d). Returns (y, conv', ssm')."""
+    xn = rmsnorm(x_t, params["ln"], cfg.norm_eps)
+    xi = xn @ params["in_x"]
+    z = xn @ params["in_z"]
+    conv_state, xc = conv1d_step(conv_state, xi, params["conv_w"],
+                                 params["conv_b"])
+    xc = jax.nn.silu(xc)
+    dt_raw = xc @ params["xp_dt"]
+    b_ssm = xc @ params["xp_b"]
+    c_ssm = xc @ params["xp_c"]
+    dt = jax.nn.softplus(dt_raw @ params["dt_proj"]
+                         + params["dt_bias"]).astype(jnp.float32)  # (B,di)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[..., None] * a)                         # (B,di,N)
+    drive = (dt * xc.astype(jnp.float32))[..., None] \
+        * b_ssm.astype(jnp.float32)[:, None, :]
+    ssm_state = decay * ssm_state + drive
+    y = jnp.einsum("bdn,bn->bd", ssm_state, c_ssm.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_t.dtype)
+    return x_t + y @ params["out_proj"], conv_state, ssm_state
+
+
+# =================================================================== mamba2
+
+def _mamba2_split(params, cfg: ModelConfig, xn):
+    """Separate projections (shard-friendly: each output dim is clean)."""
+    return (xn @ params["in_z"], xn @ params["in_x"],
+            xn @ params["in_b"], xn @ params["in_c"],
+            xn @ params["in_dt"])               # z, x, B, C, dt
+
+
+def _mamba2_scan_inputs(params, cfg: ModelConfig, dt_raw):
+    """Per-head Δ/A repeated across head_dim onto the flat channel axis."""
+    hd, n = cfg.mamba_headdim, cfg.ssm_state
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])                  # (B,S,H)
+    dt_e = jnp.repeat(dt, hd, axis=-1)                         # (B,S,di)
+    a_h = -jnp.exp(params["A_log"].astype(jnp.float32))        # (H,)
+    a_e = jnp.repeat(a_h, hd)[:, None] * jnp.ones((1, n), jnp.float32)
+    return dt_e, a_e
+
+
+def mamba2_inner(params, cfg: ModelConfig, xc, z, b_ssm, c_ssm, dt_raw,
+                 h0=None, chunk: int = DEFAULT_CHUNK,
+                 return_state: bool = False):
+    """xc (B,S,di) post-conv+silu. h0/h_final: (B, H, hd, N)."""
+    bsz, s, di = xc.shape
+    hn, hd, n = cfg.ssm_heads, cfg.mamba_headdim, cfg.ssm_state
+    dt_e, a_e = _mamba2_scan_inputs(params, cfg, dt_raw)
+    h0_flat = None if h0 is None else h0.reshape(bsz, di, n)
+    y, h_final = _scan(dt_e, xc, a_e, b_ssm, c_ssm, h0_flat, chunk)
+    y = y + jnp.repeat(params["D"].astype(jnp.float32), hd) \
+        * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(xc.dtype)
+    y = rmsnorm(y, params["out_norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if return_state:
+        return out, h_final.reshape(bsz, hn, hd, n)
+    return out, None
+
+
+def mamba2_block(params, cfg: ModelConfig, x, chunk: int = DEFAULT_CHUNK):
+    res = x
+    xn = rmsnorm(x, params["ln"], cfg.norm_eps)
+    z, xi, b_ssm, c_ssm, dt_raw = _mamba2_split(params, cfg, xn)
+    xc = jax.nn.silu(causal_conv1d(xi, params["conv_w"], params["conv_b"]))
+    out, _ = mamba2_inner(params, cfg, xc, z, b_ssm, c_ssm, dt_raw,
+                          chunk=chunk)
+    return res + out
+
+
+def mamba2_decode(params, cfg: ModelConfig, x_t, conv_state, ssm_state):
+    """x_t (B, d); ssm_state (B, H, hd, N)."""
+    bsz = x_t.shape[0]
+    hn, hd = cfg.ssm_heads, cfg.mamba_headdim
+    xn = rmsnorm(x_t, params["ln"], cfg.norm_eps)
+    z, xi, b_ssm, c_ssm, dt_raw = _mamba2_split(params, cfg, xn)
+    conv_state, xc = conv1d_step(conv_state, xi, params["conv_w"],
+                                 params["conv_b"])
+    xc = jax.nn.silu(xc)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xc.reshape(bsz, hn, hd).astype(jnp.float32)
+    decay = jnp.exp(dt * a)[..., None, None]                   # (B,H,1,1)
+    drive = (dt[..., None] * xh)[..., None] \
+        * b_ssm.astype(jnp.float32)[:, None, None, :]
+    ssm_state = decay * ssm_state + drive
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, c_ssm.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(bsz, -1)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_t.dtype)
+    y = rmsnorm(y, params["out_norm"], cfg.norm_eps)
+    return x_t + y @ params["out_proj"], conv_state, ssm_state

@@ -1,0 +1,11 @@
+from repro.optim.base import Optimizer, apply_updates, chain_weight_decay
+from repro.optim.adam import AdamState, adam, amsgrad
+from repro.optim.sgd import MomentumState, momentum, sgd
+from repro.optim import schedules
+
+__all__ = [
+    "Optimizer", "apply_updates", "chain_weight_decay",
+    "AdamState", "adam", "amsgrad",
+    "MomentumState", "momentum", "sgd",
+    "schedules",
+]

@@ -1,0 +1,89 @@
+"""Adam (Kingma & Ba, 2014) and AMSGrad (Reddi et al., 2018).
+
+CADA's server update (paper eq. 2a–2c) is the AMSGrad form:
+    h^{k+1} = β1 h^k + (1-β1) ∇^k
+    v^{k+1} = β2 v̂^k + (1-β2) (∇^k)²
+    v̂^{k+1} = max(v^{k+1}, v̂^k)
+    θ^{k+1} = θ^k − α (εI + V̂^{k+1})^{-1/2} h^{k+1}
+Note ε sits *inside* the square root in the paper; we follow that convention
+(``eps_inside_sqrt=True``) and also offer the common ε-outside variant.
+
+No bias correction is applied in the paper's update; ``bias_correction`` is
+off by default for faithfulness and available for the beyond-paper runs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+class AdamState(NamedTuple):
+    count: jnp.ndarray
+    h: object  # first moment  (paper's h)
+    v: object  # second moment (paper's v)
+    vhat: object  # running max of v (AMSGrad); aliases v when amsgrad=False
+
+
+def _scaled_update(h, vhat, lr, eps, eps_inside_sqrt):
+    if eps_inside_sqrt:
+        denom = jnp.sqrt(eps + vhat)
+    else:
+        denom = jnp.sqrt(vhat) + eps
+    return -lr * h / denom
+
+
+def adam(
+    lr: float | object = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    amsgrad: bool = True,
+    eps_inside_sqrt: bool = True,
+    bias_correction: bool = False,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    """Adam/AMSGrad in the paper's (2a)-(2c) convention.
+
+    ``lr`` may be a float or a callable step -> float schedule.
+    """
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, dtype=state_dtype), params
+        )
+        return AdamState(count=jnp.zeros([], jnp.int32), h=zeros, v=zeros,
+                         vhat=zeros)
+
+    def update(grads, state, params=None):
+        del params
+        count = state.count + 1
+        h = jax.tree.map(
+            lambda m, g: b1 * m + (1.0 - b1) * g.astype(m.dtype),
+            state.h, grads)
+        # Paper (2b): v^{k+1} = β2 v̂^k + (1-β2)(∇^k)²  — note v̂, not v.
+        base = state.vhat if amsgrad else state.v
+        v = jax.tree.map(
+            lambda s, g: b2 * s + (1.0 - b2)
+            * jnp.square(g.astype(s.dtype)),
+            base, grads)
+        vhat = jax.tree.map(jnp.maximum, v, state.vhat) if amsgrad else v
+        step = lr_fn(state.count)
+        if bias_correction:
+            c1 = 1.0 - b1 ** count.astype(jnp.float32)
+            c2 = 1.0 - b2 ** count.astype(jnp.float32)
+            step = step * jnp.sqrt(c2) / c1
+        updates = jax.tree.map(
+            lambda m, s: _scaled_update(m, s, step, eps, eps_inside_sqrt),
+            h, vhat)
+        return updates, AdamState(count=count, h=h, v=v, vhat=vhat)
+
+    return Optimizer(init, update)
+
+
+def amsgrad(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, **kw) -> Optimizer:
+    return adam(lr=lr, b1=b1, b2=b2, eps=eps, amsgrad=True, **kw)

@@ -1,0 +1,37 @@
+"""Minimal optax-style optimizer protocol (self-contained; optax not vendored).
+
+An optimizer is a pair of pure functions:
+  init(params) -> state
+  update(grads, state, params) -> (updates, new_state)
+and ``apply_updates(params, updates)`` adds the updates in.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def chain_weight_decay(opt: Optimizer, weight_decay: float) -> Optimizer:
+    """Decoupled (AdamW-style) weight decay wrapped around any optimizer."""
+    if weight_decay == 0.0:
+        return opt
+
+    def update(grads, state, params):
+        updates, new_state = opt.update(grads, state, params)
+        updates = jax.tree.map(
+            lambda u, p: u - weight_decay * p, updates, params
+        )
+        return updates, new_state
+
+    return Optimizer(opt.init, update)

@@ -1,0 +1,34 @@
+"""Learning-rate schedules.
+
+The paper uses a constant stepsize α = O(1/√K) for Theorem 4 and the
+PL-condition schedule α_k = 2/(μ(k+K0)) for Theorem 5.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def inv_sqrt_horizon(eta: float, horizon: int):
+    """α = η/√K, the Theorem-4 choice (constant over the run)."""
+    return constant(eta / float(horizon) ** 0.5)
+
+
+def pl_schedule(mu: float, k0: float = 1.0):
+    """α_k = 2 / (μ (k + K0)) — Theorem 5's O(1/K) schedule."""
+    return lambda step: 2.0 / (mu * (step.astype(jnp.float32) + k0))
+
+
+def cosine(peak: float, total_steps: int, warmup: int = 0,
+           floor: float = 0.0):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((s - warmup) / jnp.maximum(1.0, total_steps - warmup),
+                        0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return fn

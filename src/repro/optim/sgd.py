@@ -1,0 +1,53 @@
+"""SGD and momentum SGD (used by the LAG and local-momentum baselines)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+class MomentumState(NamedTuple):
+    count: jnp.ndarray
+    momentum: object
+
+
+def sgd(lr: float | object = 1e-2) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return jnp.zeros([], jnp.int32)
+
+    def update(grads, state, params=None):
+        del params
+        step = lr_fn(state)
+        return jax.tree.map(lambda g: -step * g, grads), state + 1
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float | object = 1e-2, beta: float = 0.9,
+             nesterov: bool = False) -> Optimizer:
+    """Heavy-ball momentum: u^{k+1} = β u^k + g;  θ -= α u^{k+1}."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return MomentumState(
+            count=jnp.zeros([], jnp.int32),
+            momentum=jax.tree.map(jnp.zeros_like, params),
+        )
+
+    def update(grads, state, params=None):
+        del params
+        buf = jax.tree.map(lambda m, g: beta * m + g, state.momentum, grads)
+        if nesterov:
+            d = jax.tree.map(lambda m, g: beta * m + g, buf, grads)
+        else:
+            d = buf
+        step = lr_fn(state.count)
+        updates = jax.tree.map(lambda u: -step * u, d)
+        return updates, MomentumState(state.count + 1, buf)
+
+    return Optimizer(init, update)

@@ -1,0 +1,11 @@
+from repro.utils import trees, hlo
+from repro.utils.trees import (
+    tree_add, tree_sub, tree_scale, tree_zeros_like, tree_sq_norm,
+    tree_dot, tree_axpy, tree_cast, tree_size, tree_where_mask,
+)
+
+__all__ = [
+    "trees", "hlo",
+    "tree_add", "tree_sub", "tree_scale", "tree_zeros_like", "tree_sq_norm",
+    "tree_dot", "tree_axpy", "tree_cast", "tree_size", "tree_where_mask",
+]

@@ -1,0 +1,93 @@
+"""HLO text analysis: collective-traffic accounting for the roofline model.
+
+``compiled.cost_analysis()`` reports FLOPs and total bytes accessed but not the
+bytes moved by collectives; we recover those by scanning the (stable-)HLO text
+for all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops and summing their operand sizes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  bf16[256,4096,512]{2,1,0}   or   f32[]   — capture dtype + dims.
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# LHS of an HLO instruction:  %name = <shape(s)> op-name(
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9_\[\]{},./ ]+?)\s*"
+    r"(" + "|".join(COLLECTIVES) + r")(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+    count_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [
+            f"{k}: n={self.count_by_kind[k]} bytes={self.bytes_by_kind[k]:,}"
+            for k in sorted(self.bytes_by_kind)
+        ]
+        return "; ".join(parts) if parts else "none"
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective op in an HLO dump.
+
+    ``-start`` variants are counted; their matching ``-done`` twins are skipped
+    so async collectives are not double counted.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # async second half; traffic counted at -start
+        kind = m.group(1)
+        # Operand shapes: everything after the op's opening paren.
+        args = line[m.end():]
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(args):
+            nbytes += _shape_bytes(sm.group(1), sm.group(2))
+        stats.bytes_by_kind[kind] += nbytes
+        stats.count_by_kind[kind] += 1
+    return stats
+
+
+def remat_duplication(hlo_text: str) -> float:
+    """Crude remat-waste probe: ratio of dot ops to uniquely-named dot ops."""
+    dots = re.findall(r"= [a-z0-9_\[\]{},. ]*\b(dot|convolution)\(", hlo_text)
+    total = len(dots)
+    return float(total)

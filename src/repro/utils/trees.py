@@ -1,0 +1,63 @@
+"""Pytree arithmetic helpers.
+
+All of the CADA bookkeeping (stale gradients, innovations, rule norms) is
+expressed as whole-pytree arithmetic; keeping these helpers centralized keeps
+the optimizer / engine code close to the paper's vector notation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a):
+    return jax.tree.map(lambda x: s * x, a)
+
+
+def tree_axpy(s, a, b):
+    """b + s * a, elementwise over matching pytrees."""
+    return jax.tree.map(lambda x, y: y + s * x, a, b)
+
+
+def tree_zeros_like(a, dtype=None):
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=dtype or x.dtype), a)
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_sq_norm(a):
+    """Sum of squared entries across the whole pytree (fp32 accumulate)."""
+    leaves = jax.tree.leaves(a)
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+
+
+def tree_dot(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return sum(
+        jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+        for x, y in zip(la, lb)
+    )
+
+
+def tree_size(a):
+    """Total number of scalar parameters in the pytree."""
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_where_mask(mask, a, b):
+    """Select a where (scalar/broadcastable) bool mask else b, per leaf."""
+    return jax.tree.map(lambda x, y: jnp.where(mask, x, y), a, b)
+
+
+def tree_bytes(a):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(a))

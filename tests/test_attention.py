@@ -1,0 +1,117 @@
+"""Attention: flash == naive (property-swept), GQA grouping, RoPE/M-RoPE,
+sliding windows, decode ring-buffer equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as A
+
+
+def _qkv(rng, b, s, hq, hkv, hd):
+    q = jnp.asarray(rng.normal(size=(b, s, hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [0, 256])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])
+def test_flash_equals_naive(rng, window, hq, hkv):
+    q, k, v = _qkv(rng, 2, 1024, hq, hkv, 32)
+    ref = A.naive_attention(q, k, v, window=window, dtype=jnp.float32)
+    out = A.flash_attention(q, k, v, window=window, dtype=jnp.float32,
+                            q_chunk=256, kv_chunk=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       qc=st.sampled_from([64, 128, 256]),
+       kc=st.sampled_from([64, 128, 256]),
+       window=st.sampled_from([0, 100, 512]))
+def test_flash_chunking_invariance(seed, qc, kc, window):
+    """Property: the output is independent of the chunking."""
+    rng = np.random.default_rng(seed)
+    q, k, v = _qkv(rng, 1, 512, 4, 2, 16)
+    base = A.flash_attention(q, k, v, window=window, dtype=jnp.float32,
+                             q_chunk=512, kv_chunk=512)
+    out = A.flash_attention(q, k, v, window=window, dtype=jnp.float32,
+                            q_chunk=qc, kv_chunk=kc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_causality(rng):
+    """Future keys cannot influence earlier queries."""
+    q, k, v = _qkv(rng, 1, 64, 2, 2, 16)
+    out1 = A.naive_attention(q, k, v, dtype=jnp.float32)
+    k2 = k.at[:, -1].set(99.0)
+    v2 = v.at[:, -1].set(99.0)
+    out2 = A.naive_attention(q, k2, v2, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out1[:, :-1]),
+                               np.asarray(out2[:, :-1]), rtol=1e-5)
+
+
+def test_sliding_window_masks_old_keys(rng):
+    q, k, v = _qkv(rng, 1, 64, 2, 2, 16)
+    out_w = A.naive_attention(q, k, v, window=8, dtype=jnp.float32)
+    # poisoning keys older than the window must not change the last query
+    k2 = k.at[:, :32].set(99.0)
+    v2 = v.at[:, :32].set(99.0)
+    out_p = A.naive_attention(q, k2, v2, window=8, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out_w[:, -1]),
+                               np.asarray(out_p[:, -1]), rtol=1e-5)
+
+
+def test_decode_attention_equals_prefix(rng):
+    """Single-token decode over a cache == last row of full attention."""
+    b, s, hq, hkv, hd = 2, 33, 4, 2, 16
+    q, k, v = _qkv(rng, b, s, hq, hkv, hd)
+    full = A.naive_attention(q, k, v, dtype=jnp.float32)
+    valid = jnp.ones((b, s), bool)
+    dec = A.decode_attention(q[:, -1:], k, v, valid, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, -1]), rtol=1e-5, atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relativity(rng):
+    x = jnp.asarray(rng.normal(size=(1, 8, 2, 32)), jnp.float32)
+    cos, sin = A.rope_angles(jnp.arange(8)[None], 32, 1e4)
+    out = A.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(out), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-4)
+    # relativity: q·k after roping depends only on position difference
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 32)), jnp.float32)
+
+    def dot_at(pq, pk):
+        cq, sq = A.rope_angles(jnp.asarray([[pq]]), 32, 1e4)
+        ck, sk = A.rope_angles(jnp.asarray([[pk]]), 32, 1e4)
+        qr = A.apply_rope(q, cq, sq)
+        kr = A.apply_rope(k, ck, sk)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-3
+
+
+def test_mrope_sections(rng):
+    pos = jnp.broadcast_to(jnp.arange(8)[None, None], (3, 1, 8)).astype(
+        jnp.int32)
+    cos, sin = A.mrope_angles(pos, 32, 1e4, (4, 6, 6))
+    assert cos.shape == (1, 8, 16)
+    # equal t/h/w positions == plain RoPE
+    cos2, sin2 = A.rope_angles(jnp.arange(8)[None], 32, 1e4)
+    np.testing.assert_allclose(np.asarray(cos), np.asarray(cos2), rtol=1e-6)
+
+
+def test_partial_rotary(rng):
+    """rotary_pct < 1 leaves the tail dims untouched (stablelm-style)."""
+    x = jnp.asarray(rng.normal(size=(1, 4, 1, 32)), jnp.float32)
+    cos, sin = A.rope_angles(jnp.arange(4)[None], 8, 1e4)
+    out = A.apply_rope(x, cos, sin, rotary_pct=0.25)
+    np.testing.assert_allclose(np.asarray(out[..., 8:]),
+                               np.asarray(x[..., 8:]))

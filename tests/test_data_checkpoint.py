@@ -1,0 +1,152 @@
+"""Data pipeline (partitioners, samplers, synthetic sets) + checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import io as ckpt
+from repro.core.engine import make_sampler
+from repro.data.partition import (
+    dirichlet_partition, pad_to_matrix, random_sizes_partition,
+    uniform_partition,
+)
+from repro.data.synthetic import covtype_like, ijcnn1_like, lm_tokens
+
+
+# ------------------------------------------------------------------ data
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(10, 500), m=st.integers(1, 10),
+       seed=st.integers(0, 1000))
+def test_uniform_partition_is_a_partition(n, m, seed):
+    shards = uniform_partition(n, m, seed)
+    allidx = np.concatenate(shards)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n  # disjoint and complete
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(2, 8), seed=st.integers(0, 100))
+def test_random_sizes_partition_covers(m, seed):
+    shards = random_sizes_partition(500, m, seed)
+    allidx = np.concatenate(shards)
+    assert sorted(allidx.tolist()) == list(range(500))
+    sizes = [len(s) for s in shards]
+    assert max(sizes) > min(sizes)  # heterogeneous sizes (covtype setup)
+
+
+def test_dirichlet_partition_skews_labels():
+    labels = np.repeat(np.arange(4), 250)
+    shards = dirichlet_partition(labels, m=4, alpha=0.1, seed=0)
+    allidx = np.concatenate(shards)
+    assert len(np.unique(allidx)) == 1000
+    # low alpha => at least one worker is label-skewed vs global (25%)
+    fracs = []
+    for s in shards:
+        if len(s) == 0:
+            continue
+        _, counts = np.unique(labels[s], return_counts=True)
+        fracs.append(counts.max() / len(s))
+    assert max(fracs) > 0.5
+
+
+def test_pad_to_matrix_wraps():
+    m = pad_to_matrix([np.array([1, 2, 3]), np.array([7])])
+    assert m.shape == (2, 3)
+    assert set(m[1]) == {7}
+
+
+def test_sampler_shapes_and_determinism():
+    ds = ijcnn1_like(n=300)
+    mtx = pad_to_matrix(uniform_partition(ds.n, 5, 0))
+    sample = make_sampler(ds.x, ds.y, mtx, 8)
+    xb, yb = sample(jax.random.PRNGKey(0))
+    assert xb.shape == (5, 8, 22) and yb.shape == (5, 8)
+    xb2, _ = sample(jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(xb), np.asarray(xb2))
+
+
+def test_sampler_respects_shards():
+    """Worker w only ever samples rows from its own shard."""
+    ds = covtype_like(n=200)
+    shards = uniform_partition(ds.n, 4, 1)
+    mtx = pad_to_matrix(shards)
+    sample = make_sampler(ds.x, ds.y, mtx, 16)
+    xb, _ = sample(jax.random.PRNGKey(3))
+    for w in range(4):
+        shard_rows = np.asarray(ds.x)[shards[w]]
+        for row in np.asarray(xb[w]):
+            assert (np.abs(shard_rows - row).sum(axis=1) < 1e-6).any()
+
+
+def test_lm_tokens_zipf():
+    toks = lm_tokens(10000, vocab=1000)
+    assert toks.min() >= 0 and toks.max() < 1000
+    # Zipf: the most common token dominates
+    _, counts = np.unique(toks, return_counts=True)
+    assert counts.max() > 0.2 * len(toks)
+
+
+# ------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    tree = {"a": jnp.asarray(rng.normal(size=(4, 5)), jnp.bfloat16),
+            "b": {"c": jnp.arange(7)}}
+    ckpt.save(str(tmp_path / "step_3"), tree, step=3)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, step = ckpt.restore(str(tmp_path / "step_3"), like)
+    assert step == 3
+    for l1, l2 in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert l1.dtype == l2.dtype
+        np.testing.assert_array_equal(np.asarray(l1, np.float32),
+                                      np.asarray(l2, np.float32))
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path / "s"), {"a": jnp.zeros(3)})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path / "s"), {"zz": jnp.zeros(3)})
+
+
+def test_latest_step_dir(tmp_path):
+    assert ckpt.latest_step_dir(str(tmp_path)) is None
+    for s in (1, 10, 2):
+        os.makedirs(tmp_path / f"step_{s}")
+    assert ckpt.latest_step_dir(str(tmp_path)).endswith("step_10")
+
+
+def test_trainer_state_checkpoint_roundtrip(tmp_path):
+    """Full DistTrainState (params + moments + CADA trees) survives a
+    save/restore cycle — the production resume path."""
+    import repro.configs as C
+    from repro.core.rules import CommRule
+    from repro.distributed.trainer import (TrainHParams, init_train_state,
+                                           make_train_step, worker_split)
+
+    cfg = C.get_smoke_config("stablelm-1.6b")
+    hp = TrainHParams(rule=CommRule(kind="cada2", c=0.5, d_max=4,
+                                    max_delay=10), lr=1e-3)
+    m = 2
+    step = jax.jit(make_train_step(cfg, hp, m))
+    st = init_train_state(cfg, hp, m, jax.random.PRNGKey(0))
+    batch = worker_split(
+        {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 33), 0,
+                                      cfg.vocab)}, m)
+    st, _ = step(st, batch)
+
+    ckpt.save(str(tmp_path / "step_1"), st._asdict(), step=1)
+    like = jax.tree.map(jnp.zeros_like, st._asdict())
+    restored, step_no = ckpt.restore(str(tmp_path / "step_1"), like)
+    assert step_no == 1
+    for a, b in zip(jax.tree.leaves(st._asdict()),
+                    jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-6)
+    # resuming continues bit-compatibly
+    st2, m1 = step(type(st)(**restored), batch)
+    st3, m2 = step(st, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)

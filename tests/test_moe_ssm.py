@@ -1,0 +1,186 @@
+"""MoE routing + SSM block properties (hypothesis-swept)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.configs as C
+from repro.models.layers import causal_conv1d, conv1d_step
+from repro.models.model import init_params
+from repro.models.moe import _capacity, moe_ffn
+from repro.models.ssm import (mamba1_block, mamba1_decode, mamba2_block,
+                              mamba2_decode, selective_scan_jnp)
+
+
+# -------------------------------------------------------------------- MoE
+
+def _moe_setup(key, e=4, k=2, d=32, ff=64, b=2, s=16):
+    cfg = C.get_smoke_config("granite-moe-1b-a400m").with_(
+        n_experts=e, top_k=k, d_model=d, d_ff=ff)
+    params = init_params(cfg, key)
+    lp = jax.tree.map(lambda p: p[0], params["blocks"])["mlp"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d), cfg.jnp_dtype)
+    return cfg, lp, x
+
+
+def test_moe_output_finite_and_shaped(key):
+    cfg, lp, x = _moe_setup(key)
+    y, aux = moe_ffn(lp, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+    assert float(aux) >= 0.0
+
+
+def test_moe_aux_loss_penalizes_imbalance(key):
+    """Uniform routing probabilities give aux == coeff (Switch lemma);
+    a collapsed router gives ~E× more."""
+    cfg, lp, x = _moe_setup(key, e=4, k=1)
+    x = jnp.abs(x)  # positive activations -> the +100 column always wins
+    # uniform probabilities (zero router)
+    lp_u = dict(lp)
+    lp_u["router"] = jnp.zeros_like(lp["router"])
+    _, aux_u = moe_ffn(lp_u, cfg, x)
+    # collapsed router: every token to expert 0 with probability ~1
+    lp_c = dict(lp)
+    lp_c["router"] = jnp.zeros_like(lp["router"]).at[:, 0].add(100.0)
+    _, aux_c = moe_ffn(lp_c, cfg, x)
+    assert float(aux_c) > float(aux_u) * 2.0, (float(aux_c), float(aux_u))
+    np.testing.assert_allclose(float(aux_u), cfg.router_aux_coeff,
+                               rtol=0.05)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 4096), e=st.integers(2, 32), k=st.integers(1, 4),
+       cf=st.floats(1.0, 2.0))
+def test_capacity_bounds(n, e, k, cf):
+    k = min(k, e)
+    cfg = C.get_smoke_config("granite-moe-1b-a400m").with_(
+        n_experts=e, top_k=k, capacity_factor=cf)
+    cap = _capacity(n, cfg)
+    assert 1 <= cap <= n
+    assert cap % 8 == 0 or cap == n
+
+
+def test_moe_respects_capacity_drop(key):
+    """With a collapsed router and capacity < tokens, overflow tokens are
+    dropped (at most `capacity` output rows can be non-zero)."""
+    cfg, lp, x = _moe_setup(key, e=4, k=1, b=1, s=64)
+    x = jnp.abs(x)
+    lp = dict(lp)
+    lp["router"] = jnp.zeros_like(lp["router"]).at[:, 0].add(100.0)
+    y, _ = moe_ffn(lp, cfg, x)
+    flat = np.asarray(y.reshape(-1, y.shape[-1]).astype(jnp.float32))
+    nonzero_rows = int((np.abs(flat).sum(axis=1) > 1e-6).sum())
+    cap = _capacity(64, cfg)
+    assert cap < 64, "test needs capacity pressure"
+    assert nonzero_rows <= cap, (nonzero_rows, cap)
+
+
+# -------------------------------------------------------------------- SSM
+
+def test_selective_scan_linearity(rng):
+    """The scan is linear in the drive input x (fixed dt)."""
+    g, s, d, n = 1, 32, 8, 4
+    dt = jnp.abs(jnp.asarray(rng.normal(size=(g, s, d)), jnp.float32)) * .1
+    a = -jnp.abs(jnp.asarray(rng.normal(size=(d, n)), jnp.float32))
+    b = jnp.asarray(rng.normal(size=(g, s, n)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(g, s, n)), jnp.float32)
+    x1 = jnp.asarray(rng.normal(size=(g, s, d)), jnp.float32)
+    x2 = jnp.asarray(rng.normal(size=(g, s, d)), jnp.float32)
+    y1, _ = selective_scan_jnp(dt, x1, a, b, c, chunk=8)
+    y2, _ = selective_scan_jnp(dt, x2, a, b, c, chunk=8)
+    y12, _ = selective_scan_jnp(dt, x1 + 2.0 * x2, a, b, c, chunk=8)
+    np.testing.assert_allclose(np.asarray(y12), np.asarray(y1 + 2 * y2),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_selective_scan_chunk_invariance(rng):
+    g, s, d, n = 2, 64, 8, 4
+    dt = jnp.abs(jnp.asarray(rng.normal(size=(g, s, d)), jnp.float32)) * .1
+    x = jnp.asarray(rng.normal(size=(g, s, d)), jnp.float32)
+    a = -jnp.abs(jnp.asarray(rng.normal(size=(d, n)), jnp.float32))
+    b = jnp.asarray(rng.normal(size=(g, s, n)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(g, s, n)), jnp.float32)
+    outs = [selective_scan_jnp(dt, x, a, b, c, chunk=ch)[0]
+            for ch in (8, 16, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch,block,decode", [
+    ("falcon-mamba-7b", mamba1_block, mamba1_decode),
+    ("zamba2-2.7b", mamba2_block, mamba2_decode),
+])
+def test_ssm_block_decode_equals_parallel(arch, block, decode, key):
+    """Recurrent decode over the sequence == parallel block (causality +
+    state-carry correctness for both Mamba generations)."""
+    cfg = C.get_smoke_config(arch)
+    params = init_params(cfg, key)
+    lp = jax.tree.map(lambda p: p[0], params["blocks"])
+    b, s = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(3), (b, s, cfg.d_model),
+                          cfg.jnp_dtype)
+    y_par = block(lp, cfg, x, chunk=8)
+
+    conv = jnp.zeros((b, cfg.ssm_conv - 1, cfg.d_inner), cfg.jnp_dtype)
+    if cfg.block == "mamba1":
+        state = jnp.zeros((b, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    else:
+        state = jnp.zeros((b, cfg.ssm_heads, cfg.mamba_headdim,
+                           cfg.ssm_state), jnp.float32)
+    ys = []
+    for t in range(s):
+        y_t, conv, state = decode(lp, cfg, x[:, t], conv, state)
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq, np.float32),
+                               np.asarray(y_par, np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+def test_causal_conv_decode_step_matches(rng):
+    b, s, c, k = 2, 10, 6, 4
+    x = jnp.asarray(rng.normal(size=(b, s, c)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, c)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(c,)), jnp.float32)
+    full = causal_conv1d(x, w, bias)
+    state = jnp.zeros((b, k - 1, c))
+    outs = []
+    for t in range(s):
+        state, y = conv1d_step(state, x[:, t], w, bias)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), rtol=1e-4, atol=1e-5)
+
+
+def test_moe_local_dispatch_matches_global(key):
+    """Per-row (sharded) dispatch == global dispatch when capacity is not
+    binding (§Perf optimization must preserve semantics)."""
+    cfg, lp, x = _moe_setup(key, e=4, k=2)
+    cfg = cfg.with_(capacity_factor=8.0)
+    yg, _ = moe_ffn(lp, cfg, x)
+    yl, _ = moe_ffn(lp, cfg.with_(moe_local_dispatch=True), x)
+    np.testing.assert_allclose(np.asarray(yg, np.float32),
+                               np.asarray(yl, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_model_forward_with_pallas_scan_matches_jnp(key):
+    """Whole-model equivalence: falcon-mamba forward through the Pallas
+    selective-scan kernel (interpret) == the jnp chunked path."""
+    from repro.models import ssm as ssm_mod
+    from repro.models.model import forward
+    cfg = C.get_smoke_config("falcon-mamba-7b").with_(remat=False)
+    params = init_params(cfg, key)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (1, 32), 0, cfg.vocab)
+    y_jnp, _ = forward(cfg, params, tokens=toks)
+    try:
+        ssm_mod.set_scan_impl("pallas")
+        y_pl, _ = forward(cfg, params, tokens=toks)
+    finally:
+        ssm_mod.set_scan_impl("jnp")
+    np.testing.assert_allclose(np.asarray(y_jnp, np.float32),
+                               np.asarray(y_pl, np.float32),
+                               rtol=0.02, atol=0.02)

@@ -1,0 +1,123 @@
+"""Optimizer tests: paper eq. (2a)-(2c) semantics, AMSGrad invariants
+(hypothesis), fused-kernel equivalence, schedules, weight decay."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.adam import adam, amsgrad
+from repro.optim.base import apply_updates, chain_weight_decay
+from repro.optim.fused import FusedAMSGrad, as_optimizer
+from repro.optim.schedules import (constant, cosine, inv_sqrt_horizon,
+                                   pl_schedule)
+from repro.optim.sgd import momentum, sgd
+
+
+def _tree(rng, shape=(37,)):
+    return {"w": jnp.asarray(rng.normal(size=shape), jnp.float32)}
+
+
+def test_paper_update_semantics(rng):
+    """One hand-computed step of eq. (2a)-(2c)."""
+    opt = adam(lr=0.1, b1=0.5, b2=0.5, eps=0.01, amsgrad=True,
+               eps_inside_sqrt=True)
+    params = {"w": jnp.array([1.0])}
+    g = {"w": jnp.array([2.0])}
+    state = opt.init(params)
+    upd, state = opt.update(g, state, params)
+    h = 0.5 * 0.0 + 0.5 * 2.0          # = 1
+    v = 0.5 * 0.0 + 0.5 * 4.0          # = 2
+    expected = -0.1 * h / np.sqrt(0.01 + v)
+    np.testing.assert_allclose(float(upd["w"][0]), expected, rtol=1e-6)
+
+
+def test_v_recursion_uses_vhat(rng):
+    """Paper (2b): v^{k+1} = β2·v̂^k + ... — the AMSGrad max feeds back."""
+    opt = adam(lr=0.0, b1=0.0, b2=0.5, eps=0.0, amsgrad=True)
+    params = {"w": jnp.array([0.0])}
+    state = opt.init(params)
+    _, state = opt.update({"w": jnp.array([2.0])}, state, params)  # v̂ = 2
+    _, state = opt.update({"w": jnp.array([0.0])}, state, params)
+    # v = 0.5·v̂ + 0 = 1 (from v̂=2, not from v)
+    np.testing.assert_allclose(float(state.v["w"][0]), 1.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-10, 10, allow_nan=False), min_size=1,
+                max_size=8))
+def test_amsgrad_vhat_monotone_property(gs):
+    """Property: v̂ is nondecreasing along any gradient sequence."""
+    opt = amsgrad(lr=0.01)
+    params = {"w": jnp.zeros((1,))}
+    state = opt.init(params)
+    prev = float(state.vhat["w"][0])
+    for g in gs:
+        _, state = opt.update({"w": jnp.array([g])}, state, params)
+        cur = float(state.vhat["w"][0])
+        assert cur >= prev - 1e-9
+        prev = cur
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 6))
+def test_fused_optimizer_equals_jnp_adam(seed, steps):
+    """The Pallas-backed FusedAMSGrad tracks optim/adam.py exactly."""
+    rng = np.random.default_rng(seed)
+    params = _tree(rng)
+    ref_opt = adam(lr=0.05)
+    fus = FusedAMSGrad(lr=0.05)
+    ref_state = ref_opt.init(params)
+    fus_state = fus.init(params)
+    p_ref, p_fus = params, params
+    for _ in range(steps):
+        g = _tree(rng)
+        upd, ref_state = ref_opt.update(g, ref_state, p_ref)
+        p_ref = apply_updates(p_ref, upd)
+        p_fus, fus_state, _ = fus.apply(p_fus, fus_state, g)
+    np.testing.assert_allclose(np.asarray(p_fus["w"]),
+                               np.asarray(p_ref["w"]), rtol=1e-5, atol=1e-6)
+
+
+def test_fused_as_optimizer_protocol(rng):
+    opt = as_optimizer(FusedAMSGrad(lr=0.1))
+    params = _tree(rng)
+    state = opt.init(params)
+    upd, state = opt.update(_tree(rng), state, params)
+    assert upd["w"].shape == params["w"].shape
+
+
+def test_sgd_momentum(rng):
+    opt = momentum(lr=0.1, beta=0.9)
+    params = {"w": jnp.array([1.0])}
+    state = opt.init(params)
+    upd, state = opt.update({"w": jnp.array([1.0])}, state, params)
+    np.testing.assert_allclose(float(upd["w"][0]), -0.1)
+    upd, state = opt.update({"w": jnp.array([1.0])}, state, params)
+    np.testing.assert_allclose(float(upd["w"][0]), -0.1 * 1.9, rtol=1e-6)
+
+
+def test_weight_decay_decoupled(rng):
+    opt = chain_weight_decay(sgd(lr=1.0), 0.1)
+    params = {"w": jnp.array([2.0])}
+    upd, _ = opt.update({"w": jnp.array([0.0])}, opt.init(params), params)
+    np.testing.assert_allclose(float(upd["w"][0]), -0.2)
+
+
+def test_schedules():
+    step = jnp.asarray(100)
+    assert float(constant(0.5)(step)) == 0.5
+    assert abs(float(inv_sqrt_horizon(1.0, 100)(step)) - 0.1) < 1e-6
+    s = pl_schedule(mu=2.0, k0=10)
+    assert float(s(jnp.asarray(0))) > float(s(jnp.asarray(100)))
+    c = cosine(1.0, total_steps=100, warmup=10)
+    assert float(c(jnp.asarray(5))) < 1.0            # warming up
+    assert float(c(jnp.asarray(100))) < 1e-6         # decayed
+
+
+def test_schedule_into_adam(rng):
+    opt = adam(lr=lambda k: 0.1 / (1 + k))
+    params = _tree(rng)
+    state = opt.init(params)
+    u1, state = opt.update({"w": jnp.ones(37)}, state, params)
+    u2, state = opt.update({"w": jnp.ones(37)}, state, params)
+    assert float(jnp.abs(u2["w"]).max()) < float(jnp.abs(u1["w"]).max())

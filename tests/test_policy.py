@@ -1,0 +1,55 @@
+"""Per-arch training policy + hlo-cost DCN attribution unit tests."""
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.launch.mesh import make_host_mesh
+from repro.launch.policy import train_policy
+from repro.utils.hlo_cost import _spans_pods
+
+
+def test_policy_big_archs_get_memory_policy():
+    mesh = make_host_mesh()
+    for arch in ("llama3-405b", "grok-1-314b"):
+        hp = train_policy(C.get_config(arch), mesh)
+        assert hp.cada_dtype == "bfloat16"
+        assert hp.moments_dtype == "bfloat16"
+        assert hp.microbatches >= 8
+        # single-pod fallback: the paper's own baseline
+        assert hp.rule.kind == "always"
+
+
+def test_policy_small_archs_keep_paper_protocol():
+    mesh = make_host_mesh()
+    hp = train_policy(C.get_config("internlm2-1.8b"), mesh)
+    assert hp.rule.kind == "cada2"
+    assert hp.cada_dtype == "float32"       # paper-faithful
+    assert hp.moments_dtype == "float32"
+
+
+def test_spans_pods_iota_format():
+    # 2 groups of 256 along pods: does NOT span
+    line = 'x = f32[4] all-reduce(%a), replica_groups=[2,256]<=[512]'
+    assert not _spans_pods(line, 256)
+    # 256 groups of 2 pairing i and i+256: spans
+    line2 = ('x = f32[4] all-reduce(%a), '
+             'replica_groups=[256,2]<=[2,256]T(1,0)')
+    assert _spans_pods(line2, 256)
+
+
+def test_spans_pods_explicit_format():
+    assert _spans_pods('replica_groups={{0,256},{1,257}}', 256)
+    assert not _spans_pods('replica_groups={{0,1},{2,3}}', 256)
+
+
+def test_multihost_bootstrap_noop_without_env(monkeypatch):
+    from repro.launch import multihost
+    monkeypatch.delenv("REPRO_COORDINATOR", raising=False)
+    assert multihost.bootstrap() is False
+
+
+def test_multihost_assert_fleet_fails_on_cpu():
+    import pytest as _pytest
+    from repro.launch import multihost
+    with _pytest.raises(RuntimeError):
+        multihost.assert_fleet("16x16")

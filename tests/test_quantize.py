@@ -1,0 +1,77 @@
+"""LAQ-style quantized innovations: quantizer properties + engine
+integration (beyond-paper feature)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import CADAEngine, make_sampler
+from repro.core.quantize import (per_worker_quantize_dequantize,
+                                 quantize_dequantize)
+from repro.core.rules import CommRule
+from repro.data.partition import pad_to_matrix, uniform_partition
+from repro.data.synthetic import ijcnn1_like
+from repro.models.small import logreg_init, logreg_loss
+from repro.optim.adam import adam
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), bits=st.integers(2, 16))
+def test_quantization_error_bound(seed, bits):
+    """|x − x̂| <= scale / (2^(b-1) − 1) / 2 per entry."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=64), jnp.float32)
+    xq = quantize_dequantize({"x": x}, bits)["x"]
+    bound = float(jnp.max(jnp.abs(x))) / (2 ** (bits - 1) - 1) / 2 + 1e-7
+    assert float(jnp.max(jnp.abs(x - xq))) <= bound
+
+
+def test_quantize_identity_cases(rng):
+    x = {"w": jnp.asarray(rng.normal(size=(8, 3)), jnp.float32)}
+    for bits in (0, 32):
+        out = quantize_dequantize(x, bits)
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(x["w"]))
+
+
+def test_per_worker_scales_independent(rng):
+    """A huge outlier in worker 0 must not destroy worker 1's resolution."""
+    x = jnp.stack([jnp.full((16,), 1000.0),
+                   jnp.linspace(-1, 1, 16)])
+    out = per_worker_quantize_dequantize({"g": x}, 8)["g"]
+    np.testing.assert_allclose(np.asarray(out[1]),
+                               np.asarray(x[1]), atol=0.01)
+
+
+def test_engine_with_quantized_innovations_converges():
+    m, iters = 8, 300
+    ds = ijcnn1_like(n=2000)
+    mtx = pad_to_matrix(uniform_partition(ds.n, m, 0))
+    sample = make_sampler(ds.x, ds.y, mtx, 32)
+    params = logreg_init(None, 22, 2)
+    out = {}
+    for bits in (0, 8, 4):
+        eng = CADAEngine(logreg_loss, adam(lr=0.02),
+                         CommRule(kind="cada2", c=0.6, d_max=10,
+                                  max_delay=100, quantize_bits=bits), m)
+        st = eng.init(params)
+        batches = jax.vmap(sample)(
+            jax.random.split(jax.random.PRNGKey(1), iters))
+        _, mets = jax.jit(eng.run)(st, batches)
+        out[bits] = (float(np.asarray(mets["loss"])[-20:].mean()),
+                     float(np.asarray(mets["bytes_up"]).sum()))
+    loss32, bytes32 = out[0]
+    loss8, bytes8 = out[8]
+    loss4, bytes4 = out[4]
+    assert loss8 < loss32 * 1.3          # 8-bit: near-lossless
+    assert loss4 < 0.15                  # 4-bit: converges (degraded)
+    assert bytes8 < bytes32 * 0.5        # and 4x fewer bytes at worst
+    assert bytes4 < bytes32 * 0.35
+
+
+def test_quantize_bits_validation():
+    with pytest.raises(ValueError):
+        CommRule(quantize_bits=1)
+    with pytest.raises(ValueError):
+        CommRule(quantize_bits=64)

@@ -1,0 +1,40 @@
+"""CommRule unit + hypothesis property tests."""
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.rules import RULES, CommRule
+
+
+def test_defaults_match_paper():
+    r = CommRule()
+    assert r.kind == "cada2"
+    assert r.d_max == 10      # paper: logreg d_max=10
+    assert r.max_delay == 50  # paper: NN D=50
+
+
+@pytest.mark.parametrize("kind", RULES)
+def test_valid_kinds(kind):
+    CommRule(kind=kind)
+
+
+def test_invalid_kind_raises():
+    with pytest.raises(ValueError):
+        CommRule(kind="bogus")
+
+
+@pytest.mark.parametrize("bad", [dict(c=-1.0), dict(d_max=0),
+                                 dict(max_delay=0)])
+def test_invalid_params_raise(bad):
+    with pytest.raises(ValueError):
+        CommRule(**bad)
+
+
+@given(kind=st.sampled_from(RULES),
+       c=st.floats(0.0, 100.0, allow_nan=False),
+       d_max=st.integers(1, 1000),
+       max_delay=st.integers(1, 1000))
+def test_rule_construction_total(kind, c, d_max, max_delay):
+    """Any in-domain hyper-parameter combination constructs, and the
+    grad-eval accounting matches §2.2 (2 evals for CADA, 1 otherwise)."""
+    r = CommRule(kind=kind, c=c, d_max=d_max, max_delay=max_delay)
+    assert r.grad_evals_per_iter == (2 if kind in ("cada1", "cada2") else 1)

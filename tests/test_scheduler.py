@@ -1,0 +1,70 @@
+"""Continuous-batching decode scheduler: request lifecycle, EOS, padding
+correctness vs single-request decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.distributed.scheduler import DecodeScheduler, Request
+from repro.models.model import decode_step, init_params, prefill
+
+
+def _setup(n_slots=2, max_seq=64):
+    cfg = C.get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params, DecodeScheduler(cfg, params, n_slots=n_slots,
+                                        max_seq=max_seq)
+
+
+def test_all_requests_complete():
+    cfg, params, sched = _setup(n_slots=2)
+    rng = np.random.default_rng(0)
+    for uid in range(5):
+        sched.submit(Request(uid=uid,
+                             prompt=rng.integers(0, cfg.vocab, 8,
+                                                 dtype=np.int32),
+                             max_new=6))
+    done = sched.run()
+    assert len(done) == 5
+    assert all(r.done and len(r.out) == 6 for r in done)
+
+
+def test_eos_stops_early():
+    cfg, params, sched = _setup(n_slots=1)
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab, 8, dtype=np.int32)
+    # find what the model greedily emits first, then use it as EOS
+    probe = Request(uid=0, prompt=prompt.copy(), max_new=1)
+    sched.submit(probe)
+    sched.run_round()
+    first = probe.out[0]
+    req = Request(uid=1, prompt=prompt.copy(), max_new=16, eos_id=first)
+    sched.submit(req)
+    sched.run_round()
+    assert req.out[0] == first and len(req.out) == 1
+
+
+def test_scheduler_matches_unbatched_decode():
+    """A request served in a mixed batch produces the same tokens as the
+    same request decoded alone (padding/slot isolation)."""
+    cfg, params, sched = _setup(n_slots=2, max_seq=64)
+    rng = np.random.default_rng(2)
+    p1 = rng.integers(0, cfg.vocab, 10, dtype=np.int32)
+    p2 = rng.integers(0, cfg.vocab, 10, dtype=np.int32)  # same length
+    r1 = Request(uid=0, prompt=p1, max_new=5)
+    r2 = Request(uid=1, prompt=p2, max_new=5)
+    sched.submit(r1)
+    sched.submit(r2)
+    sched.run()
+
+    # reference: decode r1 alone
+    logits, cache = jax.jit(lambda p, t: prefill(cfg, p, tokens=t,
+                                                 max_seq=64))(
+        params, jnp.asarray(p1)[None])
+    outs = []
+    nxt = jnp.argmax(logits, axis=-1)
+    for _ in range(5):
+        outs.append(int(nxt[0]))
+        logits, cache = decode_step(cfg, params, cache, tokens=nxt)
+        nxt = jnp.argmax(logits, axis=-1)
+    assert r1.out == outs

@@ -1,0 +1,147 @@
+"""Distributed (hierarchical-CADA) trainer: step semantics on the host mesh,
+rule equivalences, microbatch invariance, spec plumbing, local-update
+baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as C
+from repro.core.local_update import LocalUpdateEngine
+from repro.core.rules import CommRule
+from repro.distributed.trainer import (
+    DistTrainState, TrainHParams, init_train_state, jit_train_step,
+    make_train_step, train_state_specs, worker_split, worker_split_abstract,
+)
+from repro.launch.mesh import make_host_mesh
+
+CFG = C.get_smoke_config("internlm2-1.8b")
+
+
+def _batch(key, b=8, s=32):
+    return {"tokens": jax.random.randint(key, (b, s + 1), 0, CFG.vocab)}
+
+
+def _steps(kind, n=4, m=4, microbatches=1, c=0.5, seed=0, lr=1e-3):
+    hp = TrainHParams(rule=CommRule(kind=kind, c=c, d_max=4, max_delay=10),
+                      lr=lr, microbatches=microbatches)
+    step = make_train_step(CFG, hp, m)
+    st = init_train_state(CFG, hp, m, jax.random.PRNGKey(42))
+    step = jax.jit(step)
+    outs = []
+    for i in range(n):
+        batch = worker_split(_batch(jax.random.PRNGKey(seed + i)), m)
+        st, mets = step(st, batch)
+        outs.append(mets)
+    return st, outs
+
+
+@pytest.mark.parametrize("kind", ["always", "cada1", "cada2", "lag"])
+def test_step_runs_and_loss_finite(kind):
+    st, outs = _steps(kind, n=3)
+    for m in outs:
+        assert np.isfinite(float(m["loss"]))
+    assert int(st.step) == 3
+
+
+def test_cada2_c0_equals_always():
+    """c=0 ⇒ every pod uploads ⇒ trajectory == distributed AMSGrad."""
+    st_c, _ = _steps("cada2", n=3, c=0.0)
+    st_a, _ = _steps("always", n=3, c=0.0)
+    for a, b in zip(jax.tree.leaves(st_c.params),
+                    jax.tree.leaves(st_a.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-4)
+
+
+def test_microbatch_invariance():
+    """Gradient accumulation must not change the trajectory (same data)."""
+    st1, _ = _steps("always", n=2, microbatches=1)
+    st2, _ = _steps("always", n=2, microbatches=2)
+    for a, b in zip(jax.tree.leaves(st1.params),
+                    jax.tree.leaves(st2.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-4)
+
+
+def test_huge_c_skips_everything_after_warmup():
+    hp = TrainHParams(rule=CommRule(kind="cada2", c=1e12, d_max=4,
+                                    max_delay=100))
+    m = 4
+    step = jax.jit(make_train_step(CFG, hp, m))
+    st = init_train_state(CFG, hp, m, jax.random.PRNGKey(0))
+    st, mets0 = step(st, worker_split(_batch(jax.random.PRNGKey(1)), m))
+    assert int(mets0["uploads"]) == m  # staleness init forces round 0
+    st, mets1 = step(st, worker_split(_batch(jax.random.PRNGKey(2)), m))
+    assert int(mets1["uploads"]) == 0
+    assert float(mets1["skip_rate"]) == 1.0
+
+
+def test_worker_split_shapes():
+    b = {"tokens": jnp.zeros((8, 33), jnp.int32),
+         "positions": jnp.zeros((3, 8, 32), jnp.int32)}
+    out = worker_split(b, 4)
+    assert out["tokens"].shape == (4, 2, 33)
+    assert out["positions"].shape == (4, 3, 2, 32)
+    sds = worker_split_abstract(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), b), 4)
+    assert sds["positions"].shape == (4, 3, 2, 32)
+
+
+def test_state_specs_structure():
+    mesh = make_host_mesh()
+    hp = TrainHParams(rule=CommRule(kind="cada2"))
+    specs = train_state_specs(CFG, mesh, hp)
+    assert isinstance(specs, DistTrainState)
+    # per-worker trees lead with the worker axis
+    lead = jax.tree.leaves(specs.stale_grads,
+                           is_leaf=lambda x: isinstance(x, P))[0]
+    assert lead[0] == "data"
+    # 'always' drops all CADA state
+    specs_a = train_state_specs(CFG, mesh, TrainHParams(
+        rule=CommRule(kind="always")))
+    assert specs_a.stale_grads is None and specs_a.nabla is None
+
+
+def test_jit_train_step_on_host_mesh():
+    mesh = make_host_mesh()
+    hp = TrainHParams(rule=CommRule(kind="cada2", c=0.5, d_max=4,
+                                    max_delay=10), microbatches=2)
+    make, _, m = jit_train_step(CFG, mesh, hp)
+    batch = worker_split(_batch(jax.random.PRNGKey(0)), m)
+    sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                       batch)
+    with jax.set_mesh(mesh):
+        step = make(sds)
+        st = init_train_state(CFG, hp, m, jax.random.PRNGKey(0))
+        st, mets = step(st, batch)
+    assert np.isfinite(float(mets["loss"]))
+
+
+# --------------------------------------------------- local-update baselines
+
+def test_local_update_baselines_converge():
+    from repro.data.partition import pad_to_matrix, uniform_partition
+    from repro.data.synthetic import ijcnn1_like
+    from repro.core.engine import make_sampler
+    from repro.models.small import logreg_init, logreg_loss
+
+    ds = ijcnn1_like(n=1000)
+    mtx = pad_to_matrix(uniform_partition(ds.n, 4, 0))
+    sample = make_sampler(ds.x, ds.y, mtx, 16)
+    params = logreg_init(None, 22, 2)
+    for algo in ("local_momentum", "fedadam"):
+        eng = LocalUpdateEngine(logreg_loss, n_workers=4, h_period=5,
+                                algo=algo, lr=0.05, server_lr=0.05)
+        st = eng.init(params)
+        rngs = jax.random.split(jax.random.PRNGKey(0), 30 * 5)
+        batches = jax.vmap(sample)(rngs)
+        batches = jax.tree.map(
+            lambda x: x.reshape((30, 5) + x.shape[1:]), batches)
+        st, mets = jax.jit(eng.run)(st, batches)
+        losses = np.asarray(mets["loss"])  # (rounds, H)
+        assert losses[-1].mean() < losses[0].mean() * 0.8, algo
+        assert int(np.asarray(mets["uploads"]).sum()) == 30 * 4
