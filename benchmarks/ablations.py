@@ -7,6 +7,11 @@
   * averaging-period H sweep   — FedAdam / local momentum under H ∈
     {1, 8, 16} (paper supplementary Figs 6-7: larger H converges faster
     early but plateaus higher).
+  * rule-strategy sweep        — every strategy registered in
+    repro.core.comm (the four paper rules + beyond-paper ones such as the
+    compressed-innovation rule) at matched hyper-parameters: final loss vs
+    uploads vs bytes actually sent. New strategies appear here with no
+    benchmark change.
 """
 from __future__ import annotations
 
@@ -16,6 +21,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import run_engine_algo, save_rows
+from repro.core.comm import strategy_kinds
 from repro.core.engine import CADAEngine, make_sampler
 from repro.core.rules import CommRule
 from repro.data.partition import pad_to_matrix, uniform_partition
@@ -101,6 +107,33 @@ def sweep_bits(iters=400, bits_list=(0, 8, 4)) -> list[dict]:
     return rows
 
 
+def sweep_rules(iters=400) -> list[dict]:
+    """Every registered communication strategy on one problem: the
+    loss/uploads/bytes trade-off surface of the whole rule family."""
+    sample, params = _problem()
+    rows = []
+    for kind in strategy_kinds():
+        eng = CADAEngine(logreg_loss, adam(lr=0.01),
+                         CommRule(kind=kind, c=0.6, d_max=10,
+                                  max_delay=100), M)
+        st = eng.init(params)
+        batches = jax.vmap(sample)(
+            jax.random.split(jax.random.PRNGKey(1), iters))
+        _, mets = jax.jit(eng.run)(st, batches)
+        rows.append({
+            "sweep": "rule", "rule": kind,
+            "final_loss": float(np.asarray(mets["loss"])[-20:].mean()),
+            "skip_rate": float(np.asarray(mets["skip_rate"]).mean()),
+            "uploads": int(np.asarray(mets["uploads"]).sum()),
+            "mbytes_up": float(np.asarray(mets["bytes_up"]).sum() / 1e6),
+            "grad_evals": int(np.asarray(mets["grad_evals"]).sum()),
+        })
+        print(f"  rule={kind:7s} loss={rows[-1]['final_loss']:.4f} "
+              f"skip={rows[-1]['skip_rate']:.2f} "
+              f"upload={rows[-1]['mbytes_up']:.3f} MB")
+    return rows
+
+
 def sweep_H(iters=400, hs=(1, 8, 16)) -> list[dict]:
     sample, params = _problem()
     rows = []
@@ -125,7 +158,8 @@ def main() -> None:
     p.add_argument("--iters", type=int, default=400)
     args = p.parse_args()
     rows = (sweep_c(args.iters) + sweep_D(args.iters)
-            + sweep_bits(args.iters) + sweep_H(args.iters))
+            + sweep_bits(args.iters) + sweep_rules(args.iters)
+            + sweep_H(args.iters))
     # paper supplement claims, asserted:
     c_rows = [r for r in rows if r["sweep"] == "c"]
     assert c_rows[0]["skip_rate"] < 0.02          # c=0 => no skipping

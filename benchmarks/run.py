@@ -3,19 +3,77 @@ benches. Prints a CSV summary and writes per-bench JSON under results/.
 
   python -m benchmarks.run            # fast settings (CI-sized)
   python -m benchmarks.run --full     # paper-sized iteration counts
+  python -m benchmarks.run --only cada   # just the BENCH_cada.json tracker
+
+Every run also refreshes ``BENCH_cada.json`` (steps/sec of the jitted
+engine + uploads saved by CADA2 vs distributed Adam on the logreg problem)
+so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+BENCH_PATH = "BENCH_cada.json"
+
+
+def bench_cada(iters: int = 300) -> dict:
+    """Headline perf numbers: engine throughput and communication saved,
+    logreg-CADA2 vs always (distributed Adam), matched hyper-parameters."""
+    import jax
+    import numpy as np
+
+    from repro.core.engine import CADAEngine, make_sampler
+    from repro.core.rules import CommRule
+    from repro.data.partition import pad_to_matrix, uniform_partition
+    from repro.data.synthetic import ijcnn1_like
+    from repro.models.small import logreg_init, logreg_loss
+    from repro.optim.adam import adam
+
+    m = 10
+    ds = ijcnn1_like(n=4000)
+    mtx = pad_to_matrix(uniform_partition(ds.n, m, seed=0))
+    sample = make_sampler(ds.x, ds.y, mtx, 32)
+    params = logreg_init(None, 22, 2)
+    out = {"iters": iters, "workers": m}
+    for kind in ("always", "cada2"):
+        eng = CADAEngine(logreg_loss, adam(lr=0.01),
+                         CommRule(kind=kind, c=0.6, d_max=10,
+                                  max_delay=100), m)
+        st = eng.init(params)
+        batches = jax.vmap(sample)(
+            jax.random.split(jax.random.PRNGKey(1), iters))
+        run = jax.jit(eng.run)
+        st1, mets = run(st, batches)          # compile + first run
+        jax.block_until_ready(st1.params)
+        t0 = time.time()
+        st2, mets = run(st, batches)          # timed steady-state run
+        jax.block_until_ready(st2.params)
+        dt = time.time() - t0
+        out[kind] = {
+            "steps_per_sec": round(iters / dt, 1),
+            "final_loss": float(np.asarray(mets["loss"])[-20:].mean()),
+            "uploads": int(np.asarray(mets["uploads"]).sum()),
+            "mbytes_up": float(np.asarray(mets["bytes_up"]).sum() / 1e6),
+        }
+    out["uploads_saved_frac"] = round(
+        1.0 - out["cada2"]["uploads"] / out["always"]["uploads"], 3)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[cada] {out['cada2']['steps_per_sec']} steps/s, "
+          f"{out['uploads_saved_frac']:.0%} uploads saved "
+          f"-> {BENCH_PATH}", file=sys.stderr)
+    return out
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma-list: logreg,nn,lag,hier,roofline")
+                    help="comma-list: logreg,nn,lag,hier,ablations,"
+                         "roofline,cada")
     args = ap.parse_args()
     full = args.full
     only = set(args.only.split(",")) if args.only else None
@@ -26,6 +84,12 @@ def main() -> None:
         r = dict(r)
         r["bench"] = bench
         rows.append(r)
+
+    if only is None or "cada" in only:
+        b = bench_cada(iters=600 if full else 300)
+        for kind in ("always", "cada2"):
+            emit("bench_cada(BENCH_cada.json)",
+                 {"rule": kind, **b[kind]})
 
     if only is None or "logreg" in only:
         from benchmarks import paper_logreg
@@ -59,7 +123,9 @@ def main() -> None:
         from benchmarks import ablations
         iters = 600 if full else 300
         for r in (ablations.sweep_c(iters) + ablations.sweep_D(iters)
-                  + ablations.sweep_bits(iters) + ablations.sweep_H(iters)):
+                  + ablations.sweep_bits(iters)
+                  + ablations.sweep_rules(iters)
+                  + ablations.sweep_H(iters)):
             emit("ablations(supplement)", r)
 
     if only is None or "roofline" in only:

@@ -15,6 +15,10 @@ def __getattr__(name):  # lazy: importing repro must not touch jax devices
     if name in ("CommRule",):
         from repro.core.rules import CommRule
         return CommRule
+    if name in ("CommStrategy", "strategy_for", "strategy_kinds",
+                "register"):
+        from repro.core import comm
+        return getattr(comm, name)
     if name in ("CADAEngine",):
         from repro.core.engine import CADAEngine
         return CADAEngine

@@ -1,5 +1,12 @@
 """The paper's primary contribution: CADA rules, server/worker engine, and
-the per-iteration / local-update baselines it is benchmarked against."""
+the per-iteration / local-update baselines it is benchmarked against.
+
+The per-rule behaviour lives in the strategy layer (``repro.core.comm``);
+``CADAEngine`` and the pod trainer both run the same ``comm_round`` core.
+"""
+from repro.core.comm import (CommState, CommStrategy, comm_round,
+                             init_comm_state, record_progress, register,
+                             strategy_for, strategy_kinds)
 from repro.core.engine import CADAEngine, EngineState, make_sampler
 from repro.core.local_update import LocalState, LocalUpdateEngine
 from repro.core.rules import RULES, CommRule
@@ -8,4 +15,6 @@ __all__ = [
     "CADAEngine", "EngineState", "make_sampler",
     "LocalUpdateEngine", "LocalState",
     "CommRule", "RULES",
+    "CommState", "CommStrategy", "comm_round", "init_comm_state",
+    "record_progress", "register", "strategy_for", "strategy_kinds",
 ]

@@ -1,0 +1,460 @@
+"""Pluggable communication-rule layer: ONE Algorithm-1 core for every engine.
+
+This module owns everything about the paper's adaptive-communication round
+that is independent of where it runs. Both the reference engine
+(``core/engine.py``, vmap-simulated workers) and the pod trainer
+(``distributed/trainer.py``, mesh runtime) consume :func:`comm_round`;
+neither carries per-rule branches anymore.
+
+Split of responsibility:
+
+  * a :class:`CommStrategy` subclass owns what is SPECIFIC to one rule —
+    its extra state slices (:meth:`init_extras` / :meth:`extras_specs`),
+    its LHS given fresh gradients (:meth:`lhs`), its post-upload state
+    transition (:meth:`post_upload`), its wire format
+    (:meth:`transform_delta`), and its grad-evals/bytes accounting;
+  * :func:`comm_round` owns what every rule shares — the RHS ring buffer
+    of recent server progress, the max-staleness override, the eq. (3)
+    innovation aggregation with the quantize hook, and the upload metrics.
+
+Paper equation ↔ class mapping:
+
+  ==========  =======================  ====================================
+  eq. (5)     :class:`LAGStrategy`     naive stochastic LAG (§2.1 baseline)
+  eq. (7)     :class:`CADA1Strategy`   SVRG-style snapshot innovation
+  eq. (10)    :class:`CADA2Strategy`   same-sample two-iterate difference
+  —           :class:`AlwaysStrategy`  threshold never satisfied ⇒ Adam
+  beyond      :class:`CompressedInnovationStrategy`  quantized-innovation
+  paper                                gating (LAQ / arXiv 2111.00705 style)
+  ==========  =======================  ====================================
+
+Adding a rule is a one-class change: subclass :class:`CommStrategy`,
+decorate with :func:`register`, and every engine, launcher, policy, and
+benchmark picks it up through :func:`strategy_for` / :func:`strategy_kinds`.
+
+All math here is dtype-polymorphic: computation happens in fp32, storage
+follows the dtypes of the incoming state trees (the pod trainer stores
+stale trees in bf16 — the cast point IS the wire format of the gated
+cross-pod collective).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import per_worker_quantize_dequantize
+from repro.core.rules import CommRule
+from repro.utils.trees import tree_size
+
+
+# ------------------------------------------------------------------ state
+
+class CommState(NamedTuple):
+    """The rule-agnostic communication state of Algorithm 1.
+
+    ``extras`` is the strategy-owned slice dict (e.g. CADA1's snapshot θ̃
+    and stored innovation δ̃; CADA2's per-worker θ^{k−τ_m}); engines treat
+    it as an opaque pytree.
+    """
+    nabla: Any               # ∇^{k-1}: aggregated stale gradient (eq. 3)
+    worker_grads: Any        # per-worker last contributed ∇ℓ(θ̂_m;ξ̂_m)
+    staleness: jnp.ndarray   # τ_m, (M,) int32
+    diff_hist: jnp.ndarray   # (d_max,) ring buffer of ||θ^{k+1-d}−θ^{k-d}||²
+    extras: dict             # strategy-owned per-rule slices
+
+
+class CommContext(NamedTuple):
+    """Everything a strategy may consult when computing its LHS/transition.
+
+    ``vgrad(params, batch) -> (losses, grads)`` evaluates per-worker
+    gradients of broadcast params; ``vgrad_per`` takes an (M,)-leading
+    params tree. Both are supplied by the engine (vmap or pod shard_map).
+    """
+    params: Any
+    batch: Any
+    fresh: Any               # per-worker fresh gradients at θ^k, fp32
+    comm: CommState
+    step: jnp.ndarray
+    m: int
+    vgrad: Callable
+    vgrad_per: Callable
+
+
+class CommRoundResult(NamedTuple):
+    losses: jnp.ndarray      # (M,) per-worker losses at θ^k
+    comm: CommState          # post-round state (diff_hist NOT yet updated —
+    #                          call record_progress with ||Δθ||² after the
+    #                          server update)
+    upload: jnp.ndarray      # (M,) bool upload mask
+    metrics: dict
+
+
+# ------------------------------------------------------------ tree helpers
+
+def per_worker_sq_norm(tree) -> jnp.ndarray:
+    """(M,) squared norms of an M-leading pytree, accumulated in fp32."""
+    tot = 0.0
+    for leaf in jax.tree.leaves(tree):
+        axes = tuple(range(1, leaf.ndim))
+        tot = tot + jnp.sum(jnp.square(leaf.astype(jnp.float32)), axis=axes)
+    return tot
+
+
+def select_rows(mask, new, old):
+    """Per-worker select: rows of ``new`` where ``mask``, else ``old``
+    (result keeps ``old``'s storage dtype)."""
+    def leaf(n, o):
+        mm = mask.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(mm, n.astype(o.dtype), o)
+    return jax.tree.map(leaf, new, old)
+
+
+def broadcast_to_workers(tree, m: int):
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), tree)
+
+
+def _f32(tree):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), tree)
+
+
+# -------------------------------------------------------------- strategies
+
+class CommStrategy:
+    """Base class: one instance per (rule hyper-params, kind) pair.
+
+    Subclasses override the four rule-specific concerns. The base class
+    implements the pieces most rules share: no extra state, the LAQ-style
+    optional quantization of the uploaded innovation, 32-bit uploads, and
+    one gradient evaluation per iteration.
+    """
+
+    kind: str = "?"
+    #: worker-side gradient evaluations per iteration (paper §2.2)
+    grad_evals_per_iter: int = 1
+    #: True ⇒ the rule keeps NO innovation state (engines may drop the
+    #: whole CommState and run the lean distributed-baseline path)
+    stateless: bool = False
+
+    def __init__(self, rule: CommRule):
+        self.rule = rule
+
+    # ---- state slices
+    def init_extras(self, params, m: int, make_grad_zeros, bcast) -> dict:
+        """Strategy-owned state. ``make_grad_zeros()`` returns a gradient-
+        shaped zero tree in the engine's comm storage dtype; ``bcast(t, m)``
+        prepends the worker axis."""
+        del params, m, make_grad_zeros, bcast
+        return {}
+
+    def extras_specs(self, param_spec, worker_param_spec,
+                     worker_grad_spec) -> dict:
+        """PartitionSpec tree matching :meth:`init_extras` (pod trainer)."""
+        del param_spec, worker_param_spec, worker_grad_spec
+        return {}
+
+    # ---- per-round hooks
+    def pre_step(self, extras: dict, params, k) -> dict:
+        """Start-of-iteration transition (e.g. CADA1 snapshot refresh)."""
+        del params, k
+        return extras
+
+    def lhs(self, ctx: CommContext, extras: dict):
+        """Rule LHS given fresh gradients: returns ((M,) lhs, cache).
+
+        ``cache`` is handed back to :meth:`post_upload` so work computed
+        for the LHS (e.g. CADA1's fresh innovation) is not redone.
+        """
+        raise NotImplementedError
+
+    def post_upload(self, extras: dict, cache, upload, ctx: CommContext
+                    ) -> dict:
+        """State transition after the upload mask is known."""
+        del cache, upload, ctx
+        return extras
+
+    def transform_delta(self, delta):
+        """Wire format of the uploaded innovation δ_m (quantize hook).
+
+        Both sides apply the same round-trip so the server's stale worker
+        copies stay exactly in sync with what each worker transmitted.
+        """
+        if self.rule.quantize_bits:
+            return per_worker_quantize_dequantize(
+                delta, self.rule.quantize_bits)
+        return delta
+
+    # ---- accounting
+    @property
+    def bits_per_entry(self) -> int:
+        return self.rule.quantize_bits or 32
+
+    def bytes_per_upload(self, n_params: int) -> float:
+        return n_params * self.bits_per_entry / 8.0
+
+
+STRATEGIES: dict[str, type[CommStrategy]] = {}
+
+
+def register(cls: type[CommStrategy]) -> type[CommStrategy]:
+    STRATEGIES[cls.kind] = cls
+    return cls
+
+
+def strategy_kinds() -> tuple[str, ...]:
+    return tuple(STRATEGIES)
+
+
+def strategy_for(rule: CommRule) -> CommStrategy:
+    try:
+        return STRATEGIES[rule.kind](rule)
+    except KeyError:
+        raise ValueError(
+            f"no communication strategy registered for kind={rule.kind!r}; "
+            f"known: {strategy_kinds()}") from None
+
+
+@register
+class AlwaysStrategy(CommStrategy):
+    """Threshold never satisfied ⇒ plain distributed Adam/AMSGrad."""
+    kind = "always"
+    stateless = True
+
+    def lhs(self, ctx, extras):
+        return jnp.full((ctx.m,), jnp.inf, jnp.float32), None
+
+
+@register
+class LAGStrategy(CommStrategy):
+    """Eq. (5): naive stochastic LAG — LHS compares gradients drawn at
+    DIFFERENT samples, so its variance never vanishes (§2.1 shows it stops
+    skipping late in training; reproduced as a baseline)."""
+    kind = "lag"
+
+    def lhs(self, ctx, extras):
+        diff = jax.tree.map(
+            lambda f, s: f.astype(jnp.float32) - s.astype(jnp.float32),
+            ctx.fresh, ctx.comm.worker_grads)
+        return per_worker_sq_norm(diff), None
+
+
+@register
+class CADA1Strategy(CommStrategy):
+    """Eq. (7): SVRG-style innovation vs. a snapshot θ̃ refreshed every D
+    iterations — LHS is ||δ̃_m^k − δ̃_m^{k−τ}||² with
+    δ̃_m = ∇ℓ(θ^k;ξ) − ∇ℓ(θ̃;ξ) evaluated at the SAME sample."""
+    kind = "cada1"
+    grad_evals_per_iter = 2
+
+    def init_extras(self, params, m, make_grad_zeros, bcast):
+        return {"snapshot": params,
+                "worker_delta": bcast(make_grad_zeros(), m)}
+
+    def extras_specs(self, param_spec, worker_param_spec, worker_grad_spec):
+        return {"snapshot": param_spec, "worker_delta": worker_grad_spec}
+
+    def pre_step(self, extras, params, k):
+        refresh = (k % self.rule.max_delay) == 0
+        snapshot = jax.tree.map(
+            lambda s, p: jnp.where(refresh, p, s),
+            extras["snapshot"], params)
+        return {**extras, "snapshot": snapshot}
+
+    def lhs(self, ctx, extras):
+        _, snap_grads = ctx.vgrad(extras["snapshot"], ctx.batch)
+        delta_fresh = jax.tree.map(
+            lambda f, g: f.astype(jnp.float32) - g.astype(jnp.float32),
+            ctx.fresh, snap_grads)
+        diff = jax.tree.map(
+            lambda a, b: a - b.astype(jnp.float32),
+            delta_fresh, extras["worker_delta"])
+        return per_worker_sq_norm(diff), delta_fresh
+
+    def post_upload(self, extras, delta_fresh, upload, ctx):
+        return {**extras,
+                "worker_delta": select_rows(upload, delta_fresh,
+                                            extras["worker_delta"])}
+
+
+@register
+class CADA2Strategy(CommStrategy):
+    """Eq. (10): same-sample two-iterate difference — LHS is
+    ||∇ℓ(θ^k;ξ_m^k) − ∇ℓ(θ^{k−τ_m};ξ_m^k)||², each worker re-evaluating
+    its CURRENT sample at its last-communicated iterate."""
+    kind = "cada2"
+    grad_evals_per_iter = 2
+
+    def init_extras(self, params, m, make_grad_zeros, bcast):
+        return {"worker_params": bcast(params, m)}
+
+    def extras_specs(self, param_spec, worker_param_spec, worker_grad_spec):
+        return {"worker_params": worker_param_spec}
+
+    def lhs(self, ctx, extras):
+        _, stale_now = ctx.vgrad_per(extras["worker_params"], ctx.batch)
+        diff = jax.tree.map(
+            lambda f, g: f.astype(jnp.float32) - g.astype(jnp.float32),
+            ctx.fresh, stale_now)
+        return per_worker_sq_norm(diff), None
+
+    def post_upload(self, extras, cache, upload, ctx):
+        return {**extras,
+                "worker_params": select_rows(
+                    upload, broadcast_to_workers(ctx.params, ctx.m),
+                    extras["worker_params"])}
+
+
+@register
+class CompressedInnovationStrategy(CommStrategy):
+    """Beyond-paper: compressed-innovation gating (the rule family of LAQ
+    [Sun et al., 2019] and *Communication-Compressed Adaptive Gradient
+    Method* (arXiv 2111.00705)).
+
+    The worker forms its innovation δ_m = ∇ℓ(θ^k;ξ_m^k) − θ̂-contribution,
+    quantizes it to ``quantize_bits`` (default 8) — the b-bit code IS what
+    would ride the wire — and uploads only when the quantized innovation
+    carries enough energy relative to recent server progress:
+    ||Q_b(δ_m)||² > RHS. One gradient evaluation per iteration (the stale
+    term is the stored contribution, no re-evaluation), and uploads are
+    accounted at b bits per entry.
+    """
+    kind = "cinn"
+
+    @property
+    def bits_per_entry(self) -> int:
+        return self.rule.quantize_bits or 8
+
+    def transform_delta(self, delta):
+        return per_worker_quantize_dequantize(delta, self.bits_per_entry)
+
+    def lhs(self, ctx, extras):
+        innovation = jax.tree.map(
+            lambda f, s: f.astype(jnp.float32) - s.astype(jnp.float32),
+            ctx.fresh, ctx.comm.worker_grads)
+        q = per_worker_quantize_dequantize(innovation, self.bits_per_entry)
+        return per_worker_sq_norm(q), None
+
+
+# ----------------------------------------------------------- shared round
+
+def init_comm_state(strategy: CommStrategy, params, m: int,
+                    grad_dtype=None) -> CommState:
+    """Fresh CommState: τ_m starts at D so iteration 0 uploads everywhere.
+
+    ``grad_dtype`` is the storage dtype of gradient-shaped comm state
+    (None ⇒ follow the param dtypes; the pod trainer passes bf16 here for
+    the 314B/405B memory policy).
+    """
+    r = strategy.rule
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, grad_dtype or p.dtype), params)
+    extras = strategy.init_extras(params, m, lambda: zeros,
+                                  broadcast_to_workers)
+    return CommState(
+        nabla=zeros,
+        worker_grads=broadcast_to_workers(zeros, m),
+        staleness=jnp.full((m,), r.max_delay, jnp.int32),
+        diff_hist=jnp.zeros((r.d_max,), jnp.float32),
+        extras=extras,
+    )
+
+
+def comm_state_specs(strategy: CommStrategy, param_spec, worker_param_spec,
+                     grad_spec, worker_grad_spec, scalar_spec) -> CommState:
+    """CommState-shaped PartitionSpec tree (pod trainer)."""
+    return CommState(
+        nabla=grad_spec,
+        worker_grads=worker_grad_spec,
+        staleness=scalar_spec,
+        diff_hist=scalar_spec,
+        extras=strategy.extras_specs(param_spec, worker_param_spec,
+                                     worker_grad_spec),
+    )
+
+
+def comm_round(strategy: CommStrategy, comm: CommState, params, batch, k,
+               *, vgrad, vgrad_per=None) -> CommRoundResult:
+    """One rule-agnostic communication round of Algorithm 1 (lines 4-15).
+
+    The caller supplies the gradient evaluators and afterwards applies the
+    server update (lines 16-17) to ``result.comm.nabla``, then records the
+    progress scalar via :func:`record_progress`.
+    """
+    r = strategy.rule
+    m = comm.staleness.shape[0]
+
+    # Line 4 (rule-owned): e.g. CADA1 snapshot refresh every D iterations.
+    extras = strategy.pre_step(comm.extras, params, k)
+
+    # Lines 6/8: fresh stochastic gradients at θ^k (all rules).
+    losses, fresh = vgrad(params, batch)
+    ctx = CommContext(params=params, batch=batch, fresh=fresh,
+                      comm=comm._replace(extras=extras), step=k, m=m,
+                      vgrad=vgrad, vgrad_per=vgrad_per)
+
+    # Lines 7/9: rule LHS vs the shared recent-progress RHS.
+    lhs, cache = strategy.lhs(ctx, extras)
+    rhs = (r.c / r.d_max) * jnp.sum(comm.diff_hist)
+    # Line 10: upload if the condition is VIOLATED or staleness capped.
+    upload = (lhs > rhs) | (comm.staleness >= r.max_delay)
+
+    # Eq. (3): server refines ∇ with the uploaded innovations δ_m. The
+    # strategy's wire format (quantize hook) is applied to δ BEFORE both
+    # the server aggregate and the worker stale copy, so the two sides
+    # stay exactly in sync; the cast to the stale-tree storage dtype is
+    # the cross-worker wire dtype (bf16 halves DCN bytes on the pod mesh).
+    delta = jax.tree.map(
+        lambda f, s: f.astype(jnp.float32) - s.astype(jnp.float32),
+        fresh, comm.worker_grads)
+    delta = strategy.transform_delta(delta)
+    zeros = jax.tree.map(jnp.zeros_like, delta)
+    wire = jax.tree.map(
+        lambda d, s: d.astype(s.dtype),
+        select_rows(upload, delta, zeros), comm.worker_grads)
+    nabla = jax.tree.map(
+        lambda n, d: (n.astype(jnp.float32)
+                      + jnp.mean(d.astype(jnp.float32), axis=0)
+                      ).astype(n.dtype),
+        comm.nabla, wire)
+    worker_grads = jax.tree.map(
+        lambda s, d: (s.astype(jnp.float32) + d.astype(jnp.float32)
+                      ).astype(s.dtype),
+        comm.worker_grads, wire)
+
+    staleness = jnp.where(upload, 1, comm.staleness + 1)
+    extras = strategy.post_upload(extras, cache, upload, ctx)
+
+    uploads = jnp.sum(upload.astype(jnp.int32))
+    metrics = {
+        "uploads": uploads,
+        "skip_rate": 1.0 - uploads.astype(jnp.float32) / m,
+        "upload_mask": upload,
+        "staleness": staleness,
+        "rhs": rhs,
+        "mean_lhs": jnp.mean(jnp.where(jnp.isfinite(lhs), lhs, 0.0)),
+        "max_staleness": jnp.max(staleness),
+        "grad_evals": jnp.asarray(m * strategy.grad_evals_per_iter,
+                                  jnp.int32),
+        "bytes_up": (uploads.astype(jnp.float32)
+                     * strategy.bytes_per_upload(tree_size(params))),
+    }
+    new_comm = CommState(nabla=nabla, worker_grads=worker_grads,
+                         staleness=staleness, diff_hist=comm.diff_hist,
+                         extras=extras)
+    return CommRoundResult(losses=losses, comm=new_comm, upload=upload,
+                           metrics=metrics)
+
+
+def record_progress(comm: CommState, dtheta_sq, k) -> CommState:
+    """Push ||θ^{k+1} − θ^k||² into the RHS ring buffer (line 17's tail)."""
+    d_max = comm.diff_hist.shape[0]
+    diff_hist = jax.lax.dynamic_update_index_in_dim(
+        comm.diff_hist, dtheta_sq.astype(jnp.float32), k % d_max, axis=0)
+    return comm._replace(diff_hist=diff_hist)
+
+
+def nabla_f32(comm: CommState):
+    """The server-update driver ∇^k in fp32 (line 16's input)."""
+    return _f32(comm.nabla)

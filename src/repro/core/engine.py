@@ -6,11 +6,18 @@ gradients are a ``vmap`` over the worker axis, so the same code runs on one
 CPU (paper experiments) or sharded (see `repro.distributed` for the
 mesh/pod-level runtime).
 
-The engine is a pure ``(state, batch) -> (state, metrics)`` step, jittable and
-scannable. Communication is *accounted* exactly as the paper counts it: one
-"upload" per worker per iteration in which the rule fires (|M^k| uploads at
-iteration k), and two gradient evaluations per iteration per worker for
-CADA1/2, one otherwise.
+The engine keeps ONLY the vmap/scan harness and the server optimizer; the
+entire communication round (rule LHS/RHS, staleness cap, eq. 3 innovation
+aggregation, quantize hook, accounting) is :func:`repro.core.comm.comm_round`
+— the SAME core the pod trainer consumes, so the two cannot drift. Per-rule
+behaviour lives in the :mod:`repro.core.comm` strategy objects; this module
+contains no rule dispatch.
+
+The engine is a pure ``(state, batch) -> (state, metrics)`` step, jittable
+and scannable. Communication is *accounted* exactly as the paper counts it:
+one "upload" per worker per iteration in which the rule fires (|M^k| uploads
+at iteration k), and per-rule gradient evaluations (2 for CADA1/2, 1
+otherwise) as reported by the strategy.
 """
 from __future__ import annotations
 
@@ -20,45 +27,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantize import per_worker_quantize_dequantize
+from repro.core.comm import (CommState, comm_round, init_comm_state,
+                             nabla_f32, record_progress, strategy_for)
 from repro.core.rules import CommRule
 from repro.optim.base import Optimizer, apply_updates
-from repro.utils.trees import tree_size, tree_sq_norm
+from repro.utils.trees import tree_sq_norm
 
 
 class EngineState(NamedTuple):
     step: jnp.ndarray            # k
     params: Any                  # θ^k (server copy)
     opt_state: Any               # Adam/AMSGrad moments {h, v, v̂}
-    nabla: Any                   # ∇^{k-1}: aggregated stale gradient (eq. 3)
-    worker_grads: Any            # per-worker last contributed ∇ℓ(θ̂_m;ξ̂_m)
-    staleness: jnp.ndarray       # τ_m, (M,)
-    diff_hist: jnp.ndarray       # ring buffer of ||θ^{k+1-d}−θ^{k-d}||²
-    snapshot: Any                # θ̃ (CADA1) else None
-    worker_delta: Any            # stored δ̃_m^{k−τ} (CADA1) else None
-    worker_params: Any           # θ^{k−τ_m} per worker (CADA2) else None
-
-
-def _per_worker_sq_norm(tree) -> jnp.ndarray:
-    """(M,) squared norms of an M-leading pytree."""
-    leaves = jax.tree.leaves(tree)
-    tot = 0.0
-    for leaf in leaves:
-        axes = tuple(range(1, leaf.ndim))
-        tot = tot + jnp.sum(jnp.square(leaf.astype(jnp.float32)), axis=axes)
-    return tot
-
-
-def _select_rows(mask, new, old):
-    def leaf(n, o):
-        m = mask.reshape((-1,) + (1,) * (n.ndim - 1))
-        return jnp.where(m, n, o)
-    return jax.tree.map(leaf, new, old)
-
-
-def _broadcast_to_workers(tree, m):
-    return jax.tree.map(
-        lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), tree)
+    comm: CommState              # Algorithm-1 communication state
 
 
 class CADAEngine:
@@ -68,7 +48,7 @@ class CADAEngine:
       loss_fn: scalar loss ``loss_fn(params, (x, y))`` for ONE worker batch.
       optimizer: the server optimizer (paper: AMSGrad-form Adam). The LAG
         baseline is usually paired with plain SGD, as in the paper.
-      rule: the communication rule (cada1 / cada2 / lag / always).
+      rule: the communication rule (any kind registered in core/comm.py).
       n_workers: M.
     """
 
@@ -77,126 +57,40 @@ class CADAEngine:
         self.loss_fn = loss_fn
         self.optimizer = optimizer
         self.rule = rule
+        self.strategy = strategy_for(rule)
         self.m = n_workers
         self._vgrad = jax.vmap(jax.value_and_grad(loss_fn),
                                in_axes=(None, 0))
-        self._vgrad_per_params = jax.vmap(jax.grad(loss_fn),
-                                          in_axes=(0, 0))
+        self._vgrad_per = jax.vmap(jax.value_and_grad(loss_fn),
+                                   in_axes=(0, 0))
 
     # ------------------------------------------------------------- state
     def init(self, params) -> EngineState:
-        r = self.rule
-        zeros_like_params = jax.tree.map(jnp.zeros_like, params)
-        wzeros = _broadcast_to_workers(zeros_like_params, self.m)
         return EngineState(
             step=jnp.zeros([], jnp.int32),
             params=params,
             opt_state=self.optimizer.init(params),
-            nabla=zeros_like_params,
-            worker_grads=wzeros,
-            # τ_m initialized to D so that iteration 0 uploads everywhere.
-            staleness=jnp.full((self.m,), r.max_delay, jnp.int32),
-            diff_hist=jnp.zeros((r.d_max,), jnp.float32),
-            snapshot=params if r.kind == "cada1" else None,
-            worker_delta=wzeros if r.kind == "cada1" else None,
-            worker_params=(_broadcast_to_workers(params, self.m)
-                           if r.kind == "cada2" else None),
+            comm=init_comm_state(self.strategy, params, self.m),
         )
 
     # -------------------------------------------------------------- step
     def step(self, state: EngineState, batch) -> tuple[EngineState, dict]:
         """One iteration of Algorithm 1. ``batch`` has leading axis M."""
-        r = self.rule
         k = state.step
 
-        # Line 4: refresh the CADA1 snapshot every D iterations.
-        snapshot = state.snapshot
-        if r.kind == "cada1":
-            refresh = (k % r.max_delay) == 0
-            snapshot = jax.tree.map(
-                lambda s, p: jnp.where(refresh, p, s), snapshot, state.params)
-
-        # Lines 6/8: fresh stochastic gradients at θ^k (all rules).
-        losses, fresh = self._vgrad(state.params, batch)
-
-        # Rule LHS (lines 7/9).
-        worker_delta_fresh = None
-        if r.kind == "cada1":
-            snap_grads = jax.vmap(jax.grad(self.loss_fn), in_axes=(None, 0))(
-                snapshot, batch)
-            worker_delta_fresh = jax.tree.map(
-                jnp.subtract, fresh, snap_grads)
-            lhs = _per_worker_sq_norm(jax.tree.map(
-                jnp.subtract, worker_delta_fresh, state.worker_delta))
-        elif r.kind == "cada2":
-            stale_grads = self._vgrad_per_params(state.worker_params, batch)
-            lhs = _per_worker_sq_norm(jax.tree.map(
-                jnp.subtract, fresh, stale_grads))
-        elif r.kind == "lag":
-            lhs = _per_worker_sq_norm(jax.tree.map(
-                jnp.subtract, fresh, state.worker_grads))
-        else:  # always — distributed Adam: force the rule to fire.
-            lhs = jnp.full((self.m,), jnp.inf, jnp.float32)
-
-        rhs = (r.c / r.d_max) * jnp.sum(state.diff_hist)
-        # Line 10: upload if the condition is VIOLATED or staleness capped.
-        upload = (lhs > rhs) | (state.staleness >= r.max_delay)
-
-        # Eq. (3): server refines the aggregated stale gradient with the
-        # uploaded innovations δ_m. With quantize_bits set, δ_m is the
-        # b-bit LAQ-style round trip and BOTH sides apply the same value,
-        # so the server's worker copies stay exactly in sync.
-        delta = jax.tree.map(jnp.subtract, fresh, state.worker_grads)
-        if r.quantize_bits:
-            delta = per_worker_quantize_dequantize(delta, r.quantize_bits)
-        zeros = jax.tree.map(jnp.zeros_like, delta)
-        masked_delta = _select_rows(upload, delta, zeros)
-        nabla = jax.tree.map(
-            lambda n, d: n + jnp.mean(d, axis=0), state.nabla,
-            masked_delta)
-
-        worker_grads = jax.tree.map(jnp.add, state.worker_grads,
-                                    masked_delta)
-        staleness = jnp.where(upload, 1, state.staleness + 1)
-        worker_delta = state.worker_delta
-        if r.kind == "cada1":
-            worker_delta = _select_rows(upload, worker_delta_fresh,
-                                        state.worker_delta)
-        worker_params = state.worker_params
-        if r.kind == "cada2":
-            worker_params = _select_rows(
-                upload, _broadcast_to_workers(state.params, self.m),
-                state.worker_params)
+        # Lines 4-15: the shared communication round.
+        out = comm_round(self.strategy, state.comm, state.params, batch, k,
+                         vgrad=self._vgrad, vgrad_per=self._vgrad_per)
 
         # Lines 16-17: server Adam update driven by ∇^k (eqs. 2a-2c).
         updates, opt_state = self.optimizer.update(
-            nabla, state.opt_state, state.params)
+            nabla_f32(out.comm), state.opt_state, state.params)
         params = apply_updates(state.params, updates)
+        comm = record_progress(out.comm, tree_sq_norm(updates), k)
 
-        diff = tree_sq_norm(updates).astype(jnp.float32)
-        diff_hist = jax.lax.dynamic_update_index_in_dim(
-            state.diff_hist, diff, k % r.d_max, axis=0)
-
-        new_state = EngineState(
-            step=k + 1, params=params, opt_state=opt_state, nabla=nabla,
-            worker_grads=worker_grads, staleness=staleness,
-            diff_hist=diff_hist, snapshot=snapshot,
-            worker_delta=worker_delta, worker_params=worker_params)
-
-        p = tree_size(state.params)
-        bytes_per_param = (r.quantize_bits or 32) / 8.0
-        uploads = jnp.sum(upload.astype(jnp.int32))
-        metrics = {
-            "loss": jnp.mean(losses),
-            "uploads": uploads,
-            "skip_rate": 1.0 - uploads.astype(jnp.float32) / self.m,
-            "grad_evals": jnp.asarray(self.m * r.grad_evals_per_iter,
-                                      jnp.int32),
-            "bytes_up": uploads.astype(jnp.float32) * bytes_per_param * p,
-            "rhs": rhs,
-            "mean_lhs": jnp.mean(jnp.where(jnp.isfinite(lhs), lhs, 0.0)),
-            "max_staleness": jnp.max(staleness),
-        }
+        new_state = EngineState(step=k + 1, params=params,
+                                opt_state=opt_state, comm=comm)
+        metrics = {"loss": jnp.mean(out.losses), **out.metrics}
         return new_state, metrics
 
     # --------------------------------------------------------------- run

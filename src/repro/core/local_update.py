@@ -19,6 +19,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.comm import broadcast_to_workers
 from repro.optim.adam import adam
 from repro.optim.base import apply_updates
 from repro.utils.trees import tree_size
@@ -38,7 +39,10 @@ class LocalUpdateEngine:
     def __init__(self, loss_fn: Callable, n_workers: int, h_period: int,
                  algo: str = "local_momentum", lr: float = 0.1,
                  beta: float = 0.9, server_lr: float = 0.01,
-                 server_betas=(0.9, 0.999), server_eps: float = 1e-8):
+                 server_betas=(0.9, 0.999), server_eps: float = 1e-3):
+        # server_eps follows Reddi et al.'s recommended adaptivity τ=1e-3:
+        # with τ→0 the Adam-normalized server step never decays and FedAdam
+        # orbits the optimum instead of converging.
         if algo not in ("local_momentum", "fedadam"):
             raise ValueError(algo)
         self.loss_fn = loss_fn
@@ -71,9 +75,7 @@ class LocalUpdateEngine:
         ``batches`` has leading axes (H, M, b, ...).
         """
         # Broadcast server params to every worker.
-        wparams = jax.tree.map(
-            lambda x: jnp.broadcast_to(x[None], (self.m,) + x.shape),
-            state.params)
+        wparams = broadcast_to_workers(state.params, self.m)
         momenta = state.momenta
         if self.algo == "fedadam":
             momenta = jax.tree.map(jnp.zeros_like, momenta)  # plain local SGD

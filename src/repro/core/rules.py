@@ -1,4 +1,4 @@
-"""CADA communication rules (paper eqs. 5, 7, 10).
+"""CADA communication-rule hyper-parameters (paper eqs. 5, 7, 10).
 
 A rule decides, per worker and per iteration, whether the fresh stochastic
 gradient is informative enough to upload. All rules share the RHS
@@ -6,20 +6,27 @@ gradient is informative enough to upload. All rules share the RHS
 (the recent-progress measure, tracked as a ring buffer of d_max scalars) and
 the max-staleness override τ_m ≥ D.
 
-Rules:
-  * ``cada1`` (eq. 7)  — SVRG-style innovation vs. a snapshot θ̃ refreshed
+This module holds only the HYPER-PARAMETERS. The per-rule behaviour — LHS
+computation, extra state slices, post-upload transitions, accounting —
+lives in first-class strategy objects in :mod:`repro.core.comm`; the
+``kind`` string selects one via ``comm.strategy_for(rule)``:
+
+  * ``cada1``  (eq. 7)  — SVRG-style innovation vs. a snapshot θ̃ refreshed
     every D iterations:  ||δ̃_m^k − δ̃_m^{k−τ}||² ≤ RHS.
-  * ``cada2`` (eq. 10) — same-sample two-iterate difference:
+  * ``cada2``  (eq. 10) — same-sample two-iterate difference:
     ||∇ℓ(θ^k;ξ_m^k) − ∇ℓ(θ^{k−τ_m};ξ_m^k)||² ≤ RHS.
-  * ``lag``   (eq. 5)  — naive stochastic LAG (different samples — shown
+  * ``lag``    (eq. 5)  — naive stochastic LAG (different samples — shown
     ineffective in §2.1; reproduced as a baseline).
   * ``always``          — threshold never satisfied ⇒ distributed Adam.
+  * ``cinn``  (beyond-paper) — compressed-innovation gating: upload iff the
+    b-bit quantized innovation ||Q_b(δ_m)||² exceeds the RHS (LAQ /
+    arXiv 2111.00705 family); proves the strategy layer's extensibility.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
-RULES = ("cada1", "cada2", "lag", "always")
+RULES = ("cada1", "cada2", "lag", "always", "cinn")
 
 
 @dataclass(frozen=True)
@@ -29,12 +36,19 @@ class CommRule:
     c: float = 0.6          # threshold constant (paper grid {0.05..1.8})
     d_max: int = 10         # averaging window of the RHS (paper: 10 / 2)
     max_delay: int = 50     # D — forces an upload and snapshot period
-    quantize_bits: int = 0  # 0 = off; b-bit uniform innovation upload
-    #                         (LAQ-style composition — beyond-paper)
+    quantize_bits: int = 0  # 0 = rule default; b-bit uniform innovation
+    #                         upload (LAQ-style composition — beyond-paper;
+    #                         the ``cinn`` rule defaults to 8 bits)
 
     def __post_init__(self):
-        if self.kind not in RULES:
-            raise ValueError(f"rule kind must be one of {RULES}")
+        # validate against the live strategy registry (late import — comm.py
+        # depends on this module), so a newly registered strategy is
+        # constructible without editing this file; RULES documents the
+        # built-in set.
+        from repro.core.comm import strategy_kinds
+        if self.kind not in strategy_kinds():
+            raise ValueError(
+                f"rule kind must be one of {strategy_kinds()}")
         if self.d_max < 1 or self.max_delay < 1:
             raise ValueError("d_max and max_delay must be >= 1")
         if self.c < 0:
@@ -44,5 +58,10 @@ class CommRule:
 
     @property
     def grad_evals_per_iter(self) -> int:
-        """Worker-side gradient evaluations per iteration (paper §2.2)."""
-        return 2 if self.kind in ("cada1", "cada2") else 1
+        """Worker-side gradient evaluations per iteration (paper §2.2).
+
+        Delegates to the rule's strategy object (late import: comm.py
+        depends on this module for the hyper-parameter container).
+        """
+        from repro.core.comm import strategy_for
+        return strategy_for(self).grad_evals_per_iter

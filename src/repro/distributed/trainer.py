@@ -9,6 +9,15 @@ The paper's "worker" becomes the unit that actually pays for communication:
   * single-pod mesh (data, model): worker = data-parallel group (M = 16),
     matching the paper's M ≈ 10-20; the gated collective rides ICI.
 
+This module keeps ONLY the pod concerns: sharding specs, microbatch
+accumulation, the pod-manual shard_map, and the fused AMSGrad stream. The
+communication round itself — rule LHS/RHS, staleness cap, eq. 3 innovation
+aggregation, quantize hook, accounting — is
+:func:`repro.core.comm.comm_round`, the SAME core the reference engine
+(core/engine.py) runs, so the two implementations of Algorithm 1 cannot
+drift. Per-rule behaviour (eq. 5/7/10 and beyond-paper rules) lives in the
+:mod:`repro.core.comm` strategy objects; there is no rule dispatch here.
+
 Everything is a single pjit'd step: per-worker gradients are a `vmap` over
 the M-leading axis (sharded over the worker axis of the mesh), per-worker
 stale state is stored with that same M-leading sharding so each worker's
@@ -16,7 +25,10 @@ copy lives on its own slice of the machine, and the server's AMSGrad update
 runs redundantly on every chip (standard SPMD "virtual server").
 
 State-memory policy knobs (production necessities for the 314B/405B archs):
-  * ``cada_dtype``   — storage dtype of {∇ (nabla), per-worker stale trees}
+  * ``cada_dtype``   — storage dtype of {∇ (nabla), per-worker stale trees};
+    comm_round casts the innovation to this dtype BEFORE the cross-worker
+    mean, so it is the wire format of the gated collective (bf16 halves
+    DCN bytes — LAQ-adjacent, beyond-paper)
   * ``microbatches`` — gradient accumulation inside the step (activation
     memory /= microbatches at fixed global batch)
   * moments are fp32 {h, v̂} only (see kernels/cada_update.py).
@@ -31,12 +43,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.comm import (CommState, comm_round, comm_state_specs,
+                             init_comm_state, nabla_f32, record_progress,
+                             strategy_for)
 from repro.core.rules import CommRule
-from repro.launch.mesh import DATA, POD
+from repro.launch.mesh import DATA, POD, partial_auto_shard_map
 from repro.models.config import ModelConfig
-from repro.models.model import abstract_params, init_params, lm_loss
-from repro.distributed.sharding import (batch_pspecs, param_pspecs,
-                                        to_named, wants_fsdp)
+from repro.models.model import init_params, lm_loss
+from repro.distributed.sharding import (param_pspecs, to_named, wants_fsdp)
 
 
 @dataclass(frozen=True)
@@ -75,13 +89,8 @@ class DistTrainState(NamedTuple):
     params: Any              # θ^k
     h: Any                   # first moment (fp32)
     vhat: Any                # running max second moment (fp32)
-    nabla: Any               # ∇^{k-1} aggregated stale gradient (eq. 3)
-    stale_grads: Any         # (M,)-leading: last contributed ∇ℓ(θ̂_m;ξ̂_m)
-    snapshot: Any            # θ̃ (cada1) else None
-    stale_delta: Any         # (M,)-leading δ̃_m^{k−τ} (cada1) else None
-    worker_params: Any       # (M,)-leading θ^{k−τ_m} (cada2) else None
-    staleness: jnp.ndarray   # (M,) int32
-    diff_hist: jnp.ndarray   # (d_max,) fp32 ring buffer
+    comm: Any                # CommState (None for stateless rules: the
+    #                          'always' baseline keeps no innovation state)
 
 
 # ------------------------------------------------------------------- specs
@@ -126,19 +135,13 @@ def train_state_specs(cfg: ModelConfig, mesh, hp: TrainHParams
     gsp = (param_pspecs(cfg, mesh, True, ("data",))
            if hp.shard_cada_state else psp)
     gwsp = _prepend_worker(gsp, waxis)
-    r = hp.rule
-    none = None
+    strategy = strategy_for(hp.rule)
     return DistTrainState(
         step=P(),
         params=psp,
         h=msp, vhat=msp,
-        nabla=gsp if r.kind != "always" else none,
-        stale_grads=gwsp if r.kind != "always" else none,
-        snapshot=psp if r.kind == "cada1" else none,
-        stale_delta=gwsp if r.kind == "cada1" else none,
-        worker_params=wsp if r.kind == "cada2" else none,
-        staleness=P(None) if r.kind != "always" else none,
-        diff_hist=P(None) if r.kind != "always" else none,
+        comm=(None if strategy.stateless else
+              comm_state_specs(strategy, psp, wsp, gsp, gwsp, P(None))),
     )
 
 
@@ -188,51 +191,19 @@ def worker_split_abstract(batch: dict, m: int) -> dict:
 
 # ------------------------------------------------------------------- state
 
-def _per_worker_sq_norm(tree) -> jnp.ndarray:
-    leaves = jax.tree.leaves(tree)
-    tot = 0.0
-    for leaf in leaves:
-        axes = tuple(range(1, leaf.ndim))
-        tot = tot + jnp.sum(jnp.square(leaf.astype(jnp.float32)), axis=axes)
-    return tot
-
-
-def _bcast_workers(tree, m):
-    return jax.tree.map(
-        lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), tree)
-
-
-def _select_rows(mask, new, old):
-    def leaf(n, o):
-        mm = mask.reshape((-1,) + (1,) * (n.ndim - 1))
-        return jnp.where(mm, n.astype(o.dtype), o)
-    return jax.tree.map(leaf, new, old)
-
-
 def init_train_state(cfg: ModelConfig, hp: TrainHParams, m: int, rng
                      ) -> DistTrainState:
     params = init_params(cfg, rng)
-    r = hp.rule
-    cdt = hp.cada_jnp_dtype
-    zeros_f32 = jax.tree.map(
+    strategy = strategy_for(hp.rule)
+    zeros_m = jax.tree.map(
         lambda p: jnp.zeros(p.shape, hp.moments_jnp_dtype), params)
-    zeros_c = jax.tree.map(lambda p: jnp.zeros(p.shape, cdt), params)
-    wzeros = _bcast_workers(zeros_c, m) if r.kind != "always" else None
     return DistTrainState(
         step=jnp.zeros([], jnp.int32),
         params=params,
-        h=zeros_f32, vhat=zeros_f32,
-        nabla=zeros_c if r.kind != "always" else None,
-        stale_grads=wzeros,
-        snapshot=params if r.kind == "cada1" else None,
-        stale_delta=(_bcast_workers(zeros_c, m)
-                     if r.kind == "cada1" else None),
-        worker_params=(_bcast_workers(params, m)
-                       if r.kind == "cada2" else None),
-        staleness=(jnp.full((m,), r.max_delay, jnp.int32)
-                   if r.kind != "always" else None),
-        diff_hist=(jnp.zeros((r.d_max,), jnp.float32)
-                   if r.kind != "always" else None),
+        h=zeros_m, vhat=zeros_m,
+        comm=(None if strategy.stateless else
+              init_comm_state(strategy, params, m,
+                              grad_dtype=hp.cada_jnp_dtype)),
     )
 
 
@@ -297,9 +268,8 @@ def make_pod_vgrads(cfg: ModelConfig, hp: TrainHParams, mesh):
                               is_leaf=lambda x: isinstance(x, P))
 
     def _shardmapped(f, in_specs):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=(P(POD), P(POD)),
-                             axis_names={POD}, check_vma=False)
+        return partial_auto_shard_map(f, mesh, in_specs,
+                                      (P(POD), P(POD)), (POD,))
 
     def make(worker_grad):
         def body_bcast(params, batch):
@@ -336,8 +306,7 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
     sharding after the microbatch reshape — without it GSPMD partially
     replicates the per-pod batch (measured 4× flop inflation — §Perf).
     """
-    r = hp.rule
-    cdt = hp.cada_jnp_dtype
+    strategy = strategy_for(hp.rule)
     if wconstrain is None:
         wconstrain = lambda t: t  # noqa: E731
     if micro_constrain is None:
@@ -376,107 +345,54 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
         return loss_s / nm, jax.tree.map(lambda g: g / nm, g_s)
 
     if vgrad_factory is not None:
-        vgrad, vgrad_per = vgrad_factory(worker_grad)
+        vgrad_raw, vgrad_per_raw = vgrad_factory(worker_grad)
     else:
-        vgrad = jax.vmap(worker_grad, in_axes=(None, 0))
-        vgrad_per = jax.vmap(worker_grad, in_axes=(0, 0))
+        vgrad_raw = jax.vmap(worker_grad, in_axes=(None, 0))
+        vgrad_per_raw = jax.vmap(worker_grad, in_axes=(0, 0))
 
-    # ---------------- distributed Adam/AMSGrad baseline (rule: always)
-    def step_always(state: DistTrainState, batch):
-        losses, fresh = vgrad(state.params, batch)
-        grad = jax.tree.map(lambda g: jnp.mean(g, axis=0), fresh)
-        params, h, vhat, dsq = _amsgrad_apply(
-            state.params, state.h, state.vhat, grad, hp)
-        new_state = state._replace(step=state.step + 1, params=params,
-                                   h=h, vhat=vhat)
-        return new_state, {"loss": jnp.mean(losses),
-                           "uploads": jnp.asarray(m, jnp.int32),
-                           "skip_rate": jnp.zeros([], jnp.float32),
-                           "dtheta_sq": dsq}
+    def vgrad(params, batch):
+        losses, grads = vgrad_raw(params, batch)
+        return losses, wconstrain(grads)
 
-    if r.kind == "always":
+    def vgrad_per(wparams, batch):
+        losses, grads = vgrad_per_raw(wparams, batch)
+        return losses, wconstrain(grads)
+
+    # ------------- stateless rules (always ⇒ distributed Adam/AMSGrad):
+    # no innovation state is materialized — the production path for the
+    # 314B/405B single-pod fallback, where M stale gradient copies would
+    # not fit in HBM.
+    if strategy.stateless:
+        def step_always(state: DistTrainState, batch):
+            losses, fresh = vgrad(state.params, batch)
+            grad = jax.tree.map(lambda g: jnp.mean(g, axis=0), fresh)
+            params, h, vhat, dsq = _amsgrad_apply(
+                state.params, state.h, state.vhat, grad, hp)
+            new_state = state._replace(step=state.step + 1, params=params,
+                                       h=h, vhat=vhat)
+            return new_state, {
+                "loss": jnp.mean(losses),
+                "uploads": jnp.asarray(m, jnp.int32),
+                "skip_rate": jnp.zeros([], jnp.float32),
+                "upload_mask": jnp.ones((m,), bool),
+                "staleness": jnp.ones((m,), jnp.int32),
+                "dtheta_sq": dsq,
+            }
         return step_always
 
-    # ---------------- CADA1 / CADA2 / stochastic-LAG
+    # ------------- rules with innovation state: the shared Algorithm-1
+    # core drives the round; this function only applies the server update.
     def step(state: DistTrainState, batch):
         k = state.step
-        snapshot = state.snapshot
-        if r.kind == "cada1":
-            refresh = (k % r.max_delay) == 0
-            snapshot = jax.tree.map(
-                lambda s, p: jnp.where(refresh, p, s), snapshot,
-                state.params)
-
-        losses, fresh = vgrad(state.params, batch)
-        fresh = wconstrain(fresh)
-
-        delta_fresh = None
-        if r.kind == "cada1":
-            _, snap_grads = vgrad(snapshot, batch)
-            snap_grads = wconstrain(snap_grads)
-            delta_fresh = jax.tree.map(jnp.subtract, fresh, snap_grads)
-            lhs = _per_worker_sq_norm(jax.tree.map(
-                lambda a, b: a - b.astype(jnp.float32),
-                delta_fresh, state.stale_delta))
-        elif r.kind == "cada2":
-            _, stale_now = vgrad_per(state.worker_params, batch)
-            stale_now = wconstrain(stale_now)
-            lhs = _per_worker_sq_norm(
-                jax.tree.map(jnp.subtract, fresh, stale_now))
-        else:  # lag
-            lhs = _per_worker_sq_norm(jax.tree.map(
-                lambda a, b: a - b.astype(jnp.float32),
-                fresh, state.stale_grads))
-
-        rhs = (r.c / r.d_max) * jnp.sum(state.diff_hist)
-        upload = (lhs > rhs) | (state.staleness >= r.max_delay)
-
-        # eq. (3): the gated cross-worker all-reduce. On the multi-pod mesh
-        # this mean over the M axis IS the DCN collective CADA gates. With
-        # cada_dtype=bfloat16 the innovation is cast BEFORE the mean, so
-        # the cross-pod wire format is bf16 (LAQ-adjacent, beyond-paper —
-        # halves DCN bytes; noted in EXPERIMENTS §Perf).
-        def refine(nab, f, s):
-            mask = upload.reshape((-1,) + (1,) * (f.ndim - 1))
-            d = jnp.where(mask, f - s.astype(jnp.float32), 0.0)
-            d = d.astype(cdt)
-            return (nab.astype(jnp.float32)
-                    + jnp.mean(d, axis=0).astype(jnp.float32)
-                    ).astype(nab.dtype)
-
-        nabla = jax.tree.map(refine, state.nabla, fresh, state.stale_grads)
-        stale_grads = _select_rows(upload, fresh, state.stale_grads)
-        staleness = jnp.where(upload, 1, state.staleness + 1)
-        stale_delta = state.stale_delta
-        if r.kind == "cada1":
-            stale_delta = _select_rows(upload, delta_fresh,
-                                       state.stale_delta)
-        worker_params = state.worker_params
-        if r.kind == "cada2":
-            worker_params = _select_rows(
-                upload, _bcast_workers(state.params, m),
-                state.worker_params)
-
+        out = comm_round(strategy, state.comm, state.params, batch, k,
+                         vgrad=vgrad, vgrad_per=vgrad_per)
         params, h, vhat, dsq = _amsgrad_apply(
-            state.params, state.h, state.vhat,
-            jax.tree.map(lambda x: x.astype(jnp.float32), nabla), hp)
-        diff_hist = jax.lax.dynamic_update_index_in_dim(
-            state.diff_hist, dsq.astype(jnp.float32), k % r.d_max, axis=0)
-
-        uploads = jnp.sum(upload.astype(jnp.int32))
-        new_state = DistTrainState(
-            step=k + 1, params=params, h=h, vhat=vhat, nabla=nabla,
-            stale_grads=stale_grads, snapshot=snapshot,
-            stale_delta=stale_delta, worker_params=worker_params,
-            staleness=staleness, diff_hist=diff_hist)
-        metrics = {
-            "loss": jnp.mean(losses),
-            "uploads": uploads,
-            "skip_rate": 1.0 - uploads.astype(jnp.float32) / m,
-            "dtheta_sq": dsq,
-            "rhs": rhs,
-            "max_staleness": jnp.max(staleness),
-        }
+            state.params, state.h, state.vhat, nabla_f32(out.comm), hp)
+        comm = record_progress(out.comm, dsq, k)
+        new_state = DistTrainState(step=k + 1, params=params, h=h,
+                                   vhat=vhat, comm=comm)
+        metrics = {"loss": jnp.mean(out.losses), "dtheta_sq": dsq,
+                   **out.metrics}
         return new_state, metrics
 
     return step
@@ -492,7 +408,7 @@ def jit_train_step(cfg: ModelConfig, mesh, hp: TrainHParams):
     sspecs = train_state_specs(cfg, mesh, hp)
 
     # NOTE: constraining the vmapped gradient trees directly
-    # (with_sharding_constraint to the stale_grads specs) was measured to
+    # (with_sharding_constraint to the worker_grads specs) was measured to
     # be a no-op for locality AND trips an XLA SPMD-partitioner CHECK when
     # combined with data-sharded CADA state — micro_constrain below is the
     # effective (and stable) mechanism. The pod-manual shard_map is opt-in:

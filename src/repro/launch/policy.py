@@ -6,9 +6,14 @@ wherever it fits; the 34B/314B/405B archs need production memory policy
 (ZeRO over the pod axis, bf16 stale/moment storage, gradient accumulation) —
 every deviation is recorded here in one place and noted in DESIGN.md
 §Arch-applicability and the EXPERIMENTS.md roofline table.
+
+``rule_kind`` may be ANY strategy registered in :mod:`repro.core.comm`
+(paper rules plus beyond-paper ones like ``cinn``); the policy only
+decides hyper-parameters and memory knobs, never rule behaviour.
 """
 from __future__ import annotations
 
+from repro.core.comm import strategy_kinds
 from repro.core.rules import CommRule
 from repro.distributed.trainer import TrainHParams
 from repro.launch.mesh import POD
@@ -24,6 +29,9 @@ def train_policy(cfg: ModelConfig, mesh, rule_kind: str | None = None
 
     if rule_kind is None:
         rule_kind = "cada2"  # the paper's best-performing rule
+    if rule_kind not in strategy_kinds():
+        raise ValueError(f"unknown rule kind {rule_kind!r}; registered "
+                         f"strategies: {strategy_kinds()}")
 
     rule = CommRule(kind=rule_kind, c=0.6, d_max=10, max_delay=50)
 

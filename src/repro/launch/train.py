@@ -17,11 +17,12 @@ import numpy as np
 
 import repro.configs as C
 from repro.checkpoint import io as ckpt
+from repro.core.comm import strategy_kinds
 from repro.core.rules import CommRule
 from repro.data.synthetic import lm_tokens
 from repro.distributed.trainer import (TrainHParams, init_train_state,
                                        jit_train_step, worker_split)
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, set_mesh
 
 
 def make_token_batches(cfg, *, global_batch, seq, steps, seed=0):
@@ -37,8 +38,11 @@ def main() -> None:
     p.add_argument("--arch", required=True, choices=C.list_archs())
     p.add_argument("--smoke", action="store_true",
                    help="reduced config (CPU-sized)")
-    p.add_argument("--rule", default="cada2",
-                   choices=["cada1", "cada2", "lag", "always"])
+    p.add_argument("--rule", default="cada2", choices=list(strategy_kinds()),
+                   help="communication rule; every strategy registered in "
+                        "repro.core.comm is launchable")
+    p.add_argument("--quantize-bits", type=int, default=0,
+                   help="b-bit innovation uploads (0 = rule default)")
     p.add_argument("--steps", type=int, default=50)
     p.add_argument("--global-batch", type=int, default=8)
     p.add_argument("--seq", type=int, default=128)
@@ -59,7 +63,8 @@ def main() -> None:
                          "examples/serve_decode.py or the dry-run for it")
     mesh = make_host_mesh()
     hp = TrainHParams(rule=CommRule(kind=args.rule, c=args.c, d_max=10,
-                                    max_delay=50),
+                                    max_delay=50,
+                                    quantize_bits=args.quantize_bits),
                       lr=args.lr, microbatches=args.microbatches)
     make, _, m = jit_train_step(cfg, mesh, hp)
     if args.workers:
@@ -71,7 +76,7 @@ def main() -> None:
 
     batches = make_token_batches(cfg, global_batch=args.global_batch,
                                  seq=args.seq, steps=args.steps)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state = init_train_state(cfg, hp, m, jax.random.PRNGKey(0))
         if step is None:
             sds = jax.tree.map(
@@ -85,7 +90,10 @@ def main() -> None:
             batch = worker_split({"tokens": batches[i]}, m)
             state, mets = step(state, batch)
             if i % args.log_every == 0 or i == args.steps - 1:
-                row = {k: float(v) for k, v in mets.items()}
+                # scalars only: per-worker arrays (upload_mask, staleness)
+                # don't belong in the scalar history log
+                row = {k: float(v) for k, v in mets.items()
+                       if np.ndim(v) == 0}
                 row["step"] = i
                 row["wall_s"] = round(time.time() - t0, 1)
                 history.append(row)

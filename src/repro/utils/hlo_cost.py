@@ -234,20 +234,36 @@ class HloCostModel:
     # ------------------------------------------------------------- costing
     def _dot_flops(self, instr: _Instr, shapes: dict) -> float:
         _, out_elems = _shape_bytes_and_elems(instr.shape_text)
-        # contraction size from the lhs operand's shape
+        # contraction size from the lhs operand's shape. Depending on the
+        # XLA version the operand list is either bare names
+        # ``dot(%a, %b)`` — resolve via the shape table — or carries inline
+        # annotations ``dot(f32[64,64]{1,0} %a, ...)`` — take the first
+        # inline shape, which is the lhs.
         args = instr.line[instr.line.index(instr.opcode + "(")
                           + len(instr.opcode) + 1:]
-        first_op = re.match(r"\s*%([\w.\-]+)", args)
         k = 1
         cm = _LHS_CONTRACT.search(instr.line)
-        if first_op and cm and first_op.group(1) in shapes:
-            lhs_shape = shapes[first_op.group(1)]
-            dims_m = _SHAPE_RE.search(lhs_shape)
-            if dims_m and dims_m.group(2):
-                dims = [int(d) for d in dims_m.group(2).split(",")]
-                for ci in cm.group(1).split(","):
-                    if ci:
-                        k *= dims[int(ci)]
+        if cm:
+            lhs_shape = None
+            first_op = re.match(r"\s*%([\w.\-]+)", args)
+            if first_op and first_op.group(1) in shapes:
+                lhs_shape = shapes[first_op.group(1)]
+            else:
+                # only trust an inline annotation that belongs to the FIRST
+                # operand (anchored at the start of the argument list) —
+                # a later match would be the rhs's shape
+                inline = re.match(
+                    r"\s*(?:" + "|".join(_DTYPE_BYTES) + r")\[[0-9,]*\]",
+                    args)
+                if inline:
+                    lhs_shape = inline.group(0)
+            if lhs_shape:
+                dims_m = _SHAPE_RE.search(lhs_shape)
+                if dims_m and dims_m.group(2):
+                    dims = [int(d) for d in dims_m.group(2).split(",")]
+                    for ci in cm.group(1).split(","):
+                        if ci:
+                            k *= dims[int(ci)]
         return 2.0 * out_elems * k
 
     def _computation_cost(self, name: str) -> Cost:

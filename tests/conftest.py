@@ -1,8 +1,113 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the 1 real CPU
-device; only launch/dryrun.py fakes 512 devices (task contract)."""
+"""Shared fixtures + a deterministic ``hypothesis`` fallback.
+
+NOTE: no XLA_FLAGS here — tests run on the 1 real CPU device; only
+launch/dryrun.py fakes 512 devices (task contract).
+
+``hypothesis`` is an optional dependency: when it is not installed (the
+pinned CI image has no network), a tiny seeded-random parameter-sweep
+shim is installed under the same import name BEFORE the test modules
+import it. The shim draws ``max_examples`` pseudo-random examples from a
+per-test seed derived from the test's qualified name, so sweeps are
+deterministic across runs and machines. It covers exactly the API this
+suite uses: ``given``, ``settings``, and the ``integers`` / ``floats`` /
+``sampled_from`` / ``lists`` strategies.
+"""
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
 import jax
 import numpy as np
 import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _DEFAULT_EXAMPLES = 25
+
+    class _Strategy:
+        """A strategy is just a seeded draw function."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rnd):
+            return self._draw(rnd)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+    def _floats(min_value, max_value, allow_nan=False, allow_infinity=False):
+        del allow_nan, allow_infinity  # bounded draws are always finite
+        return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rnd: rnd.choice(elements))
+
+    def _booleans():
+        return _Strategy(lambda rnd: bool(rnd.getrandbits(1)))
+
+    def _lists(elements, min_size=0, max_size=None):
+        hi = max_size if max_size is not None else min_size + 8
+
+        def draw(rnd):
+            return [elements.example(rnd)
+                    for _ in range(rnd.randint(min_size, hi))]
+
+        return _Strategy(draw)
+
+    def _given(*arg_strategies, **kw_strategies):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                n = getattr(wrapper, "_stub_max_examples",
+                            _DEFAULT_EXAMPLES)
+                rnd = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    args = [s.example(rnd) for s in arg_strategies]
+                    kwargs = {k: s.example(rnd)
+                              for k, s in kw_strategies.items()}
+                    fn(*args, **kwargs)
+
+            # hide the strategy parameters from pytest's fixture resolver
+            wrapper.__signature__ = inspect.Signature()
+            del wrapper.__wrapped__
+            return wrapper
+
+        return decorate
+
+    def _settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_):
+        del deadline
+
+        def decorate(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+
+        return decorate
+
+    def _assume(condition):
+        if not condition:
+            raise pytest.skip.Exception("assumption failed",
+                                        _use_item_location=True)
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.assume = _assume
+    _hyp.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.sampled_from = _sampled_from
+    _st.booleans = _booleans
+    _st.lists = _lists
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,303 @@
+"""Unit tests for the strategy layer (core/comm.py): registry, hand-computed
+LHS values, post-upload state transitions, wire format, and accounting —
+per strategy, including the beyond-paper compressed-innovation rule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.comm import (CommContext, CommState, broadcast_to_workers,
+                             comm_round, init_comm_state, per_worker_sq_norm,
+                             record_progress, select_rows, strategy_for,
+                             strategy_kinds)
+from repro.core.quantize import per_worker_quantize_dequantize
+from repro.core.rules import RULES, CommRule
+
+M = 2
+PARAMS = {"w": jnp.array([1.0, -1.0]), "b": jnp.array([0.5])}
+
+
+def _state(rule, **over):
+    s = init_comm_state(strategy_for(rule), PARAMS, M)
+    return s._replace(**over) if over else s
+
+
+def _ctx(rule, fresh, comm, *, k=0, vgrad=None, vgrad_per=None):
+    return CommContext(params=PARAMS, batch=None, fresh=fresh, comm=comm,
+                       step=jnp.asarray(k), m=M, vgrad=vgrad,
+                       vgrad_per=vgrad_per)
+
+
+def _wtree(w0, w1):
+    """Per-worker tree with hand-set rows."""
+    return {"w": jnp.array(w0), "b": jnp.array(w1)}
+
+
+# ------------------------------------------------------------------ registry
+
+def test_registry_covers_all_rule_kinds():
+    assert set(strategy_kinds()) == set(RULES)
+    for kind in RULES:
+        s = strategy_for(CommRule(kind=kind))
+        assert s.kind == kind
+        assert s.rule.kind == kind
+
+
+def test_unknown_kind_raises():
+    rule = CommRule(kind="cada2")
+    object.__setattr__(rule, "kind", "bogus")  # bypass __post_init__
+    with pytest.raises(ValueError, match="bogus"):
+        strategy_for(rule)
+
+
+def test_grad_evals_delegate_to_strategy():
+    """CommRule.grad_evals_per_iter is the strategy's accounting (§2.2)."""
+    for kind in RULES:
+        expect = 2 if kind in ("cada1", "cada2") else 1
+        assert CommRule(kind=kind).grad_evals_per_iter == expect
+        assert strategy_for(CommRule(kind=kind)).grad_evals_per_iter == expect
+
+
+# ------------------------------------------------------- hand-computed LHS
+
+def test_lag_lhs_hand_computed():
+    """eq. (5): LHS_m = ||∇ℓ(θ^k;ξ^k) − last contributed ∇||²."""
+    rule = CommRule(kind="lag")
+    strat = strategy_for(rule)
+    comm = _state(rule, worker_grads=_wtree([[0.0, 0.0], [1.0, 0.0]],
+                                            [[0.0], [2.0]]))
+    fresh = _wtree([[1.0, 1.0], [2.0, 0.0]], [[0.0], [2.0]])
+    lhs, cache = strat.lhs(_ctx(rule, fresh, comm), comm.extras)
+    # worker 0: (1² + 1²) + 0² = 2 ; worker 1: 1² + 0 = 1
+    np.testing.assert_allclose(np.asarray(lhs), [2.0, 1.0])
+    assert cache is None
+
+
+def test_cada2_lhs_hand_computed():
+    """eq. (10): LHS_m = ||∇ℓ(θ^k;ξ) − ∇ℓ(θ^{k−τ_m};ξ)||², stale gradient
+    re-evaluated at the SAME sample via vgrad_per."""
+    rule = CommRule(kind="cada2")
+    strat = strategy_for(rule)
+    comm = _state(rule)
+    stale = _wtree([[0.5, 0.0], [0.0, 0.0]], [[0.0], [1.0]])
+
+    def vgrad_per(wparams, batch):
+        return jnp.zeros((M,)), stale
+
+    fresh = _wtree([[1.5, 0.0], [0.0, 2.0]], [[0.0], [1.0]])
+    lhs, _ = strat.lhs(_ctx(rule, fresh, comm, vgrad_per=vgrad_per),
+                       comm.extras)
+    # worker 0: 1² ; worker 1: 2²
+    np.testing.assert_allclose(np.asarray(lhs), [1.0, 4.0])
+
+
+def test_cada1_lhs_and_snapshot_refresh():
+    """eq. (7): LHS_m = ||δ̃_m^k − δ̃_m^{k−τ}||² with δ̃ = fresh − snap;
+    the snapshot refreshes every D iterations (pre_step)."""
+    rule = CommRule(kind="cada1", max_delay=10)
+    strat = strategy_for(rule)
+    comm = _state(rule)
+    # stored innovation δ̃^{k−τ} = 1 everywhere for worker 0, 0 for worker 1
+    stored = _wtree([[1.0, 1.0], [0.0, 0.0]], [[1.0], [0.0]])
+    extras = {**comm.extras, "worker_delta": stored}
+
+    snap_grads = _wtree([[0.0, 0.0], [0.0, 0.0]], [[0.0], [0.0]])
+
+    def vgrad(params, batch):
+        return jnp.zeros((M,)), snap_grads
+
+    fresh = _wtree([[1.0, 1.0], [2.0, 0.0]], [[1.0], [0.0]])
+    lhs, delta_fresh = strat.lhs(
+        _ctx(rule, fresh, comm, vgrad=vgrad), extras)
+    # δ̃^k = fresh − 0 = fresh; worker 0 diff = 0, worker 1 diff = 2²
+    np.testing.assert_allclose(np.asarray(lhs), [0.0, 4.0])
+    np.testing.assert_allclose(np.asarray(delta_fresh["w"]),
+                               np.asarray(fresh["w"]))
+
+    # pre_step: k % D == 0 refreshes θ̃ to current params, else keeps it
+    stale_snap = jax.tree.map(lambda p: p + 7.0, PARAMS)
+    ex = strat.pre_step({**extras, "snapshot": stale_snap}, PARAMS,
+                        jnp.asarray(10))
+    np.testing.assert_allclose(np.asarray(ex["snapshot"]["w"]),
+                               np.asarray(PARAMS["w"]))
+    ex = strat.pre_step({**extras, "snapshot": stale_snap}, PARAMS,
+                        jnp.asarray(3))
+    np.testing.assert_allclose(np.asarray(ex["snapshot"]["w"]),
+                               np.asarray(stale_snap["w"]))
+
+
+def test_always_lhs_is_infinite():
+    rule = CommRule(kind="always")
+    strat = strategy_for(rule)
+    assert strat.stateless
+    lhs, _ = strat.lhs(_ctx(rule, None, _state(rule)), {})
+    assert np.all(np.isinf(np.asarray(lhs)))
+
+
+def test_cinn_lhs_is_quantized_innovation_energy():
+    """Beyond-paper rule: LHS is the energy of the b-bit quantized
+    innovation — what WOULD ride the wire — not of the raw innovation."""
+    rule = CommRule(kind="cinn", quantize_bits=2)
+    strat = strategy_for(rule)
+    comm = _state(rule)  # worker_grads = 0 ⇒ innovation = fresh
+    fresh = _wtree([[1.0, 0.4], [0.0, 0.0]], [[0.0], [0.0]])
+    lhs, _ = strat.lhs(_ctx(rule, fresh, comm), comm.extras)
+    expect = per_worker_sq_norm(per_worker_quantize_dequantize(fresh, 2))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(expect))
+    # 2-bit levels = {−1, 0, 1}·scale: 0.4/1.0 rounds to 0 ⇒ lhs = 1, not
+    # the raw 1.16 — the gate sees exactly the compressed signal
+    np.testing.assert_allclose(np.asarray(lhs), [1.0, 0.0])
+
+
+# ------------------------------------------------------ state transitions
+
+def test_cada2_post_upload_updates_only_uploaders():
+    rule = CommRule(kind="cada2")
+    strat = strategy_for(rule)
+    comm = _state(rule)
+    old = jax.tree.map(lambda x: x - 5.0, comm.extras["worker_params"])
+    upload = jnp.array([True, False])
+    ex = strat.post_upload({"worker_params": old}, None, upload,
+                           _ctx(rule, None, comm))
+    got = np.asarray(ex["worker_params"]["w"])
+    np.testing.assert_allclose(got[0], np.asarray(PARAMS["w"]))      # θ^k
+    np.testing.assert_allclose(got[1], np.asarray(old["w"][1]))      # kept
+
+
+def test_cada1_post_upload_updates_only_uploaders():
+    rule = CommRule(kind="cada1")
+    strat = strategy_for(rule)
+    comm = _state(rule)
+    delta_fresh = _wtree([[1.0, 2.0], [3.0, 4.0]], [[5.0], [6.0]])
+    upload = jnp.array([False, True])
+    ex = strat.post_upload(comm.extras, delta_fresh, upload,
+                           _ctx(rule, None, comm))
+    got = np.asarray(ex["worker_delta"]["w"])
+    np.testing.assert_allclose(got[0], [0.0, 0.0])                   # kept
+    np.testing.assert_allclose(got[1], [3.0, 4.0])                   # δ̃^k
+
+
+# ------------------------------------------------------ shared comm_round
+
+def _quad_vgrads():
+    """Per-worker gradients of ½||w − t_m||² with per-worker targets."""
+    targets = jnp.array([[2.0, 0.0], [0.0, -2.0]])
+
+    def loss(params, t):
+        return 0.5 * jnp.sum((params["w"] - t) ** 2)
+
+    vgrad = jax.vmap(jax.value_and_grad(loss), in_axes=(None, 0))
+    vgrad_per = jax.vmap(jax.value_and_grad(loss), in_axes=(0, 0))
+    return targets, vgrad, vgrad_per
+
+
+def test_comm_round_first_iteration_uploads_everywhere():
+    """τ_m is initialized to D, so iteration 0 force-uploads; afterwards
+    staleness resets to 1 for uploaders."""
+    targets, vgrad, vgrad_per = _quad_vgrads()
+    params = {"w": jnp.zeros(2)}
+    rule = CommRule(kind="lag", c=1e9, d_max=4, max_delay=10)
+    strat = strategy_for(rule)
+    comm = init_comm_state(strat, params, M)
+    out = comm_round(strat, comm, params, targets, jnp.asarray(0),
+                     vgrad=vgrad, vgrad_per=vgrad_per)
+    assert np.asarray(out.upload).all()
+    np.testing.assert_array_equal(np.asarray(out.comm.staleness), [1, 1])
+    # eq. (3): ∇ = mean of uploaded fresh gradients (innovation from zero)
+    np.testing.assert_allclose(np.asarray(out.comm.nabla["w"]),
+                               np.asarray(jnp.mean(-targets, axis=0)))
+    # server copies of worker contributions match what was uploaded
+    np.testing.assert_allclose(np.asarray(out.comm.worker_grads["w"]),
+                               np.asarray(-targets))
+
+
+def test_comm_round_skip_increments_staleness_and_keeps_state():
+    """With a huge RHS (c→∞ via diff_hist) nobody uploads: staleness +1,
+    ∇ and stale trees untouched, accounting reports zero."""
+    targets, vgrad, vgrad_per = _quad_vgrads()
+    params = {"w": jnp.zeros(2)}
+    rule = CommRule(kind="lag", c=1e12, d_max=4, max_delay=10)
+    strat = strategy_for(rule)
+    comm = init_comm_state(strat, params, M)._replace(
+        staleness=jnp.array([1, 3], jnp.int32),
+        diff_hist=jnp.full((4,), 1.0, jnp.float32))
+    out = comm_round(strat, comm, params, targets, jnp.asarray(5),
+                     vgrad=vgrad, vgrad_per=vgrad_per)
+    assert not np.asarray(out.upload).any()
+    np.testing.assert_array_equal(np.asarray(out.comm.staleness), [2, 4])
+    np.testing.assert_allclose(np.asarray(out.comm.nabla["w"]),
+                               np.asarray(comm.nabla["w"]))
+    assert int(out.metrics["uploads"]) == 0
+    assert float(out.metrics["bytes_up"]) == 0.0
+    assert float(out.metrics["skip_rate"]) == 1.0
+
+
+def test_comm_round_staleness_cap_forces_upload():
+    targets, vgrad, vgrad_per = _quad_vgrads()
+    params = {"w": jnp.zeros(2)}
+    rule = CommRule(kind="lag", c=1e12, d_max=4, max_delay=5)
+    strat = strategy_for(rule)
+    comm = init_comm_state(strat, params, M)._replace(
+        staleness=jnp.array([2, 5], jnp.int32),
+        diff_hist=jnp.full((4,), 1.0, jnp.float32))
+    out = comm_round(strat, comm, params, targets, jnp.asarray(7),
+                     vgrad=vgrad, vgrad_per=vgrad_per)
+    np.testing.assert_array_equal(np.asarray(out.upload), [False, True])
+    np.testing.assert_array_equal(np.asarray(out.comm.staleness), [3, 1])
+
+
+def test_comm_round_quantized_wire_keeps_sides_in_sync():
+    """With a quantized wire format the server's worker copy equals the
+    round-tripped innovation, not the raw gradient (LAQ sync property)."""
+    targets, vgrad, vgrad_per = _quad_vgrads()
+    params = {"w": jnp.zeros(2)}
+    rule = CommRule(kind="cinn", c=0.0, d_max=4, max_delay=10,
+                    quantize_bits=2)
+    strat = strategy_for(rule)
+    comm = init_comm_state(strat, params, M)
+    out = comm_round(strat, comm, params, targets, jnp.asarray(0),
+                     vgrad=vgrad, vgrad_per=vgrad_per)
+    fresh = -targets  # gradient of the quadratic at w=0
+    q = per_worker_quantize_dequantize({"w": fresh}, 2)["w"]
+    np.testing.assert_allclose(np.asarray(out.comm.worker_grads["w"]),
+                               np.asarray(q))
+
+
+def test_bytes_accounting_per_strategy():
+    """32-bit uploads for unquantized paper rules; b-bit when quantized;
+    the compressed-innovation rule defaults to 8-bit."""
+    n = 3  # params entries in PARAMS
+    assert strategy_for(CommRule(kind="cada2")).bytes_per_upload(n) == 4 * n
+    assert strategy_for(
+        CommRule(kind="cada2", quantize_bits=4)).bytes_per_upload(n) \
+        == 0.5 * n
+    assert strategy_for(CommRule(kind="cinn")).bytes_per_upload(n) == n
+    assert strategy_for(
+        CommRule(kind="cinn", quantize_bits=16)).bytes_per_upload(n) \
+        == 2 * n
+
+
+def test_record_progress_ring_buffer():
+    rule = CommRule(kind="lag", d_max=3)
+    comm = init_comm_state(strategy_for(rule), PARAMS, M)
+    for k, v in enumerate([1.0, 2.0, 3.0, 4.0]):
+        comm = record_progress(comm, jnp.asarray(v), jnp.asarray(k))
+    # k=3 wrapped onto slot 0: [4, 2, 3]
+    np.testing.assert_allclose(np.asarray(comm.diff_hist), [4.0, 2.0, 3.0])
+
+
+# ------------------------------------------------------------ tree helpers
+
+def test_select_rows_keeps_storage_dtype():
+    old = {"w": jnp.zeros((2, 2), jnp.bfloat16)}
+    new = {"w": jnp.ones((2, 2), jnp.float32)}
+    out = select_rows(jnp.array([True, False]), new, old)
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out["w"], np.float32),
+                               [[1, 1], [0, 0]])
+
+
+def test_broadcast_and_sq_norm():
+    t = broadcast_to_workers({"w": jnp.array([3.0, 4.0])}, 2)
+    assert t["w"].shape == (2, 2)
+    np.testing.assert_allclose(np.asarray(per_worker_sq_norm(t)), [25, 25])

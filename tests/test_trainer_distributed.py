@@ -14,7 +14,7 @@ from repro.distributed.trainer import (
     DistTrainState, TrainHParams, init_train_state, jit_train_step,
     make_train_step, train_state_specs, worker_split, worker_split_abstract,
 )
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, set_mesh
 
 CFG = C.get_smoke_config("internlm2-1.8b")
 
@@ -37,7 +37,7 @@ def _steps(kind, n=4, m=4, microbatches=1, c=0.5, seed=0, lr=1e-3):
     return st, outs
 
 
-@pytest.mark.parametrize("kind", ["always", "cada1", "cada2", "lag"])
+@pytest.mark.parametrize("kind", ["always", "cada1", "cada2", "lag", "cinn"])
 def test_step_runs_and_loss_finite(kind):
     st, outs = _steps(kind, n=3)
     for m in outs:
@@ -97,13 +97,21 @@ def test_state_specs_structure():
     specs = train_state_specs(CFG, mesh, hp)
     assert isinstance(specs, DistTrainState)
     # per-worker trees lead with the worker axis
-    lead = jax.tree.leaves(specs.stale_grads,
+    lead = jax.tree.leaves(specs.comm.worker_grads,
                            is_leaf=lambda x: isinstance(x, P))[0]
     assert lead[0] == "data"
-    # 'always' drops all CADA state
+    # the strategy owns its extra slices: CADA2 stores per-worker params
+    wp = jax.tree.leaves(specs.comm.extras["worker_params"],
+                         is_leaf=lambda x: isinstance(x, P))[0]
+    assert wp[0] == "data"
+    # CADA1 stores a snapshot (param-spec'd) + per-worker innovations
+    specs_1 = train_state_specs(CFG, mesh, TrainHParams(
+        rule=CommRule(kind="cada1")))
+    assert set(specs_1.comm.extras) == {"snapshot", "worker_delta"}
+    # 'always' is stateless: the whole comm state is dropped
     specs_a = train_state_specs(CFG, mesh, TrainHParams(
         rule=CommRule(kind="always")))
-    assert specs_a.stale_grads is None and specs_a.nabla is None
+    assert specs_a.comm is None
 
 
 def test_jit_train_step_on_host_mesh():
@@ -114,7 +122,7 @@ def test_jit_train_step_on_host_mesh():
     batch = worker_split(_batch(jax.random.PRNGKey(0)), m)
     sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                        batch)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         step = make(sds)
         st = init_train_state(CFG, hp, m, jax.random.PRNGKey(0))
         st, mets = step(st, batch)
