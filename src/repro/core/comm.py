@@ -44,8 +44,10 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.flat import per_worker_quantize_dequantize_flat
 from repro.core.quantize import per_worker_quantize_dequantize
 from repro.core.rules import CommRule
+from repro.kernels import ops as kops
 from repro.utils.trees import tree_size
 
 
@@ -186,6 +188,62 @@ class CommStrategy:
                 delta, self.rule.quantize_bits)
         return delta
 
+    # ---- flat-plane hooks (core/flat.py)
+    # The hot-path twin of the pytree hooks above: gradient-shaped
+    # innovation state lives on packed (M, n_flat) planes and the LHS is a
+    # batched one-pass norm, while PARAMETER-shaped state (snapshots,
+    # stale iterates) stays in tree form — it feeds the model's gradient
+    # evaluation, which needs the pytree anyway. Per-rule math lives ONCE
+    # per concern on this class; the fused-vs-reference engine parity test
+    # pins the flat and pytree forms against each other for every rule.
+
+    def init_flat_extras(self, layout, params, params_flat, m: int,
+                         grad_dtype) -> dict:
+        """Strategy-owned state for the flat plane (twin of
+        :meth:`init_extras`)."""
+        del layout, params, params_flat, m, grad_dtype
+        return {}
+
+    def flat_extras_specs(self, param_spec, worker_param_spec, waxis: str,
+                          P) -> dict:
+        """PartitionSpec dict matching :meth:`init_flat_extras`."""
+        del param_spec, worker_param_spec, waxis, P
+        return {}
+
+    def flat_pre_step(self, extras: dict, params, params_flat, k) -> dict:
+        del params, params_flat, k
+        return extras
+
+    def second_eval_shared(self, extras: dict):
+        """Params PYTREE at which every worker evaluates its second
+        gradient (CADA1's snapshot θ̃), or None. Shared points keep the
+        broadcast-θ evaluation form XLA collapses best."""
+        del extras
+        return None
+
+    def second_eval_per_worker(self, extras: dict):
+        """(M,)-leading params PYTREE of per-worker evaluation points
+        (CADA2's stale iterates θ^{k−τ_m}), or None."""
+        del extras
+        return None
+
+    def flat_lhs(self, ctx, extras: dict):
+        """Rule LHS on the flat plane: ((M,) lhs, cache)."""
+        raise NotImplementedError
+
+    def flat_post_upload(self, extras: dict, cache, upload, ctx) -> dict:
+        del cache, upload, ctx
+        return extras
+
+    def transform_delta_flat(self, layout, delta):
+        """Wire format of the uploaded innovation on the (M, n_flat) plane
+        (per-worker, per-leaf-segment scales — bit-identical to
+        :meth:`transform_delta`)."""
+        if self.rule.quantize_bits:
+            return per_worker_quantize_dequantize_flat(
+                layout, delta, self.rule.quantize_bits)
+        return delta
+
     # ---- accounting
     @property
     def bits_per_entry(self) -> int:
@@ -225,6 +283,9 @@ class AlwaysStrategy(CommStrategy):
     def lhs(self, ctx, extras):
         return jnp.full((ctx.m,), jnp.inf, jnp.float32), None
 
+    def flat_lhs(self, ctx, extras):
+        return jnp.full((ctx.m,), jnp.inf, jnp.float32), None
+
 
 @register
 class LAGStrategy(CommStrategy):
@@ -238,6 +299,11 @@ class LAGStrategy(CommStrategy):
             lambda f, s: f.astype(jnp.float32) - s.astype(jnp.float32),
             ctx.fresh, ctx.comm.worker_grads)
         return per_worker_sq_norm(diff), None
+
+    def flat_lhs(self, ctx, extras):
+        return kops.batched_diff_sq_norm(
+            ctx.fresh, ctx.comm.worker_grads.astype(jnp.float32),
+            interpret=ctx.interpret), None
 
 
 @register
@@ -277,6 +343,36 @@ class CADA1Strategy(CommStrategy):
                 "worker_delta": select_rows(upload, delta_fresh,
                                             extras["worker_delta"])}
 
+    # ---- flat plane: θ̃ stays a pytree (it feeds vgrad; the shared-point
+    # evaluation keeps the broadcast form XLA collapses); the innovation
+    # state δ̃ is a packed (M, n_flat) plane.
+    def init_flat_extras(self, layout, params, params_flat, m, grad_dtype):
+        # copy: θ̃ must not alias the caller's params (donation)
+        return {"snapshot": jax.tree.map(jnp.copy, params),
+                "worker_delta": jnp.zeros((m, layout.n_flat), grad_dtype)}
+
+    def flat_extras_specs(self, param_spec, worker_param_spec, waxis, P):
+        return {"snapshot": param_spec, "worker_delta": P(waxis, None)}
+
+    def flat_pre_step(self, extras, params, params_flat, k):
+        return self.pre_step(extras, params, k)
+
+    def second_eval_shared(self, extras):
+        return extras["snapshot"]
+
+    def flat_lhs(self, ctx, extras):
+        delta_fresh = ctx.fresh - ctx.second
+        lhs = kops.batched_diff_sq_norm(
+            delta_fresh, extras["worker_delta"].astype(jnp.float32),
+            interpret=ctx.interpret)
+        return lhs, delta_fresh
+
+    def flat_post_upload(self, extras, delta_fresh, upload, ctx):
+        wd = extras["worker_delta"]
+        return {**extras,
+                "worker_delta": jnp.where(upload[:, None],
+                                          delta_fresh.astype(wd.dtype), wd)}
+
 
 @register
 class CADA2Strategy(CommStrategy):
@@ -304,6 +400,25 @@ class CADA2Strategy(CommStrategy):
                 "worker_params": select_rows(
                     upload, broadcast_to_workers(ctx.params, ctx.m),
                     extras["worker_params"])}
+
+    # ---- flat plane: the stale iterates θ^{k−τ_m} stay an (M,)-leading
+    # pytree (they feed vgrad_per); only the LHS norm math is flat.
+    def init_flat_extras(self, layout, params, params_flat, m, grad_dtype):
+        del layout, params_flat, grad_dtype
+        return {"worker_params": broadcast_to_workers(params, m)}
+
+    def flat_extras_specs(self, param_spec, worker_param_spec, waxis, P):
+        return {"worker_params": worker_param_spec}
+
+    def second_eval_per_worker(self, extras):
+        return extras["worker_params"]
+
+    def flat_lhs(self, ctx, extras):
+        return kops.batched_diff_sq_norm(ctx.fresh, ctx.second,
+                                         interpret=ctx.interpret), None
+
+    def flat_post_upload(self, extras, cache, upload, ctx):
+        return self.post_upload(extras, cache, upload, ctx)
 
 
 @register
@@ -335,6 +450,16 @@ class CompressedInnovationStrategy(CommStrategy):
             ctx.fresh, ctx.comm.worker_grads)
         q = per_worker_quantize_dequantize(innovation, self.bits_per_entry)
         return per_worker_sq_norm(q), None
+
+    def transform_delta_flat(self, layout, delta):
+        return per_worker_quantize_dequantize_flat(layout, delta,
+                                                   self.bits_per_entry)
+
+    def flat_lhs(self, ctx, extras):
+        innovation = ctx.fresh - ctx.comm.worker_grads.astype(jnp.float32)
+        q = per_worker_quantize_dequantize_flat(ctx.layout, innovation,
+                                                self.bits_per_entry)
+        return kops.batched_sq_norm(q, interpret=ctx.interpret), None
 
 
 # ----------------------------------------------------------- shared round

@@ -8,10 +8,25 @@ mesh/pod-level runtime).
 
 The engine keeps ONLY the vmap/scan harness and the server optimizer; the
 entire communication round (rule LHS/RHS, staleness cap, eq. 3 innovation
-aggregation, quantize hook, accounting) is :func:`repro.core.comm.comm_round`
-— the SAME core the pod trainer consumes, so the two cannot drift. Per-rule
+aggregation, quantize hook, accounting) is the shared Algorithm-1 core —
+the SAME core the pod trainer consumes, so the two cannot drift. Per-rule
 behaviour lives in the :mod:`repro.core.comm` strategy objects; this module
 contains no rule dispatch.
+
+Two state planes implement that core (both per-iteration identical; the
+fused-vs-reference parity test pins them):
+
+  * ``fused=True`` (default) — the flat-buffer hot path
+    (:mod:`repro.core.flat`): comm state lives in contiguous (M, n_flat)
+    planes, the rule LHS rides the batched one-pass kernel, and the server
+    update is the fused AMSGrad/CADA kernel (Pallas on TPU, fused flat jnp
+    elsewhere) whose free ||Δθ||² feeds the RHS ring buffer directly;
+  * ``fused=False`` — the per-leaf pytree reference
+    (:func:`repro.core.comm.comm_round`), kept as the readable oracle.
+
+The default server optimizer is :class:`repro.optim.fused.FusedAMSGrad`
+(paper eqs. 2a-2c); any protocol :class:`repro.optim.base.Optimizer` still
+drops in (the flat plane then bridges ∇ back to a pytree for it).
 
 The engine is a pure ``(state, batch) -> (state, metrics)`` step, jittable
 and scannable. Communication is *accounted* exactly as the paper counts it:
@@ -27,18 +42,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import flat as F
 from repro.core.comm import (CommState, comm_round, init_comm_state,
                              nabla_f32, record_progress, strategy_for)
 from repro.core.rules import CommRule
 from repro.optim.base import Optimizer, apply_updates
+from repro.optim.fused import FusedAMSGrad
 from repro.utils.trees import tree_sq_norm
 
 
 class EngineState(NamedTuple):
     step: jnp.ndarray            # k
-    params: Any                  # θ^k (server copy)
-    opt_state: Any               # Adam/AMSGrad moments {h, v, v̂}
-    comm: CommState              # Algorithm-1 communication state
+    params: Any                  # θ^k (server copy, model pytree form)
+    opt_state: Any               # server-optimizer state
+    comm: Any                    # CommState | FlatCommState
+    params_flat: Any = None      # θ^k packed fp32 (fused plane only)
 
 
 class CADAEngine:
@@ -46,19 +64,38 @@ class CADAEngine:
 
     Args:
       loss_fn: scalar loss ``loss_fn(params, (x, y))`` for ONE worker batch.
-      optimizer: the server optimizer (paper: AMSGrad-form Adam). The LAG
-        baseline is usually paired with plain SGD, as in the paper.
+      optimizer: the server optimizer. Default: the fused AMSGrad/CADA
+        kernel (paper: AMSGrad-form Adam). Protocol optimizers (e.g. plain
+        SGD for the LAG baseline, as in the paper) drop in unchanged.
       rule: the communication rule (any kind registered in core/comm.py).
       n_workers: M.
+      fused: run the flat-buffer hot path (default) or the per-leaf pytree
+        reference implementation.
+      fuse_evals: stack the rule's second gradient evaluation onto the
+        fresh one in a single 2M-row vmapped call. Identical numerics
+        (vmap rows are independent); dispatch-count win on accelerators,
+        but on CPU backends it forfeits XLA's collapse of the broadcast-θ
+        fresh eval into one large matmul — hence default off there.
+      interpret: kernel-mode override for the flat ops (see kernels/ops.py:
+        None = auto, True = Pallas interpret, False = compiled Pallas).
     """
 
-    def __init__(self, loss_fn: Callable, optimizer: Optimizer,
-                 rule: CommRule, n_workers: int):
+    def __init__(self, loss_fn: Callable, optimizer: Optimizer | None = None,
+                 rule: CommRule | None = None, n_workers: int = 1, *,
+                 fused: bool | None = None, fuse_evals: bool | None = None,
+                 interpret=None):
         self.loss_fn = loss_fn
-        self.optimizer = optimizer
-        self.rule = rule
-        self.strategy = strategy_for(rule)
+        self.optimizer = (FusedAMSGrad(lr=1e-3) if optimizer is None
+                          else optimizer)
+        self.rule = CommRule() if rule is None else rule
+        self.strategy = strategy_for(self.rule)
         self.m = n_workers
+        self.fused = True if fused is None else fused
+        self._fuse_evals = (jax.default_backend() == "tpu"
+                            if fuse_evals is None else fuse_evals)
+        self._interpret = interpret
+        self._fused_opt = isinstance(self.optimizer, FusedAMSGrad)
+        self._layout: F.FlatLayout | None = None
         self._vgrad = jax.vmap(jax.value_and_grad(loss_fn),
                                in_axes=(None, 0))
         self._vgrad_per = jax.vmap(jax.value_and_grad(loss_fn),
@@ -66,16 +103,37 @@ class CADAEngine:
 
     # ------------------------------------------------------------- state
     def init(self, params) -> EngineState:
+        if not self.fused:
+            return EngineState(
+                step=jnp.zeros([], jnp.int32),
+                params=params,
+                opt_state=self.optimizer.init(params),
+                comm=init_comm_state(self.strategy, params, self.m),
+            )
+        layout = F.layout_of(params)
+        self._layout = layout
+        params_flat = layout.pack(params)
+        # comm storage follows the param dtype (as the reference plane
+        # does) when it is uniform; mixed-dtype trees store fp32.
+        grad_dtype = (layout.dtypes[0] if len(set(layout.dtypes)) == 1
+                      else jnp.float32)
+        opt_state = (self.optimizer.init_flat(layout.n_flat)
+                     if self._fused_opt else self.optimizer.init(params))
         return EngineState(
             step=jnp.zeros([], jnp.int32),
             params=params,
-            opt_state=self.optimizer.init(params),
-            comm=init_comm_state(self.strategy, params, self.m),
+            opt_state=opt_state,
+            comm=F.init_flat_comm_state(self.strategy, layout, params,
+                                        self.m, grad_dtype=grad_dtype,
+                                        params_flat=params_flat),
+            params_flat=params_flat,
         )
 
     # -------------------------------------------------------------- step
     def step(self, state: EngineState, batch) -> tuple[EngineState, dict]:
         """One iteration of Algorithm 1. ``batch`` has leading axis M."""
+        if self.fused:
+            return self._step_flat(state, batch)
         k = state.step
 
         # Lines 4-15: the shared communication round.
@@ -83,7 +141,9 @@ class CADAEngine:
                          vgrad=self._vgrad, vgrad_per=self._vgrad_per)
 
         # Lines 16-17: server Adam update driven by ∇^k (eqs. 2a-2c).
-        updates, opt_state = self.optimizer.update(
+        opt = (self.optimizer if not self._fused_opt
+               else _as_protocol(self.optimizer))
+        updates, opt_state = opt.update(
             nabla_f32(out.comm), state.opt_state, state.params)
         params = apply_updates(state.params, updates)
         comm = record_progress(out.comm, tree_sq_norm(updates), k)
@@ -93,12 +153,51 @@ class CADAEngine:
         metrics = {"loss": jnp.mean(out.losses), **out.metrics}
         return new_state, metrics
 
+    def _step_flat(self, state: EngineState, batch):
+        """The flat-plane hot path: one packed gradient plane per round,
+        single-op comm math, fused server update with ||Δθ||² for free."""
+        k = state.step
+        layout = self._layout
+        out = F.flat_comm_round(
+            self.strategy, layout, state.comm, state.params,
+            state.params_flat, batch, k, vgrad=self._vgrad,
+            vgrad_per=self._vgrad_per, fuse_evals=self._fuse_evals,
+            interpret=self._interpret)
+
+        nabla = F.nabla_f32(out.comm)
+        if self._fused_opt:
+            theta, opt_state, dsq = self.optimizer.apply_flat(
+                state.params_flat, state.opt_state, nabla,
+                interpret=self._interpret)
+            theta = layout.cast_roundtrip(theta)
+            params = layout.unpack(theta)
+        else:
+            grad_tree = layout.unpack(
+                nabla, dtypes=(np.dtype(np.float32),) * len(layout.dtypes))
+            updates, opt_state = self.optimizer.update(
+                grad_tree, state.opt_state, state.params)
+            params = apply_updates(state.params, updates)
+            dsq = tree_sq_norm(updates)
+            theta = layout.pack(params)
+
+        comm = F.record_progress(out.comm, dsq, k)
+        new_state = EngineState(step=k + 1, params=params,
+                                opt_state=opt_state, comm=comm,
+                                params_flat=theta)
+        metrics = {"loss": jnp.mean(out.losses), **out.metrics}
+        return new_state, metrics
+
     # --------------------------------------------------------------- run
     def run(self, state: EngineState, batches) -> tuple[EngineState, dict]:
         """Scan over pre-sampled batches with leading axis (steps, M, ...)."""
         def body(s, b):
             return self.step(s, b)
         return jax.lax.scan(body, state, batches)
+
+
+def _as_protocol(fused: FusedAMSGrad) -> Optimizer:
+    from repro.optim.fused import as_optimizer
+    return as_optimizer(fused)
 
 
 def make_sampler(x: np.ndarray, y: np.ndarray, shard_index: np.ndarray,

@@ -1,0 +1,348 @@
+"""Flat-buffer state plane: Algorithm 1's per-iteration math on contiguous
+buffers instead of per-leaf pytrees.
+
+Motivation (§Perf): the reference ``core/comm.py::comm_round`` and the
+per-leaf jnp AMSGrad stream walk the parameter pytree ~15 times per
+iteration — every ``tree_map`` is one more sweep over HBM (or, on CPU, one
+more dispatched kernel inside the scanned step). This module packs the
+gradient-shaped state ONCE into padded contiguous buffers and re-expresses
+the whole communication round as a handful of whole-buffer ops:
+
+  * :class:`FlatLayout` — a static description of a pytree's flat layout
+    (per-leaf offsets/sizes/shapes/dtypes, total padded length ``n_flat``)
+    with exact ``pack``/``unpack`` round-tripping, including an (M, n_flat)
+    per-worker plane for M-leading trees;
+  * :class:`FlatCommState` — the Algorithm-1 communication state with
+    ``nabla`` as one (n_flat,) buffer and every per-worker tree as one
+    (M, n_flat) plane;
+  * :func:`flat_comm_round` — the same Algorithm-1 round as
+    ``comm.comm_round`` (lines 4-15), but the fresh−stale delta, the mask
+    merge, the eq. (3) innovation aggregation and the rule LHS norms are
+    single flat ops (the LHS norms via the batched Pallas kernel on TPU, a
+    fused flat jnp fallback elsewhere — see ``kernels/ops.py``).
+
+Rule-specific behaviour stays with the :mod:`repro.core.comm` strategy
+objects — each strategy carries flat-plane hooks (``flat_lhs``,
+``flat_post_upload``, ...) next to its reference pytree hooks, and the
+fused-vs-reference engine parity test keeps the two in lockstep.
+
+Model math is untouched: parameters remain a pytree for the loss/grad
+evaluation, and the layout is the single conversion point between the two
+worlds (gradients are packed once per iteration, right after ``vgrad``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Minimal flat-buffer alignment. The Pallas wrappers in kernels/ops.py
+# re-pad to whole kernel blocks on demand, so the layout itself stays lean:
+# on CPU a (M, n_flat) plane carries almost no padding waste even for toy
+# models (logreg: 46 -> 48), while TPU kernels see block-aligned buffers
+# after the wrapper's pad.
+PAD_ALIGN = 8
+
+
+# ------------------------------------------------------------------- layout
+
+@dataclass(frozen=True)
+class FlatLayout:
+    """Static flat layout of a pytree: one contiguous padded buffer.
+
+    Hashable and comparable, so it can be closed over by jitted steps and
+    compared across engine/trainer instances. ``n`` is the true scalar
+    count, ``n_flat`` the padded buffer length (``n_flat % align == 0``);
+    padding lanes are identically zero through every op in this module.
+    """
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
+    sizes: tuple
+    offsets: tuple
+    n: int
+    n_flat: int
+
+    # ---- conversions
+    def pack(self, tree, dtype=jnp.float32) -> jnp.ndarray:
+        """Pytree -> (n_flat,) buffer in ``dtype`` (zero-padded tail)."""
+        leaves = jax.tree.leaves(tree)
+        flat = jnp.concatenate(
+            [jnp.ravel(l).astype(dtype) for l in leaves])
+        if self.n_flat > self.n:
+            flat = jnp.pad(flat, (0, self.n_flat - self.n))
+        return flat
+
+    def pack_worker(self, tree, dtype=jnp.float32) -> jnp.ndarray:
+        """M-leading pytree -> (M, n_flat) plane in ``dtype``."""
+        leaves = jax.tree.leaves(tree)
+        m = leaves[0].shape[0]
+        flat = jnp.concatenate(
+            [l.reshape(m, -1).astype(dtype) for l in leaves], axis=1)
+        if self.n_flat > self.n:
+            flat = jnp.pad(flat, ((0, 0), (0, self.n_flat - self.n)))
+        return flat
+
+    def unpack(self, buf, dtypes=None):
+        """(n_flat,) buffer -> pytree (leaves cast to the layout dtypes)."""
+        dtypes = dtypes or self.dtypes
+        outs = [buf[o:o + s].reshape(shp).astype(dt)
+                for o, s, shp, dt in zip(self.offsets, self.sizes,
+                                         self.shapes, dtypes)]
+        return jax.tree.unflatten(self.treedef, outs)
+
+    def unpack_worker(self, buf, dtypes=None):
+        """(M, n_flat) plane -> M-leading pytree."""
+        dtypes = dtypes or self.dtypes
+        m = buf.shape[0]
+        outs = [buf[:, o:o + s].reshape((m,) + shp).astype(dt)
+                for o, s, shp, dt in zip(self.offsets, self.sizes,
+                                         self.shapes, dtypes)]
+        return jax.tree.unflatten(self.treedef, outs)
+
+    # ---- dtype discipline
+    @property
+    def all_f32(self) -> bool:
+        return all(dt == np.dtype(np.float32) for dt in self.dtypes)
+
+    def cast_roundtrip(self, buf: jnp.ndarray) -> jnp.ndarray:
+        """Round-trip a (n_flat,) fp32 buffer through the per-leaf storage
+        dtypes, so ``buf == pack(unpack(buf))`` holds exactly even for
+        reduced-precision leaves. No-op for all-fp32 layouts (static)."""
+        if self.all_f32:
+            return buf
+        parts = [buf[o:o + s].astype(dt).astype(buf.dtype)
+                 for o, s, dt in zip(self.offsets, self.sizes, self.dtypes)]
+        if self.n_flat > self.n:
+            parts.append(buf[self.n:])
+        return jnp.concatenate(parts)
+
+
+def layout_of(tree, align: int | None = None) -> FlatLayout:
+    """Build the static :class:`FlatLayout` of ``tree`` (arrays or
+    ShapeDtypeStructs both work — only shapes/dtypes are read)."""
+    if align is None:
+        align = PAD_ALIGN
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(np.dtype(l.dtype) for l in leaves)
+    sizes = tuple(int(np.prod(s, dtype=np.int64)) if s else 1
+                  for s in shapes)
+    offsets, off = [], 0
+    for s in sizes:
+        offsets.append(off)
+        off += s
+    n = off
+    n_flat = n + ((-n) % align)
+    return FlatLayout(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                      sizes=sizes, offsets=tuple(offsets), n=n,
+                      n_flat=max(n_flat, align))
+
+
+def per_worker_quantize_dequantize_flat(layout: FlatLayout, buf, bits: int):
+    """Flat-plane twin of ``quantize.per_worker_quantize_dequantize``:
+    b-bit symmetric uniform round-trip with one max-abs scale per
+    (worker, leaf-segment) — bit-identical to the pytree version, since the
+    scales are exact maxima over the same entries."""
+    if bits <= 0 or bits >= 32:
+        return buf
+    levels = float(2 ** (bits - 1) - 1)
+    parts = []
+    for o, s in zip(layout.offsets, layout.sizes):
+        seg = buf[:, o:o + s]
+        scale = jnp.maximum(
+            jnp.max(jnp.abs(seg), axis=1, keepdims=True), 1e-12)
+        q = jnp.round(seg / scale * levels)
+        parts.append(q * scale / levels)
+    if layout.n_flat > layout.n:
+        parts.append(buf[:, layout.n:])
+    return jnp.concatenate(parts, axis=1)
+
+
+# -------------------------------------------------------------- comm state
+
+class FlatCommState(NamedTuple):
+    """Algorithm-1 communication state on the flat plane.
+
+    Mirrors ``comm.CommState`` field-for-field; gradient-shaped trees are
+    single buffers ((n_flat,) for ∇, (M, n_flat) per-worker planes), so the
+    round below touches each exactly once per iteration.
+    """
+    nabla: jnp.ndarray        # (n_flat,) storage dtype
+    worker_grads: jnp.ndarray  # (M, n_flat) storage dtype
+    staleness: jnp.ndarray    # (M,) int32
+    diff_hist: jnp.ndarray    # (d_max,) fp32 RHS ring buffer
+    extras: dict              # strategy-owned flat slices
+
+
+class FlatCommContext(NamedTuple):
+    """What a strategy's flat hooks may consult. ``fresh`` is the packed
+    (M, n_flat) fp32 fresh-gradient plane; ``second`` the packed gradients
+    at the strategy's second evaluation points (None if it has none)."""
+    layout: FlatLayout
+    params: Any               # θ^k pytree (model form)
+    params_flat: jnp.ndarray  # θ^k packed, fp32
+    batch: Any
+    fresh: jnp.ndarray
+    second: jnp.ndarray | None
+    comm: FlatCommState
+    step: jnp.ndarray
+    m: int
+    interpret: Any            # kernel-mode override for kernels/ops.py
+
+
+class FlatCommRoundResult(NamedTuple):
+    losses: jnp.ndarray
+    comm: FlatCommState       # diff_hist NOT yet updated (record_progress)
+    upload: jnp.ndarray
+    metrics: dict
+
+
+def init_flat_comm_state(strategy, layout: FlatLayout, params, m: int,
+                         grad_dtype=jnp.float32,
+                         params_flat=None) -> FlatCommState:
+    """Fresh flat CommState: τ_m starts at D so iteration 0 uploads."""
+    r = strategy.rule
+    if params_flat is None:
+        params_flat = layout.pack(params)
+    return FlatCommState(
+        nabla=jnp.zeros((layout.n_flat,), grad_dtype),
+        worker_grads=jnp.zeros((m, layout.n_flat), grad_dtype),
+        staleness=jnp.full((m,), r.max_delay, jnp.int32),
+        diff_hist=jnp.zeros((r.d_max,), jnp.float32),
+        extras=strategy.init_flat_extras(layout, params, params_flat, m,
+                                         grad_dtype),
+    )
+
+
+def flat_comm_state_specs(strategy, param_spec, worker_param_spec,
+                          waxis: str, P) -> FlatCommState:
+    """PartitionSpec tree matching :func:`init_flat_comm_state` — the
+    gradient planes need exactly two spec shapes (replicated buffers and
+    worker-leading planes); parameter-shaped extras reuse the param
+    specs."""
+    return FlatCommState(
+        nabla=P(None),
+        worker_grads=P(waxis, None),
+        staleness=P(None),
+        diff_hist=P(None),
+        extras=strategy.flat_extras_specs(param_spec, worker_param_spec,
+                                          waxis, P),
+    )
+
+
+# ------------------------------------------------------------- shared round
+
+def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
+                    params, params_flat, batch, k, *, vgrad,
+                    vgrad_per: Callable | None = None,
+                    fuse_evals: bool = True,
+                    interpret=None) -> FlatCommRoundResult:
+    """One communication round of Algorithm 1 (lines 4-15) on flat buffers.
+
+    Semantically identical to ``comm.comm_round`` (the fused-vs-reference
+    parity test pins this); the per-iteration cost is what changes:
+
+      * rules with a second gradient evaluation (CADA1's snapshot, CADA2's
+        stale iterates) get BOTH evaluations from ONE ``vgrad_per`` call
+        over a stacked (2M,)-leading tree when ``fuse_evals`` (vmap keeps
+        rows independent, so the values are unchanged — but half the
+        dispatches); set ``fuse_evals=False`` when ``vgrad``/``vgrad_per``
+        are pod-manual shard_maps whose in-specs pin the M-leading axis;
+      * the delta / mask-merge / eq. (3) aggregation are whole-plane ops;
+      * the LHS norms ride the batched one-pass kernel (kernels/ops.py).
+    """
+    r = strategy.rule
+    m = comm.staleness.shape[0]
+
+    # Line 4 (rule-owned): e.g. CADA1 snapshot refresh every D iterations.
+    extras = strategy.flat_pre_step(comm.extras, params, params_flat, k)
+
+    # Lines 6/8: fresh gradients at θ^k, plus the rule's second evaluation
+    # (shared point θ̃ keeps the collapsed broadcast form; per-worker
+    # points ride vgrad_per, optionally stacked onto the fresh call).
+    shared_pt = strategy.second_eval_shared(extras)
+    perw_pts = strategy.second_eval_per_worker(extras)
+    if perw_pts is not None and fuse_evals:
+        stacked = jax.tree.map(
+            lambda p, w: jnp.concatenate(
+                [jnp.broadcast_to(p[None], (m,) + p.shape), w]),
+            params, perw_pts)
+        batch2 = jax.tree.map(lambda x: jnp.concatenate([x, x]), batch)
+        losses2, grads2 = vgrad_per(stacked, batch2)
+        g2 = layout.pack_worker(grads2)
+        losses, fresh, second = losses2[:m], g2[:m], g2[m:]
+    else:
+        losses, fresh_tree = vgrad(params, batch)
+        fresh = layout.pack_worker(fresh_tree)
+        if shared_pt is not None:
+            _, second_tree = vgrad(shared_pt, batch)
+            second = layout.pack_worker(second_tree)
+        elif perw_pts is not None:
+            _, second_tree = vgrad_per(perw_pts, batch)
+            second = layout.pack_worker(second_tree)
+        else:
+            second = None
+
+    ctx = FlatCommContext(layout=layout, params=params,
+                          params_flat=params_flat, batch=batch, fresh=fresh,
+                          second=second, comm=comm._replace(extras=extras),
+                          step=k, m=m, interpret=interpret)
+
+    # Lines 7/9: rule LHS vs the shared recent-progress RHS.
+    lhs, cache = strategy.flat_lhs(ctx, extras)
+    rhs = (r.c / r.d_max) * jnp.sum(comm.diff_hist)
+    # Line 10: upload if the condition is VIOLATED or staleness capped.
+    upload = (lhs > rhs) | (comm.staleness >= r.max_delay)
+
+    # Eq. (3): innovation delta, wire format, masked aggregation — each a
+    # single whole-plane op (one (M, n_flat) sweep instead of ~6 tree_maps).
+    wg32 = comm.worker_grads.astype(jnp.float32)
+    delta = strategy.transform_delta_flat(layout, fresh - wg32)
+    wire = jnp.where(upload[:, None], delta, 0.0).astype(
+        comm.worker_grads.dtype)
+    nabla = (comm.nabla.astype(jnp.float32)
+             + jnp.mean(wire.astype(jnp.float32), axis=0)
+             ).astype(comm.nabla.dtype)
+    worker_grads = (wg32 + wire.astype(jnp.float32)
+                    ).astype(comm.worker_grads.dtype)
+
+    staleness = jnp.where(upload, 1, comm.staleness + 1)
+    extras = strategy.flat_post_upload(extras, cache, upload, ctx)
+
+    uploads = jnp.sum(upload.astype(jnp.int32))
+    metrics = {
+        "uploads": uploads,
+        "skip_rate": 1.0 - uploads.astype(jnp.float32) / m,
+        "upload_mask": upload,
+        "staleness": staleness,
+        "rhs": rhs,
+        "mean_lhs": jnp.mean(jnp.where(jnp.isfinite(lhs), lhs, 0.0)),
+        "max_staleness": jnp.max(staleness),
+        "grad_evals": jnp.asarray(m * strategy.grad_evals_per_iter,
+                                  jnp.int32),
+        "bytes_up": (uploads.astype(jnp.float32)
+                     * strategy.bytes_per_upload(layout.n)),
+    }
+    new_comm = FlatCommState(nabla=nabla, worker_grads=worker_grads,
+                             staleness=staleness, diff_hist=comm.diff_hist,
+                             extras=extras)
+    return FlatCommRoundResult(losses=losses, comm=new_comm, upload=upload,
+                               metrics=metrics)
+
+
+def record_progress(comm: FlatCommState, dtheta_sq, k) -> FlatCommState:
+    """Push ||θ^{k+1} − θ^k||² into the RHS ring buffer (line 17's tail)."""
+    d_max = comm.diff_hist.shape[0]
+    diff_hist = jax.lax.dynamic_update_index_in_dim(
+        comm.diff_hist, dtheta_sq.astype(jnp.float32), k % d_max, axis=0)
+    return comm._replace(diff_hist=diff_hist)
+
+
+def nabla_f32(comm: FlatCommState) -> jnp.ndarray:
+    """The server-update driver ∇^k as an fp32 flat buffer (line 16)."""
+    return comm.nabla.astype(jnp.float32)

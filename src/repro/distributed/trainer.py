@@ -43,13 +43,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import flat as F
 from repro.core.comm import (CommState, comm_round, comm_state_specs,
                              init_comm_state, nabla_f32, record_progress,
                              strategy_for)
 from repro.core.rules import CommRule
+from repro.kernels import ops as kops
 from repro.launch.mesh import DATA, POD, partial_auto_shard_map
 from repro.models.config import ModelConfig
-from repro.models.model import init_params, lm_loss
+from repro.models.model import abstract_params, init_params, lm_loss
 from repro.distributed.sharding import (param_pspecs, to_named, wants_fsdp)
 
 
@@ -63,6 +65,11 @@ class TrainHParams:
     microbatches: int = 1
     cada_dtype: str = "float32"     # nabla / stale-tree storage
     moments_dtype: str = "float32"  # {h, v̂} storage (bf16 = beyond-paper)
+    fused: bool = True              # flat-buffer state plane + fused
+    #   AMSGrad/CADA server update (core/flat.py). Auto-falls back to the
+    #   per-leaf reference path for param-aligned sharding policies the
+    #   flat plane does not express (explicit FSDP, ZeRO'd or data-sharded
+    #   state, bf16 moments) — see _flat_enabled.
     fsdp: bool | None = None        # None = auto (sharding.wants_fsdp)
     fsdp_axes: tuple = ("data",)    # params: gathered per layer per micro
     state_fsdp_axes: tuple = ()     # () = same as fsdp_axes. Set to
@@ -91,6 +98,27 @@ class DistTrainState(NamedTuple):
     vhat: Any                # running max second moment (fp32)
     comm: Any                # CommState (None for stateless rules: the
     #                          'always' baseline keeps no innovation state)
+
+
+def _flat_enabled(cfg: ModelConfig, hp: TrainHParams) -> bool:
+    """Whether the step runs on the flat state plane.
+
+    Must be derivable from (cfg, hparams) alone — no mesh:
+    ``init_train_state`` and the step builders resolve it independently
+    and their state structures have to agree. The per-leaf reference path
+    remains the carrier for param-aligned sharding policies (explicit
+    FSDP, pod-ZeRO'd or data-sharded state) and bf16 moments, which the
+    single-buffer plane does not express. Models big enough that ANY mesh
+    could auto-enable FSDP (``sharding.wants_fsdp`` at model-parallel 1 —
+    the mesh-free worst case) also stay on the reference path: a flat
+    plane with replicated P(None) state would re-materialize exactly the
+    memory FSDP exists to shard.
+    """
+    from repro.distributed.sharding import FSDP_THRESHOLD
+    from repro.models.config import param_count
+    return (hp.fused and hp.fsdp is not True and not hp.state_fsdp_axes
+            and not hp.shard_cada_state and hp.moments_dtype == "float32"
+            and 2 * param_count(cfg) <= FSDP_THRESHOLD)
 
 
 # ------------------------------------------------------------------- specs
@@ -125,6 +153,20 @@ def train_state_specs(cfg: ModelConfig, mesh, hp: TrainHParams
                       ) -> DistTrainState:
     psp = param_pspecs(cfg, mesh, hp.fsdp, hp.fsdp_axes)
     waxis = worker_axis_name(mesh)
+    strategy = strategy_for(hp.rule)
+    if _flat_enabled(cfg, hp):
+        # flat plane: gradient-shaped state needs only two spec shapes —
+        # replicated flat buffers and worker-leading (M, n_flat) planes;
+        # parameter-shaped extras keep the param specs.
+        return DistTrainState(
+            step=P(),
+            params=psp,
+            h=P(None), vhat=P(None),
+            comm=(None if strategy.stateless else
+                  F.flat_comm_state_specs(
+                      strategy, psp, _prepend_worker(psp, waxis),
+                      waxis, P)),
+        )
     wsp = _prepend_worker(psp, waxis)
     # optimizer moments may ZeRO over more axes than params (see hparams)
     msp = (param_pspecs(cfg, mesh, True, hp.state_fsdp_axes)
@@ -135,7 +177,6 @@ def train_state_specs(cfg: ModelConfig, mesh, hp: TrainHParams
     gsp = (param_pspecs(cfg, mesh, True, ("data",))
            if hp.shard_cada_state else psp)
     gwsp = _prepend_worker(gsp, waxis)
-    strategy = strategy_for(hp.rule)
     return DistTrainState(
         step=P(),
         params=psp,
@@ -195,12 +236,28 @@ def init_train_state(cfg: ModelConfig, hp: TrainHParams, m: int, rng
                      ) -> DistTrainState:
     params = init_params(cfg, rng)
     strategy = strategy_for(hp.rule)
-    zeros_m = jax.tree.map(
-        lambda p: jnp.zeros(p.shape, hp.moments_jnp_dtype), params)
+    # h and v̂ are allocated as DISTINCT buffers throughout: the jitted
+    # step donates the state, and aliased leaves trip XLA's
+    # donate-the-same-buffer-twice check.
+    if _flat_enabled(cfg, hp):
+        layout = F.layout_of(params)
+        return DistTrainState(
+            step=jnp.zeros([], jnp.int32),
+            params=params,
+            h=jnp.zeros((layout.n_flat,), jnp.float32),
+            vhat=jnp.zeros((layout.n_flat,), jnp.float32),
+            comm=(None if strategy.stateless else
+                  F.init_flat_comm_state(strategy, layout, params, m,
+                                         grad_dtype=hp.cada_jnp_dtype)),
+        )
+
+    def zeros_m():
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, hp.moments_jnp_dtype), params)
     return DistTrainState(
         step=jnp.zeros([], jnp.int32),
         params=params,
-        h=zeros_m, vhat=zeros_m,
+        h=zeros_m(), vhat=zeros_m(),
         comm=(None if strategy.stateless else
               init_comm_state(strategy, params, m,
                               grad_dtype=hp.cada_jnp_dtype)),
@@ -358,6 +415,26 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
         losses, grads = vgrad_per_raw(wparams, batch)
         return losses, wconstrain(grads)
 
+    use_flat = _flat_enabled(cfg, hp)
+    if use_flat:
+        layout = F.layout_of(abstract_params(cfg))
+        # the stacked 2M-row fused evaluation (identical numerics — vmap
+        # row independence) applies only on the vmap route (the pod-manual
+        # shard_map pins the M-leading axis in its in-specs) and only on
+        # accelerators: CPU backends win more from XLA collapsing the
+        # broadcast-θ fresh eval into one large matmul. Matches the
+        # engine's default so the parity contract stays bit-exact.
+        fuse_evals = (vgrad_factory is None
+                      and jax.default_backend() == "tpu")
+
+        def fused_update(pflat, h, vhat, grad_flat):
+            """Fused AMSGrad/CADA server update on the packed plane —
+            Pallas on TPU, fused flat jnp elsewhere (kernels/ops.py)."""
+            theta, h2, vh2, dsq = kops.fused_amsgrad_flat(
+                pflat, h, vhat, grad_flat, hp.lr,
+                b1=hp.b1, b2=hp.b2, eps=hp.eps)
+            return layout.unpack(layout.cast_roundtrip(theta)), h2, vh2, dsq
+
     # ------------- stateless rules (always ⇒ distributed Adam/AMSGrad):
     # no innovation state is materialized — the production path for the
     # 314B/405B single-pod fallback, where M stale gradient copies would
@@ -365,9 +442,15 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
     if strategy.stateless:
         def step_always(state: DistTrainState, batch):
             losses, fresh = vgrad(state.params, batch)
-            grad = jax.tree.map(lambda g: jnp.mean(g, axis=0), fresh)
-            params, h, vhat, dsq = _amsgrad_apply(
-                state.params, state.h, state.vhat, grad, hp)
+            if use_flat:
+                grad_flat = jnp.mean(layout.pack_worker(fresh), axis=0)
+                params, h, vhat, dsq = fused_update(
+                    layout.pack(state.params), state.h, state.vhat,
+                    grad_flat)
+            else:
+                grad = jax.tree.map(lambda g: jnp.mean(g, axis=0), fresh)
+                params, h, vhat, dsq = _amsgrad_apply(
+                    state.params, state.h, state.vhat, grad, hp)
             new_state = state._replace(step=state.step + 1, params=params,
                                        h=h, vhat=vhat)
             return new_state, {
@@ -382,6 +465,24 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
 
     # ------------- rules with innovation state: the shared Algorithm-1
     # core drives the round; this function only applies the server update.
+    if use_flat:
+        def step_flat(state: DistTrainState, batch):
+            k = state.step
+            pflat = layout.pack(state.params)
+            out = F.flat_comm_round(
+                strategy, layout, state.comm, state.params, pflat, batch,
+                k, vgrad=vgrad, vgrad_per=vgrad_per, fuse_evals=fuse_evals)
+            params, h, vhat, dsq = fused_update(
+                pflat, state.h, state.vhat, F.nabla_f32(out.comm))
+            comm = F.record_progress(out.comm, dsq, k)
+            new_state = DistTrainState(step=k + 1, params=params, h=h,
+                                       vhat=vhat, comm=comm)
+            metrics = {"loss": jnp.mean(out.losses), "dtheta_sq": dsq,
+                       **out.metrics}
+            return new_state, metrics
+
+        return step_flat
+
     def step(state: DistTrainState, batch):
         k = state.step
         out = comm_round(strategy, state.comm, state.params, batch, k,
@@ -447,8 +548,11 @@ def jit_train_step(cfg: ModelConfig, mesh, hp: TrainHParams):
                 for k, v in batch_sds.items()}
 
     def make(batch_sds):
+        # the state argument is donated: launch/train.py threads it
+        # linearly, so the (potentially huge) buffers alias in place
         return jax.jit(step,
                        in_shardings=(sshard, batch_shardings(batch_sds)),
-                       out_shardings=(sshard, None))
+                       out_shardings=(sshard, None),
+                       donate_argnums=(0,))
 
     return make, sspecs, m

@@ -95,6 +95,74 @@ def fused_amsgrad_flat(theta, h, vhat, grad, lr, *, b1=0.9, b2=0.999,
     return (t_new.reshape(n), h_new.reshape(n), vh_new.reshape(n), sq[0, 0])
 
 
+def _batched_diff_sq_kernel(a_ref, b_ref, out_ref):
+    """Partial Σ_j (a_mj − b_mj)² for ONE worker row, accumulated across the
+    inner (sequential) block grid axis — all M CADA rule LHS norms in a
+    single pass over the two (M, n) planes."""
+    d = a_ref[...].astype(jnp.float32) - b_ref[...].astype(jnp.float32)
+    blk = jnp.sum(d * d)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[0, 0] = 0.0
+
+    out_ref[0, 0] += blk
+
+
+def batched_diff_sq_norm_flat(a, b, *, interpret=False):
+    """(M,) per-worker ||a_m − b_m||² over (M, n) pre-flattened planes.
+
+    The grid is (M, n/BLOCK) with the block axis innermost: the TPU grid is
+    sequential, so each worker's (1, 1) accumulator is initialized at its
+    first block and revisited — the same pattern as the unbatched kernels,
+    just with a second grid axis for the worker rows.
+    """
+    m, n = a.shape
+    assert n % BLOCK == 0, f"flat width {n} not a multiple of {BLOCK}"
+    nb = n // BLOCK
+    shape3d = (m, nb * BLOCK_ROWS, LANES)
+    spec = pl.BlockSpec((1, BLOCK_ROWS, LANES), lambda i, j: (i, j, 0))
+    out = pl.pallas_call(
+        _batched_diff_sq_kernel,
+        grid=(m, nb),
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=interpret,
+    )(a.reshape(shape3d), b.reshape(shape3d))
+    return out[:, 0]
+
+
+def _batched_sq_kernel(a_ref, out_ref):
+    """Partial Σ_j a_mj² for one worker row (single-operand variant)."""
+    v = a_ref[...].astype(jnp.float32)
+    blk = jnp.sum(v * v)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[0, 0] = 0.0
+
+    out_ref[0, 0] += blk
+
+
+def batched_sq_norm_flat(a, *, interpret=False):
+    """(M,) per-worker ||a_m||² over an (M, n) pre-flattened plane."""
+    m, n = a.shape
+    assert n % BLOCK == 0, f"flat width {n} not a multiple of {BLOCK}"
+    nb = n // BLOCK
+    shape3d = (m, nb * BLOCK_ROWS, LANES)
+    spec = pl.BlockSpec((1, BLOCK_ROWS, LANES), lambda i, j: (i, j, 0))
+    out = pl.pallas_call(
+        _batched_sq_kernel,
+        grid=(m, nb),
+        in_specs=[spec],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=interpret,
+    )(a.reshape(shape3d))
+    return out[:, 0]
+
+
 def _diff_sq_kernel(a_ref, b_ref, out_ref):
     """Partial Σ (a − b)² — the CADA rule LHS, one fused pass."""
     d = a_ref[...].astype(jnp.float32) - b_ref[...].astype(jnp.float32)

@@ -1,13 +1,24 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-On this CPU container the kernels execute in ``interpret=True`` mode (the
-kernel body runs in Python-on-CPU for bit-faithful validation); on a real TPU
-``interpret=False`` compiles the same BlockSpec tiling to Mosaic. The flag
-defaults from the backend so user code never branches.
+Kernel-mode routing (the ``interpret`` flag on every flat op):
+
+  * ``None`` (default) — on TPU, compile the Pallas kernel with Mosaic;
+    elsewhere use the FUSED FLAT JNP fallback (same math on the same flat
+    buffers, fused by XLA) so the hot paths and the test suite stay fast on
+    CPU;
+  * ``True``  — run the Pallas kernel in interpret mode (the kernel body
+    executes as traced jnp, bit-faithful validation of the BlockSpec
+    tiling);
+  * ``False`` — force the compiled Pallas kernel.
+
+The wrappers also own the BLOCK padding: arbitrary flat lengths are padded
+with zeros up to whole kernel blocks and sliced back, so every pytree —
+logreg through the LM path — takes the fused route (zero-padded gradients
+leave zero moments and a zero update, so reductions are unaffected).
 
 ``fused_cada_update`` is the pytree-level entry point used by the optimizer:
 it flattens the parameter pytree into one padded fp32 stream, runs the fused
-kernel, and scatters back — giving the one-HBM-pass optimizer step plus the
+update, and scatters back — giving the one-HBM-pass optimizer step plus the
 CADA rule's ||Δθ||² for free.
 """
 from __future__ import annotations
@@ -18,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import cada_update as _cu
+from repro.kernels import ref as _ref
 from repro.kernels import ssm_scan as _ss
 
 
@@ -25,22 +37,76 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _use_pallas(interpret) -> tuple[bool, bool]:
+    """Resolve the 3-way ``interpret`` flag -> (use_pallas, interpret)."""
+    if interpret is None:
+        return jax.default_backend() == "tpu", False
+    return True, bool(interpret)
+
+
+def _pad_flat(arrs, block=_cu.BLOCK):
+    """Zero-pad same-length flat buffers to a whole number of blocks."""
+    n = arrs[0].shape[0]
+    pad = (-n) % block
+    if pad == 0:
+        return arrs, n
+    return [jnp.pad(a, ((0, pad),)) for a in arrs], n
+
+
+def _pad_plane(a, block=_cu.BLOCK):
+    """Zero-pad the flat axis of an (M, n) plane to whole blocks."""
+    pad = (-a.shape[1]) % block
+    return jnp.pad(a, ((0, 0), (0, pad))) if pad else a
+
+
 # ------------------------------------------------------------------ flat ops
 
 @partial(jax.jit, static_argnames=("b1", "b2", "eps", "interpret"))
 def fused_amsgrad_flat(theta, h, vhat, grad, lr, *, b1=0.9, b2=0.999,
                        eps=1e-8, interpret=None):
-    if interpret is None:
-        interpret = _default_interpret()
-    return _cu.fused_amsgrad_flat(theta, h, vhat, grad, lr, b1=b1, b2=b2,
-                                  eps=eps, interpret=interpret)
+    """Fused AMSGrad/CADA step over arbitrary-length flat buffers.
+
+    Returns (theta', h', vhat', ||update||²); moments must be fp32.
+    """
+    pallas, interpret = _use_pallas(interpret)
+    if not pallas:
+        return _ref.amsgrad_ref(theta, h, vhat, grad, lr, b1=b1, b2=b2,
+                                eps=eps)
+    (t, hh, vh, g), n = _pad_flat([theta, h, vhat, grad])
+    t2, h2, vh2, sq = _cu.fused_amsgrad_flat(t, hh, vh, g, lr, b1=b1, b2=b2,
+                                             eps=eps, interpret=interpret)
+    return t2[:n], h2[:n], vh2[:n], sq
 
 
 @partial(jax.jit, static_argnames=("interpret",))
 def diff_sq_norm_flat(a, b, *, interpret=None):
-    if interpret is None:
-        interpret = _default_interpret()
-    return _cu.diff_sq_norm_flat(a, b, interpret=interpret)
+    pallas, interpret = _use_pallas(interpret)
+    if not pallas:
+        return _ref.diff_sq_norm_ref(a, b)
+    (ap, bp), _ = _pad_flat([a, b])
+    return _cu.diff_sq_norm_flat(ap, bp, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def batched_diff_sq_norm(a, b, *, interpret=None):
+    """(M,) per-worker ||a_m − b_m||² over (M, n) planes — the CADA rule
+    LHS for all M workers in one pass (fp32 accumulate)."""
+    pallas, interpret = _use_pallas(interpret)
+    if not pallas:
+        d = a.astype(jnp.float32) - b.astype(jnp.float32)
+        return jnp.sum(d * d, axis=1)
+    ap, bp = (_pad_plane(x) for x in (a, b))
+    return _cu.batched_diff_sq_norm_flat(ap, bp, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def batched_sq_norm(a, *, interpret=None):
+    """(M,) per-worker ||a_m||² over an (M, n) plane."""
+    pallas, interpret = _use_pallas(interpret)
+    if not pallas:
+        v = a.astype(jnp.float32)
+        return jnp.sum(v * v, axis=1)
+    return _cu.batched_sq_norm_flat(_pad_plane(a), interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("chunk", "dblk", "interpret"))
@@ -84,9 +150,10 @@ def flash_attention(q, k, v, *, window=0, q_blk=None, kv_blk=None,
 
 # --------------------------------------------------------------- pytree ops
 
-def _flatten_padded(tree, dtype, block=_cu.BLOCK):
-    """Concat all leaves (as ``dtype``) into one flat buffer padded to a
-    whole number of kernel blocks. Returns (flat, unflatten_fn)."""
+def _flatten_padded(tree, dtype, block=1024):
+    """Concat all leaves (as ``dtype``) into one flat buffer padded to full
+    VPU tiles. Returns (flat, unflatten_fn). Kernel-block padding happens
+    inside the flat wrappers above, so small pytrees stay small here."""
     leaves, treedef = jax.tree.flatten(tree)
     sizes = [l.size for l in leaves]
     shapes = [l.shape for l in leaves]

@@ -70,7 +70,9 @@ def main() -> None:
     if args.workers:
         m = args.workers  # host-mesh override (simulated workers)
         from repro.distributed.trainer import make_train_step
-        step = jax.jit(make_train_step(cfg, hp, m))
+        # donate the state: the train loop threads it linearly, so the
+        # buffers alias in place instead of being copied every step
+        step = jax.jit(make_train_step(cfg, hp, m), donate_argnums=(0,))
     else:
         step = None
 

@@ -32,10 +32,13 @@ class FusedAMSGrad(NamedTuple):
     eps: float = 1e-8
 
     def init(self, params) -> FusedState:
-        zeros = jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        return FusedState(count=jnp.zeros([], jnp.int32), h=zeros,
-                          vhat=zeros)
+        # h and v̂ must be DISTINCT buffers: donated states with aliased
+        # leaves trip XLA's donate-the-same-buffer-twice check
+        def zeros():
+            return jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return FusedState(count=jnp.zeros([], jnp.int32), h=zeros(),
+                          vhat=zeros())
 
     def apply(self, params, state: FusedState, grads):
         """One fused step. Returns (params', state', ||Δθ||²)."""
@@ -44,6 +47,27 @@ class FusedAMSGrad(NamedTuple):
             params, state.h, state.vhat, grads, lr,
             b1=self.b1, b2=self.b2, eps=self.eps)
         return p, FusedState(count=state.count + 1, h=h, vhat=vhat), sq
+
+    # ---- flat-plane interface (core/flat.py hot paths)
+    def init_flat(self, n_flat: int) -> FusedState:
+        """State over pre-flattened (n_flat,) fp32 buffers — no pytree
+        bookkeeping, so the step needs no pack/unpack of the moments.
+        (h and v̂ are distinct buffers — donation-safe.)"""
+        return FusedState(count=jnp.zeros([], jnp.int32),
+                          h=jnp.zeros((n_flat,), jnp.float32),
+                          vhat=jnp.zeros((n_flat,), jnp.float32))
+
+    def apply_flat(self, theta, state: FusedState, grad, *, interpret=None):
+        """One fused step over flat buffers: (theta', state', ||Δθ||²).
+
+        ``interpret`` is the 3-way kernel-mode flag of kernels/ops.py
+        (None = Pallas on TPU / fused flat jnp elsewhere).
+        """
+        lr = self.lr(state.count) if callable(self.lr) else self.lr
+        t, h, vhat, sq = kops.fused_amsgrad_flat(
+            theta, state.h, state.vhat, grad, lr,
+            b1=self.b1, b2=self.b2, eps=self.eps, interpret=interpret)
+        return t, FusedState(count=state.count + 1, h=h, vhat=vhat), sq
 
 
 def as_optimizer(fused: FusedAMSGrad) -> Optimizer:

@@ -379,3 +379,19 @@ class HloCostModel:
 
 def analyze(hlo_text: str) -> Cost:
     return HloCostModel(hlo_text).entry_cost()
+
+
+_ALIAS_RE = re.compile(r"\b(?:may|must)-alias\b")
+
+
+def donation_aliases(hlo_text: str) -> int:
+    """Number of input→output buffer aliases in a compiled module.
+
+    ``jax.jit(..., donate_argnums=...)`` only avoids the per-call copy of
+    the state buffers when XLA actually records the donation in the
+    module's ``input_output_alias`` table — a donated argument that cannot
+    alias (dtype/layout mismatch, consumed twice) is silently copied.
+    Benches and tests assert this count is positive so "donated" means
+    "aliased", not just "requested".
+    """
+    return len(_ALIAS_RE.findall(hlo_text))

@@ -1,0 +1,267 @@
+"""Flat-buffer state plane (core/flat.py): layout round-tripping, the
+batched-LHS kernels vs the pytree oracles, flat quantization equivalence,
+fused-vs-reference engine parity for every registered rule (Pallas kernels
+exercised in interpret mode), and donation aliasing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import flat as F
+from repro.core.comm import per_worker_sq_norm, strategy_for
+from repro.core.quantize import per_worker_quantize_dequantize
+from repro.core.rules import RULES, CommRule
+from repro.kernels import cada_update as _cu
+from repro.kernels import ops as kops
+
+
+def _mixed_tree(rng, bf16=True):
+    return {
+        "w": jnp.asarray(rng.normal(size=(13, 7)), jnp.float32),
+        "e": jnp.asarray(rng.normal(size=(5, 3, 2)),
+                         jnp.bfloat16 if bf16 else jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(11,)), jnp.float32),
+        "s": jnp.asarray(rng.normal(size=()), jnp.float32),
+    }
+
+
+# ------------------------------------------------------------------ layout
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.booleans())
+def test_pack_unpack_roundtrip_property(seed, bf16):
+    """pack -> unpack is exact for every leaf (incl. bf16 storage), and
+    the padded tail is identically zero."""
+    rng = np.random.default_rng(seed)
+    tree = _mixed_tree(rng, bf16=bf16)
+    layout = F.layout_of(tree)
+    buf = layout.pack(tree)
+    assert buf.shape == (layout.n_flat,) and layout.n_flat % F.PAD_ALIGN == 0
+    assert layout.n == sum(np.prod(l.shape, dtype=int)
+                           for l in jax.tree.leaves(tree))
+    np.testing.assert_array_equal(np.asarray(buf[layout.n:]), 0.0)
+    back = layout.unpack(buf)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_pack_worker_roundtrip(rng):
+    m = 4
+    tree = _mixed_tree(rng)
+    wtree = jax.tree.map(
+        lambda l: jnp.stack([l + i for i in range(m)]), tree)
+    layout = F.layout_of(tree)
+    plane = layout.pack_worker(wtree)
+    assert plane.shape == (m, layout.n_flat)
+    back = layout.unpack_worker(plane)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(wtree)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_cast_roundtrip_matches_pack_of_unpack(rng):
+    """cast_roundtrip(buf) == pack(unpack(buf)) — the invariant that keeps
+    the engine's carried flat params consistent with the trainer's
+    re-packed ones under reduced-precision leaves."""
+    tree = _mixed_tree(rng, bf16=True)
+    layout = F.layout_of(tree)
+    buf = layout.pack(tree) + 1e-4  # perturb off exact bf16 values
+    rt = layout.cast_roundtrip(buf)
+    np.testing.assert_array_equal(
+        np.asarray(rt[:layout.n]),
+        np.asarray(layout.pack(layout.unpack(buf))[:layout.n]))
+    # the padding tail passes through untouched
+    np.testing.assert_array_equal(np.asarray(rt[layout.n:]),
+                                  np.asarray(buf[layout.n:]))
+    # all-fp32 layouts: a no-op (object identity — no ops inserted)
+    t32 = _mixed_tree(rng, bf16=False)
+    l32 = F.layout_of(t32)
+    b32 = l32.pack(t32)
+    assert l32.cast_roundtrip(b32) is b32
+
+
+# --------------------------------------------------------- batched kernels
+
+def test_batched_diff_sq_norm_kernel_vs_oracle(rng):
+    """The batched one-pass Pallas kernel (interpret mode) computes all M
+    per-worker ||a_m − b_m||² exactly like per_worker_sq_norm."""
+    m, n = 3, 2 * _cu.BLOCK
+    a = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    got = _cu.batched_diff_sq_norm_flat(a, b, interpret=True)
+    want = per_worker_sq_norm({"x": a - b})
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    got1 = _cu.batched_sq_norm_flat(a, interpret=True)
+    want1 = per_worker_sq_norm({"x": a})
+    np.testing.assert_allclose(np.asarray(got1), np.asarray(want1),
+                               rtol=1e-5)
+
+
+def test_batched_wrappers_pad_arbitrary_widths(rng):
+    """kernels/ops.py wrappers accept any flat width (satellite: no
+    n % BLOCK restriction) on both the jnp and interpret-Pallas routes."""
+    m, n = 4, 1234
+    a = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    want = np.sum((np.asarray(a) - np.asarray(b)) ** 2, axis=1)
+    for interpret in (None, True):
+        got = kops.batched_diff_sq_norm(a, b, interpret=interpret)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4)
+
+
+def test_fused_amsgrad_flat_arbitrary_length(rng):
+    """ops.fused_amsgrad_flat pads through to the kernel for any n —
+    logreg-sized buffers take the fused route too (satellite 1)."""
+    from repro.kernels import ref
+    n = 777
+    theta = jnp.asarray(rng.normal(size=n), jnp.float32)
+    h = jnp.asarray(rng.normal(size=n) * 0.1, jnp.float32)
+    vhat = jnp.abs(jnp.asarray(rng.normal(size=n) * 0.01, jnp.float32))
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    want = ref.amsgrad_ref(theta, h, vhat, g, 0.01)
+    for interpret in (None, True):
+        got = kops.fused_amsgrad_flat(theta, h, vhat, g, 0.01,
+                                      interpret=interpret)
+        for a, b in zip(got, want):
+            assert np.asarray(a).shape == np.asarray(b).shape
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------- flat quantization
+
+def test_flat_quantize_matches_pytree_quantize(rng):
+    """Per-(worker, leaf-segment) scales on the flat plane are bit-equal
+    to the pytree per-worker quantizer (the wire-format sync property)."""
+    m = 3
+    tree = {"w": jnp.asarray(rng.normal(size=(m, 6, 2)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(m, 4)), jnp.float32)}
+    layout = F.layout_of({"w": tree["w"][0], "b": tree["b"][0]})
+    plane = layout.pack_worker(tree)
+    for bits in (2, 4, 8):
+        q_flat = F.per_worker_quantize_dequantize_flat(layout, plane, bits)
+        q_tree = per_worker_quantize_dequantize(tree, bits)
+        np.testing.assert_array_equal(
+            np.asarray(q_flat), np.asarray(layout.pack_worker(q_tree)))
+    # padded tail survives untouched
+    np.testing.assert_array_equal(
+        np.asarray(F.per_worker_quantize_dequantize_flat(
+            layout, plane, 4)[:, layout.n:]),
+        np.asarray(plane[:, layout.n:]))
+
+
+# ------------------------------------- fused vs reference engine parity
+
+def _small_problem(m):
+    from repro.data.partition import pad_to_matrix, uniform_partition
+    from repro.data.synthetic import ijcnn1_like
+    from repro.core.engine import make_sampler
+    from repro.models.small import logreg_init, logreg_loss
+    ds = ijcnn1_like(n=400)
+    mtx = pad_to_matrix(uniform_partition(ds.n, m, seed=0))
+    sample = make_sampler(ds.x, ds.y, mtx, 16)
+    return logreg_loss, logreg_init(None, 22, 2), sample
+
+
+@pytest.mark.parametrize("kind", RULES)
+def test_fused_engine_matches_reference_engine(kind):
+    """The flat-plane hot path and the per-leaf reference implementation
+    of Algorithm 1 agree per iteration for EVERY registered rule — masks
+    exactly, parameters numerically — with the Pallas kernels running in
+    interpret mode on the fused side."""
+    from repro.core.engine import CADAEngine
+    from repro.optim.fused import FusedAMSGrad
+    m, steps = 3, 8
+    loss_fn, params, sample = _small_problem(m)
+    # c chosen so adaptive rules produce a MIXED mask over the run
+    rule = CommRule(kind=kind, c=5.0, d_max=4, max_delay=6)
+    batches = jax.vmap(sample)(jax.random.split(jax.random.PRNGKey(2),
+                                                steps))
+    eng_f = CADAEngine(loss_fn, FusedAMSGrad(lr=0.05), rule, m,
+                       interpret=True)
+    eng_r = CADAEngine(loss_fn, FusedAMSGrad(lr=0.05), rule, m,
+                       fused=False)
+    stf, mf = jax.jit(eng_f.run)(eng_f.init(params), batches)
+    str_, mr = jax.jit(eng_r.run)(eng_r.init(params), batches)
+    np.testing.assert_array_equal(np.asarray(mf["upload_mask"]),
+                                  np.asarray(mr["upload_mask"]))
+    np.testing.assert_array_equal(np.asarray(mf["staleness"]),
+                                  np.asarray(mr["staleness"]))
+    np.testing.assert_allclose(np.asarray(mf["bytes_up"]),
+                               np.asarray(mr["bytes_up"]), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(stf.params),
+                    jax.tree.leaves(str_.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_fused_engine_mixed_mask_meta():
+    """Meta-check: the parity setup above exercises BOTH branches (uploads
+    and skips) for cada2 — all-upload trajectories would prove less."""
+    from repro.core.engine import CADAEngine
+    from repro.optim.fused import FusedAMSGrad
+    m, steps = 3, 8
+    loss_fn, params, sample = _small_problem(m)
+    rule = CommRule(kind="cada2", c=5.0, d_max=4, max_delay=6)
+    batches = jax.vmap(sample)(jax.random.split(jax.random.PRNGKey(2),
+                                                steps))
+    eng = CADAEngine(loss_fn, FusedAMSGrad(lr=0.05), rule, m)
+    _, mets = jax.jit(eng.run)(eng.init(params), batches)
+    total = int(np.asarray(mets["uploads"]).sum())
+    assert 0 < total < steps * m, total
+
+
+# ---------------------------------------------------------------- donation
+
+def test_donated_engine_state_aliases():
+    """donate_argnums on the jitted run actually aliases the state buffers
+    (verified on the compiled module — a donated-but-copied state would
+    show zero aliases), and the undonated version shows none for the
+    matching param buffers only."""
+    from repro.core.engine import CADAEngine
+    from repro.optim.fused import FusedAMSGrad
+    from repro.utils.hlo_cost import donation_aliases
+    m, steps = 3, 4
+    loss_fn, params, sample = _small_problem(m)
+    rule = CommRule(kind="cada2", c=0.6, d_max=4, max_delay=6)
+    batches = jax.vmap(sample)(jax.random.split(jax.random.PRNGKey(0),
+                                                steps))
+    eng = CADAEngine(loss_fn, FusedAMSGrad(lr=0.05), rule, m)
+    st = eng.init(params)
+    donated = jax.jit(eng.run, donate_argnums=(0,)).lower(
+        st, batches).compile()
+    assert donation_aliases(donated.as_text()) > 0
+    plain = jax.jit(eng.run).lower(st, batches).compile()
+    assert donation_aliases(plain.as_text()) == 0
+    # the donated executable still runs and matches the plain one
+    out_d, _ = donated(jax.tree.map(lambda x: x.copy(), st), batches)
+    out_p, _ = plain(st, batches)
+    for a, b in zip(jax.tree.leaves(out_d.params),
+                    jax.tree.leaves(out_p.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_donated_trainer_step_aliases():
+    """The trainer's jitted step with donated state aliases too (the
+    launch/train.py and benchmarks/run.py hot loops)."""
+    import repro.configs as C
+    from repro.distributed.trainer import (TrainHParams, init_train_state,
+                                           make_train_step, worker_split)
+    from repro.utils.hlo_cost import donation_aliases
+    cfg = C.get_smoke_config("stablelm-1.6b")
+    hp = TrainHParams(rule=CommRule(kind="cada2", c=0.5, d_max=4,
+                                    max_delay=10), lr=1e-3)
+    m = 2
+    step = jax.jit(make_train_step(cfg, hp, m), donate_argnums=(0,))
+    st = init_train_state(cfg, hp, m, jax.random.PRNGKey(0))
+    batch = worker_split(
+        {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 33), 0,
+                                      cfg.vocab)}, m)
+    compiled = step.lower(st, batch).compile()
+    assert donation_aliases(compiled.as_text()) > 0

@@ -1,10 +1,13 @@
 """Engine ↔ trainer parity: the guardrail for the shared Algorithm-1 core.
 
 Both `core/engine.py` (vmap-simulated workers) and `distributed/trainer.py`
-(pod runtime) consume the SAME `core/comm.py` comm_round; this test pins
-that contract: on identical data, for EVERY rule, they must produce
-identical per-iteration upload masks, staleness vectors, and (numerically)
-identical parameter trajectories.
+(pod runtime) consume the SAME Algorithm-1 core; this test pins that
+contract on the DEFAULT configuration of both — the flat-buffer state
+plane with the fused AMSGrad/CADA server update (core/flat.py +
+optim/fused.py): on identical data, for EVERY rule, identical
+per-iteration upload masks, staleness vectors, and (numerically) identical
+parameter trajectories. The per-leaf reference pair (fused=False engine vs
+non-fused trainer) is pinned for cada2 as the oracle-side guardrail.
 """
 import jax
 import jax.numpy as jnp
@@ -18,6 +21,7 @@ from repro.distributed.trainer import (TrainHParams, init_train_state,
                                        make_train_step, worker_split)
 from repro.models.model import init_params, lm_loss
 from repro.optim.adam import adam
+from repro.optim.fused import FusedAMSGrad
 
 CFG = C.get_smoke_config("stablelm-1.6b")
 M = 2
@@ -36,10 +40,14 @@ def _batches():
         for i in range(STEPS)]
 
 
-def _run_engine(rule):
-    # adam() defaults ARE the trainer's AMSGrad stream: amsgrad=True,
-    # eps inside the sqrt, no bias correction (paper eqs. 2a-2c)
-    eng = CADAEngine(_loss_fn, adam(lr=LR), rule, M)
+def _run_engine(rule, fused=True):
+    # FusedAMSGrad IS the trainer's fused stream; the reference pair uses
+    # adam() whose defaults match it: amsgrad=True, eps inside the sqrt,
+    # no bias correction (paper eqs. 2a-2c)
+    if fused:
+        eng = CADAEngine(_loss_fn, FusedAMSGrad(lr=LR), rule, M)
+    else:
+        eng = CADAEngine(_loss_fn, adam(lr=LR), rule, M, fused=False)
     st = eng.init(init_params(CFG, jax.random.PRNGKey(0)))
     step = jax.jit(eng.step)
     mets = []
@@ -49,8 +57,8 @@ def _run_engine(rule):
     return st, mets
 
 
-def _run_trainer(rule):
-    hp = TrainHParams(rule=rule, lr=LR)
+def _run_trainer(rule, fused=True):
+    hp = TrainHParams(rule=rule, lr=LR, fused=fused)
     step = jax.jit(make_train_step(CFG, hp, M))
     st = init_train_state(CFG, hp, M, jax.random.PRNGKey(0))
     mets = []
@@ -60,14 +68,7 @@ def _run_trainer(rule):
     return st, mets
 
 
-@pytest.mark.parametrize("kind", RULES)
-def test_engine_and_trainer_identical_per_iteration(kind):
-    # c chosen so the mask is MIXED over the run (some uploads, some skips)
-    # for the adaptive rules — parity on all-upload trajectories alone
-    # would not exercise the stale branches.
-    rule = CommRule(kind=kind, c=20.0, d_max=4, max_delay=10)
-    est, emets = _run_engine(rule)
-    tst, tmets = _run_trainer(rule)
+def _assert_parity(kind, emets, tmets, est, tst):
 
     for i, (em, tm) in enumerate(zip(emets, tmets)):
         np.testing.assert_array_equal(
@@ -83,6 +84,28 @@ def test_engine_and_trainer_identical_per_iteration(kind):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("kind", RULES)
+def test_engine_and_trainer_identical_per_iteration(kind):
+    """Default (fused flat-plane) engine vs default trainer — all rules.
+
+    c chosen so the mask is MIXED over the run (some uploads, some skips)
+    for the adaptive rules — parity on all-upload trajectories alone
+    would not exercise the stale branches.
+    """
+    rule = CommRule(kind=kind, c=20.0, d_max=4, max_delay=10)
+    est, emets = _run_engine(rule)
+    tst, tmets = _run_trainer(rule)
+    _assert_parity(kind, emets, tmets, est, tst)
+
+
+def test_reference_pair_parity_cada2():
+    """The per-leaf reference implementations stay in lockstep too."""
+    rule = CommRule(kind="cada2", c=20.0, d_max=4, max_delay=10)
+    est, emets = _run_engine(rule, fused=False)
+    tst, tmets = _run_trainer(rule, fused=False)
+    _assert_parity("cada2-ref", emets, tmets, est, tst)
 
 
 def test_adaptive_rules_actually_skip_in_this_setup():
