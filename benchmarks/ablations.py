@@ -109,7 +109,9 @@ def sweep_bits(iters=400, bits_list=(0, 8, 4)) -> list[dict]:
 
 def sweep_rules(iters=400) -> list[dict]:
     """Every registered communication strategy on one problem: the
-    loss/uploads/bytes trade-off surface of the whole rule family."""
+    loss/uploads/bytes trade-off surface of the whole rule family.
+    ``bytes_per_upload`` makes the compressed-upload rules (cinn/laq/topk)
+    comparable to the skip-only rules at EQUAL upload counts."""
     sample, params = _problem()
     rows = []
     for kind in strategy_kinds():
@@ -120,17 +122,26 @@ def sweep_rules(iters=400) -> list[dict]:
         batches = jax.vmap(sample)(
             jax.random.split(jax.random.PRNGKey(1), iters))
         _, mets = jax.jit(eng.run)(st, batches)
+        uploads = int(np.asarray(mets["uploads"]).sum())
+        mbytes = float(np.asarray(mets["bytes_up"]).sum() / 1e6)
         rows.append({
             "sweep": "rule", "rule": kind,
             "final_loss": float(np.asarray(mets["loss"])[-20:].mean()),
             "skip_rate": float(np.asarray(mets["skip_rate"]).mean()),
-            "uploads": int(np.asarray(mets["uploads"]).sum()),
-            "mbytes_up": float(np.asarray(mets["bytes_up"]).sum() / 1e6),
+            "uploads": uploads,
+            "mbytes_up": mbytes,
+            "bytes_per_upload": round(mbytes * 1e6 / max(uploads, 1), 2),
             "grad_evals": int(np.asarray(mets["grad_evals"]).sum()),
         })
         print(f"  rule={kind:7s} loss={rows[-1]['final_loss']:.4f} "
               f"skip={rows[-1]['skip_rate']:.2f} "
-              f"upload={rows[-1]['mbytes_up']:.3f} MB")
+              f"upload={rows[-1]['mbytes_up']:.3f} MB "
+              f"({rows[-1]['bytes_per_upload']} B/upload)")
+    # the compressed-upload rules must beat full-width fp32 uploads at
+    # equal upload counts — the whole point of shrinking the wire
+    per_up = {r["rule"]: r["bytes_per_upload"] for r in rows}
+    for kind in ("cinn", "laq", "topk"):
+        assert per_up[kind] < per_up["always"], (kind, per_up)
     return rows
 
 

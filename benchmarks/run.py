@@ -148,14 +148,24 @@ def bench_trainer_lm(steps: int = 30) -> dict:
     hp = TrainHParams(rule=CommRule(kind="cada2", c=0.6, d_max=10,
                                     max_delay=50), lr=1e-3)
     step = jax.jit(make_train_step(cfg, hp, m), donate_argnums=(0,))
-    st = init_train_state(cfg, hp, m, jax.random.PRNGKey(0))
+    st0 = init_train_state(cfg, hp, m, jax.random.PRNGKey(0))
     batch = worker_split(
         {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 65), 0,
                                       cfg.vocab)}, m)
-    st, mets = step(st, batch)               # compile + warmup
+
+    def fresh():
+        # the step donates its state, so each rep gets copies of st0
+        return jax.tree.map(lambda x: x.copy(), st0)
+
+    st, mets = step(fresh(), batch)          # compile + warmup
     jax.block_until_ready(st.params)
     dt = float("inf")                        # best-of-3 (noisy boxes)
     for _ in range(3):
+        # re-init per rep: continuing one trajectory across reps would
+        # time DIFFERENT upload regimes (CADA uploads thin out as training
+        # advances), making later reps incomparably cheaper
+        st = fresh()
+        jax.block_until_ready(st)  # keep the async state copy off the clock
         t0 = time.time()
         for _ in range(steps):
             st, mets = step(st, batch)

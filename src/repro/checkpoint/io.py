@@ -51,7 +51,14 @@ def save(path: str, tree: Any, step: int | None = None) -> None:
 def restore(path: str, like: Any,
             device_put_fn: Callable[[str, np.ndarray], Any] | None = None
             ) -> tuple[Any, int | None]:
-    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    """Restore into the structure of ``like`` (shapes/dtypes validated).
+
+    The manifest records each leaf's LOGICAL dtype (bf16/fp8 payloads are
+    stored widened to fp32 — npz can't round-trip ml_dtypes); restoring
+    into a ``like`` whose leaf dtype differs from the manifest's is an
+    error, not a silent cast: a checkpoint saved under one dtype policy
+    (fp32 moments) must not quietly narrow into another (bf16).
+    """
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
@@ -60,14 +67,22 @@ def restore(path: str, like: Any,
         raise ValueError(
             "checkpoint tree mismatch:\n saved: "
             f"{manifest['paths'][:5]}...\n expected: {paths[:5]}...")
+    saved_dtypes = manifest.get("dtypes")
     out = []
     for i, (p, ref) in enumerate(zip(paths, leaves)):
         a = data[f"leaf_{i}"]
         if list(a.shape) != list(np.shape(ref)):
             raise ValueError(f"shape mismatch at {p}: {a.shape} vs "
                              f"{np.shape(ref)}")
-        if str(a.dtype) != str(np.dtype(getattr(ref, "dtype", a.dtype))):
-            # widened-on-save leaves come back via jnp (ml_dtypes cast)
+        ref_dtype = str(np.dtype(getattr(ref, "dtype", a.dtype)))
+        if saved_dtypes is not None and saved_dtypes[i] != ref_dtype:
+            raise ValueError(
+                f"dtype mismatch at {p}: checkpoint holds "
+                f"{saved_dtypes[i]}, restore target expects {ref_dtype}")
+        if str(a.dtype) != ref_dtype:
+            # the intentional widened round-trip: the leaf was SAVED as
+            # this logical dtype (validated above) and stored as fp32
+            # bits; cast back via jnp (ml_dtypes)
             import jax.numpy as jnp
             a = np.asarray(jnp.asarray(a).astype(ref.dtype))
         out.append(device_put_fn(p, a) if device_put_fn else a)

@@ -25,7 +25,13 @@ Paper equation ↔ class mapping:
   eq. (10)    :class:`CADA2Strategy`   same-sample two-iterate difference
   —           :class:`AlwaysStrategy`  threshold never satisfied ⇒ Adam
   beyond      :class:`CompressedInnovationStrategy`  quantized-innovation
-  paper                                gating (LAQ / arXiv 2111.00705 style)
+  paper                                gating (arXiv 2111.00705 style)
+  beyond      :class:`LAQStrategy`     full LAQ: error-feedback residual +
+  paper                                quantized wire [Sun et al., 2019]
+  beyond      :class:`TopKStrategy`    top-k sparsified innovation with
+  paper                                error feedback (arXiv 2112.04088)
+  beyond      :class:`AVPStrategy`     per-worker variance-adaptive upload
+  paper                                period (arXiv 2007.06134 style)
   ==========  =======================  ====================================
 
 Adding a rule is a one-class change: subclass :class:`CommStrategy`,
@@ -39,13 +45,18 @@ cross-pod collective).
 """
 from __future__ import annotations
 
+import math
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec
 
-from repro.core.flat import per_worker_quantize_dequantize_flat
-from repro.core.quantize import per_worker_quantize_dequantize
+from repro.core.flat import (per_worker_quantize_dequantize_flat,
+                             per_worker_topk_sparsify_flat)
+from repro.core.quantize import (ef_correct, ef_residual,
+                                 per_worker_quantize_dequantize,
+                                 per_worker_topk_sparsify, topk_count)
 from repro.core.rules import CommRule
 from repro.kernels import ops as kops
 from repro.utils.trees import tree_size
@@ -188,6 +199,19 @@ class CommStrategy:
                 delta, self.rule.quantize_bits)
         return delta
 
+    def wire_delta(self, ctx: CommContext, extras: dict, cache, delta):
+        """The innovation that actually rides the wire.
+
+        ``delta`` is the raw fp32 innovation fresh − stale; the default is
+        the stateless :meth:`transform_delta`. Strategies whose wire
+        consults per-worker state (error-feedback residuals) or whose LHS
+        already computed the compressed plane (``cinn`` gates on
+        ||Q_b(δ)||²) override this to reuse ``cache`` instead of
+        compressing a second time.
+        """
+        del ctx, extras, cache
+        return self.transform_delta(delta)
+
     # ---- flat-plane hooks (core/flat.py)
     # The hot-path twin of the pytree hooks above: gradient-shaped
     # innovation state lives on packed (M, n_flat) planes and the LHS is a
@@ -243,6 +267,11 @@ class CommStrategy:
             return per_worker_quantize_dequantize_flat(
                 layout, delta, self.rule.quantize_bits)
         return delta
+
+    def flat_wire_delta(self, ctx, extras: dict, cache, delta):
+        """Flat-plane twin of :meth:`wire_delta`."""
+        del extras, cache
+        return self.transform_delta_flat(ctx.layout, delta)
 
     # ---- accounting
     @property
@@ -434,6 +463,11 @@ class CompressedInnovationStrategy(CommStrategy):
     ||Q_b(δ_m)||² > RHS. One gradient evaluation per iteration (the stale
     term is the stored contribution, no re-evaluation), and uploads are
     accounted at b bits per entry.
+
+    The quantized plane computed for the gate IS the wire: ``lhs`` hands
+    it back as the strategy cache and :meth:`wire_delta` reuses it, so the
+    round quantizes exactly once (it used to re-quantize the same δ via
+    ``transform_delta`` — bit-identical output, twice the work).
     """
     kind = "cinn"
 
@@ -449,7 +483,11 @@ class CompressedInnovationStrategy(CommStrategy):
             lambda f, s: f.astype(jnp.float32) - s.astype(jnp.float32),
             ctx.fresh, ctx.comm.worker_grads)
         q = per_worker_quantize_dequantize(innovation, self.bits_per_entry)
-        return per_worker_sq_norm(q), None
+        return per_worker_sq_norm(q), q
+
+    def wire_delta(self, ctx, extras, cache, delta):
+        del delta  # cache IS Q_b(δ) of this round's innovation
+        return cache
 
     def transform_delta_flat(self, layout, delta):
         return per_worker_quantize_dequantize_flat(layout, delta,
@@ -459,7 +497,239 @@ class CompressedInnovationStrategy(CommStrategy):
         innovation = ctx.fresh - ctx.comm.worker_grads.astype(jnp.float32)
         q = per_worker_quantize_dequantize_flat(ctx.layout, innovation,
                                                 self.bits_per_entry)
-        return kops.batched_sq_norm(q, interpret=ctx.interpret), None
+        return kops.batched_sq_norm(q, interpret=ctx.interpret), q
+
+    def flat_wire_delta(self, ctx, extras, cache, delta):
+        del delta
+        return cache
+
+
+class ErrorFeedbackStrategy(CommStrategy):
+    """Shared scaffolding of the explicit-residual compressed-upload rules:
+    wire = C(δ_m + e_m), gate = ||wire||², residual transition on upload —
+    ONCE per concern per plane, so a change to the residual semantics
+    cannot silently diverge between rules or planes. Subclasses supply
+    only the compressor pair (:meth:`_compress` / :meth:`_compress_flat`)
+    and their accounting."""
+
+    def _compress(self, corrected):
+        """Pytree compressor over the fp32 corrected innovation."""
+        raise NotImplementedError
+
+    def _compress_flat(self, layout, corrected):
+        """(M, n_flat)-plane twin — must be bit-identical."""
+        raise NotImplementedError
+
+    def init_extras(self, params, m, make_grad_zeros, bcast):
+        # error_feedback=False is genuinely memory-free: no residual plane
+        # is allocated (it would be worker-grads-sized), not just unused
+        if not self.rule.error_feedback:
+            return {}
+        return {"residual": bcast(make_grad_zeros(), m)}
+
+    def extras_specs(self, param_spec, worker_param_spec, worker_grad_spec):
+        if not self.rule.error_feedback:
+            return {}
+        return {"residual": worker_grad_spec}
+
+    def lhs(self, ctx, extras):
+        delta = jax.tree.map(
+            lambda f, s: f.astype(jnp.float32) - s.astype(jnp.float32),
+            ctx.fresh, ctx.comm.worker_grads)
+        corrected = (ef_correct(delta, extras["residual"])
+                     if self.rule.error_feedback else delta)
+        wire = self._compress(corrected)
+        return per_worker_sq_norm(wire), (wire, corrected)
+
+    def wire_delta(self, ctx, extras, cache, delta):
+        del delta
+        return cache[0]
+
+    def post_upload(self, extras, cache, upload, ctx):
+        if not self.rule.error_feedback:
+            return extras
+        wire, corrected = cache
+        return {**extras,
+                "residual": ef_residual(corrected, wire, upload,
+                                        extras["residual"])}
+
+    # ---- flat plane: e_m is one (M, n_flat) plane.
+    def init_flat_extras(self, layout, params, params_flat, m, grad_dtype):
+        if not self.rule.error_feedback:
+            return {}
+        return {"residual": jnp.zeros((m, layout.n_flat), grad_dtype)}
+
+    def flat_extras_specs(self, param_spec, worker_param_spec, waxis, P):
+        if not self.rule.error_feedback:
+            return {}
+        return {"residual": P(waxis, None)}
+
+    def flat_lhs(self, ctx, extras):
+        delta = ctx.fresh - ctx.comm.worker_grads.astype(jnp.float32)
+        corrected = (ef_correct(delta, extras["residual"])
+                     if self.rule.error_feedback else delta)
+        wire = self._compress_flat(ctx.layout, corrected)
+        return kops.batched_sq_norm(wire, interpret=ctx.interpret), \
+            (wire, corrected)
+
+    def flat_wire_delta(self, ctx, extras, cache, delta):
+        del delta
+        return cache[0]
+
+    def flat_post_upload(self, extras, cache, upload, ctx):
+        return self.post_upload(extras, cache, upload, ctx)
+
+
+@register
+class LAQStrategy(ErrorFeedbackStrategy):
+    """Beyond-paper: full LAQ [Sun et al., 2019] — lazy uploads composed
+    with b-bit quantization AND an error-feedback residual.
+
+    Each worker carries e_m, the quantization error its past uploads left
+    behind. The wire is Q_b(δ_m + e_m): the corrected innovation; the gate
+    is its energy, ||Q_b(δ_m + e_m)||² > RHS — the worker uploads exactly
+    when what it WOULD transmit still carries information relative to
+    recent server progress. On upload e_m ← (δ_m + e_m) − Q_b(δ_m + e_m);
+    on skip e_m is carried unchanged (the unsent innovation re-enters the
+    next δ_m via the stale copy, not via e_m).
+
+    Error-retention semantics, precisely: because δ_m is an INNOVATION
+    against the synced stale copy (which absorbs only the quantized wire),
+    the architecture already re-injects each round's compression error
+    once — it reappears inside the next δ_m for free. The textbook
+    residual therefore injects it a SECOND time: on a stationary gradient
+    the stale copies oscillate inside the quantization band (EF-SGD-grade
+    bounded noise, vanishing as 2^{−b}) instead of locking on exactly,
+    which ``error_feedback=False`` (e_m ≡ 0, the memory-free variant —
+    what Sun et al.'s LAQ actually does) achieves. Keep the default for
+    studying the textbook composition; prefer ``error_feedback=False`` at
+    coarse widths (b ≤ 4), where the doubled band is material. Both
+    behaviours are pinned by a regression test. One gradient evaluation
+    per iteration; uploads are accounted at b (default 8) bits per entry.
+    """
+    kind = "laq"
+
+    @property
+    def bits_per_entry(self) -> int:
+        return self.rule.quantize_bits or 8
+
+    def _compress(self, corrected):
+        return per_worker_quantize_dequantize(corrected, self.bits_per_entry)
+
+    def _compress_flat(self, layout, corrected):
+        # rides the segment-vectorized flat quantizer (bit-identical scales)
+        return per_worker_quantize_dequantize_flat(layout, corrected,
+                                                   self.bits_per_entry)
+
+
+@register
+class TopKStrategy(ErrorFeedbackStrategy):
+    """Beyond-paper: top-k sparsified innovation with error feedback (the
+    sparse-upload family of arXiv 2112.04088).
+
+    The wire keeps only the ⌈topk_frac·size⌉ largest-magnitude entries of
+    δ_m + e_m per (worker, leaf); the dropped mass lands in the
+    error-feedback residual e_m (same transition as :class:`LAQStrategy`,
+    with sparsification as the compressor; ``quantize_bits`` additionally
+    quantizes the kept values). The gate is the energy of the sparse wire.
+    The :class:`LAQStrategy` error-retention caveat applies here too: the
+    innovation-vs-stale-copy mechanism re-injects dropped mass once on its
+    own, so the textbook residual doubles it — bounded, and
+    ``error_feedback=False`` is the memory-free alternative.
+
+    Accounting is SPARSE: an upload costs k·(value_bits + index_bits)
+    bits with k = ⌈topk_frac·n⌉ over the whole parameter vector,
+    value_bits = ``quantize_bits`` or 32, index_bits = ⌈log₂ n⌉ — not
+    n·32. (The per-leaf masks keep ⌈frac·size⌉ per leaf, so the true kept
+    count can exceed k by at most one per leaf — the flat and pytree
+    planes report identical bytes either way.)
+    """
+    kind = "topk"
+
+    def _compress(self, corrected):
+        sparse = per_worker_topk_sparsify(corrected, self.rule.topk_frac)
+        return (per_worker_quantize_dequantize(sparse,
+                                               self.rule.quantize_bits)
+                if self.rule.quantize_bits else sparse)
+
+    def _compress_flat(self, layout, corrected):
+        sparse = per_worker_topk_sparsify_flat(layout, corrected,
+                                               self.rule.topk_frac)
+        return (per_worker_quantize_dequantize_flat(
+                    layout, sparse, self.rule.quantize_bits)
+                if self.rule.quantize_bits else sparse)
+
+    # ---- sparse accounting
+    def bytes_per_upload(self, n_params: int) -> float:
+        k = topk_count(n_params, self.rule.topk_frac)
+        index_bits = max(1, math.ceil(math.log2(n_params))) \
+            if n_params > 1 else 1
+        return k * (self.bits_per_entry + index_bits) / 8.0
+
+
+@register
+class AVPStrategy(CommStrategy):
+    """Beyond-paper: variance-adaptive upload period (arXiv 2007.06134
+    style, re-expressed on the CADA state).
+
+    Each worker keeps its own integer period p_m ∈ [period_min,
+    resolved_period_max] and uploads exactly when its staleness reaches
+    p_m (the shared max-staleness cap still applies above it). After every
+    iteration p_m adapts against the SHARED recent-progress RHS the CADA
+    rules use: while the worker's innovation energy ||δ_m||² exceeds the
+    RHS its period shrinks by one (communicate more while informative),
+    otherwise it grows by one. One gradient evaluation per iteration —
+    the adaptation reads the progress ring, never a second evaluation.
+    """
+    kind = "avp"
+
+    def _init_periods(self, m: int):
+        return jnp.full((m,), self.rule.period_min, jnp.int32)
+
+    def _adapt(self, period, energy, diff_hist):
+        r = self.rule
+        return jnp.clip(
+            jnp.where(energy > r.rhs(diff_hist), period - 1, period + 1),
+            r.period_min, r.resolved_period_max)
+
+    @staticmethod
+    def _gate(staleness, period):
+        due = staleness >= period
+        return jnp.where(due, jnp.inf, -jnp.inf).astype(jnp.float32)
+
+    def init_extras(self, params, m, make_grad_zeros, bcast):
+        return {"period": self._init_periods(m)}
+
+    def extras_specs(self, param_spec, worker_param_spec, worker_grad_spec):
+        return {"period": PartitionSpec(None)}
+
+    def lhs(self, ctx, extras):
+        delta = jax.tree.map(
+            lambda f, s: f.astype(jnp.float32) - s.astype(jnp.float32),
+            ctx.fresh, ctx.comm.worker_grads)
+        energy = per_worker_sq_norm(delta)
+        return self._gate(ctx.comm.staleness, extras["period"]), energy
+
+    def post_upload(self, extras, energy, upload, ctx):
+        return {**extras,
+                "period": self._adapt(extras["period"], energy,
+                                      ctx.comm.diff_hist)}
+
+    # ---- flat plane: only the energy norm changes form.
+    def init_flat_extras(self, layout, params, params_flat, m, grad_dtype):
+        return {"period": self._init_periods(m)}
+
+    def flat_extras_specs(self, param_spec, worker_param_spec, waxis, P):
+        return {"period": P(None)}
+
+    def flat_lhs(self, ctx, extras):
+        energy = kops.batched_diff_sq_norm(
+            ctx.fresh, ctx.comm.worker_grads.astype(jnp.float32),
+            interpret=ctx.interpret)
+        return self._gate(ctx.comm.staleness, extras["period"]), energy
+
+    def flat_post_upload(self, extras, energy, upload, ctx):
+        return self.post_upload(extras, energy, upload, ctx)
 
 
 # ----------------------------------------------------------- shared round
@@ -521,19 +791,20 @@ def comm_round(strategy: CommStrategy, comm: CommState, params, batch, k,
 
     # Lines 7/9: rule LHS vs the shared recent-progress RHS.
     lhs, cache = strategy.lhs(ctx, extras)
-    rhs = (r.c / r.d_max) * jnp.sum(comm.diff_hist)
+    rhs = r.rhs(comm.diff_hist)
     # Line 10: upload if the condition is VIOLATED or staleness capped.
     upload = (lhs > rhs) | (comm.staleness >= r.max_delay)
 
     # Eq. (3): server refines ∇ with the uploaded innovations δ_m. The
-    # strategy's wire format (quantize hook) is applied to δ BEFORE both
-    # the server aggregate and the worker stale copy, so the two sides
-    # stay exactly in sync; the cast to the stale-tree storage dtype is
-    # the cross-worker wire dtype (bf16 halves DCN bytes on the pod mesh).
+    # strategy's wire format (quantize/sparsify/error-feedback hook) is
+    # applied to δ BEFORE both the server aggregate and the worker stale
+    # copy, so the two sides stay exactly in sync; the cast to the
+    # stale-tree storage dtype is the cross-worker wire dtype (bf16 halves
+    # DCN bytes on the pod mesh).
     delta = jax.tree.map(
         lambda f, s: f.astype(jnp.float32) - s.astype(jnp.float32),
         fresh, comm.worker_grads)
-    delta = strategy.transform_delta(delta)
+    delta = strategy.wire_delta(ctx, extras, cache, delta)
     zeros = jax.tree.map(jnp.zeros_like, delta)
     wire = jax.tree.map(
         lambda d, s: d.astype(s.dtype),

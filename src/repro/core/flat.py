@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.quantize import topk_count, topk_threshold_mask
+
 # Minimal flat-buffer alignment. The Pallas wrappers in kernels/ops.py
 # re-pad to whole kernel blocks on demand, so the layout itself stays lean:
 # on CPU a (M, n_flat) plane carries almost no padding waste even for toy
@@ -143,21 +145,65 @@ def layout_of(tree, align: int | None = None) -> FlatLayout:
                       n_flat=max(n_flat, align))
 
 
+def _segment_ids(layout: FlatLayout) -> np.ndarray:
+    """(n_flat,) int32 leaf-segment id per buffer position; the padding
+    tail (if any) is its own trailing segment ``len(sizes)``. Static —
+    computed from the layout at trace time."""
+    ids = np.full((layout.n_flat,), len(layout.sizes), np.int32)
+    for i, (o, s) in enumerate(zip(layout.offsets, layout.sizes)):
+        ids[o:o + s] = i
+    return ids
+
+
 def per_worker_quantize_dequantize_flat(layout: FlatLayout, buf, bits: int):
     """Flat-plane twin of ``quantize.per_worker_quantize_dequantize``:
     b-bit symmetric uniform round-trip with one max-abs scale per
     (worker, leaf-segment) — bit-identical to the pytree version, since the
-    scales are exact maxima over the same entries."""
+    scales are exact maxima over the same entries.
+
+    Vectorized over segments: ONE segment-max sweep computes every
+    (worker, leaf) scale and one gather broadcasts them back, instead of a
+    Python loop materializing a slice + concatenate per leaf (the loop cost
+    scaled with the number of leaves — LM pytrees have hundreds). The
+    padding tail passes through untouched (max is exact, so bit-equality
+    with the pytree form is preserved)."""
     if bits <= 0 or bits >= 32:
         return buf
     levels = float(2 ** (bits - 1) - 1)
+    n_seg = len(layout.sizes)
+    seg = jnp.asarray(_segment_ids(layout))
+    xf = buf.astype(jnp.float32)
+    # (n_seg+1, M) per-segment max-abs; empty segments are never gathered
+    # into a non-pad position, so their -inf identity is harmless.
+    seg_max = jax.ops.segment_max(jnp.abs(xf).T, seg, num_segments=n_seg + 1,
+                                  indices_are_sorted=True)
+    scale = jnp.maximum(seg_max, 1e-12)[seg].T          # (M, n_flat)
+    q = jnp.round(xf / scale * levels)
+    deq = (q * scale / levels).astype(buf.dtype)
+    if layout.n_flat > layout.n:
+        deq = jnp.where((seg < n_seg)[None, :], deq, buf)
+    return deq
+
+
+def per_worker_topk_sparsify_flat(layout: FlatLayout, buf, frac: float):
+    """Flat-plane twin of ``quantize.per_worker_topk_sparsify``: keep the
+    top-⌈frac·size⌉ largest-|x| entries per (worker, leaf-segment), zero
+    the rest — bit-identical to the pytree form (same threshold rule over
+    the same entries). Top-k runs per segment: segments are ragged (one k
+    per segment) and the threshold rule keeps ALL ties at the kth value,
+    which a rank-based segment-vectorized sort would break — bit-equality
+    with the pytree sparsifier is what the parity gates pin, so the
+    per-segment loop is the deliberate trade-off here (unlike the
+    quantizer above, whose max-scales vectorize exactly). The padding
+    tail passes through untouched."""
+    if frac >= 1.0:
+        return buf
     parts = []
     for o, s in zip(layout.offsets, layout.sizes):
         seg = buf[:, o:o + s]
-        scale = jnp.maximum(
-            jnp.max(jnp.abs(seg), axis=1, keepdims=True), 1e-12)
-        q = jnp.round(seg / scale * levels)
-        parts.append(q * scale / levels)
+        mask = topk_threshold_mask(seg.astype(jnp.float32),
+                                   topk_count(s, frac))
+        parts.append(seg * mask)
     if layout.n_flat > layout.n:
         parts.append(buf[:, layout.n:])
     return jnp.concatenate(parts, axis=1)
@@ -295,14 +341,14 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
 
     # Lines 7/9: rule LHS vs the shared recent-progress RHS.
     lhs, cache = strategy.flat_lhs(ctx, extras)
-    rhs = (r.c / r.d_max) * jnp.sum(comm.diff_hist)
+    rhs = r.rhs(comm.diff_hist)
     # Line 10: upload if the condition is VIOLATED or staleness capped.
     upload = (lhs > rhs) | (comm.staleness >= r.max_delay)
 
     # Eq. (3): innovation delta, wire format, masked aggregation — each a
     # single whole-plane op (one (M, n_flat) sweep instead of ~6 tree_maps).
     wg32 = comm.worker_grads.astype(jnp.float32)
-    delta = strategy.transform_delta_flat(layout, fresh - wg32)
+    delta = strategy.flat_wire_delta(ctx, extras, cache, fresh - wg32)
     wire = jnp.where(upload[:, None], delta, 0.0).astype(
         comm.worker_grads.dtype)
     nabla = (comm.nabla.astype(jnp.float32)

@@ -1,4 +1,5 @@
-"""Uniform gradient-innovation quantization (LAQ-style composition).
+"""Lossy innovation compression: uniform quantization, top-k
+sparsification, and error-feedback residuals (LAQ-style compositions).
 
 The CADA paper's closest sibling, LAQ [Sun et al., 2019], combines the
 lazy-upload rule with QUANTIZED innovations: workers upload b-bit uniform
@@ -10,8 +11,19 @@ Per-leaf symmetric uniform quantization with a max-abs scale:
 Deterministic rounding (reproducible); the quantization error is bounded
 by s / 2^b per entry, which preserves the CADA rule's variance-reduction
 argument (the error enters eq. (9) as an O(2^{-2b}) additive term).
+
+Top-k keeps only the k largest-magnitude entries per (worker, leaf); error
+feedback carries the dropped/rounded mass in a per-worker residual e_m:
+    wire_m = C(δ_m + e_m),   e_m ← (δ_m + e_m) − wire_m   (on upload)
+so the compression error re-enters later innovations instead of being lost
+(the classic EF-SGD argument transfers — compressed mass is delayed, not
+discarded). ``ef_correct``/``ef_residual`` are dtype-polymorphic tree maps,
+so they serve BOTH state planes: pytrees of (M, ...) leaves and bare
+(M, n_flat) buffers (a bare array is a one-leaf pytree).
 """
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -49,3 +61,62 @@ def per_worker_quantize_dequantize(tree, bits: int):
         return (q * scale / levels).astype(x.dtype)
 
     return jax.tree.map(leaf, tree)
+
+
+# ------------------------------------------------------------------- top-k
+
+def topk_count(size: int, frac: float) -> int:
+    """Entries kept per worker for a leaf/segment of ``size`` (at least 1)."""
+    return max(1, min(size, int(np.ceil(frac * size))))
+
+
+def topk_threshold_mask(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(M, s) bool mask of the k largest-|x| entries per row.
+
+    Threshold form (|x| >= kth largest |x|): ties at the threshold are ALL
+    kept, so the mask is deterministic and identical however the row is
+    stored — the property that keeps the pytree and flat-plane sparsifiers
+    bit-equal.
+    """
+    k = int(min(max(k, 1), x.shape[1]))
+    absx = jnp.abs(x)
+    kth = jax.lax.top_k(absx, k)[0][:, -1:]
+    return absx >= kth
+
+
+def per_worker_topk_sparsify(tree, frac: float):
+    """Keep the top-⌈frac·size⌉ largest-magnitude entries per (worker,
+    leaf); everything else becomes exactly zero. Leaves carry a leading
+    worker axis."""
+    if frac >= 1.0:
+        return tree
+
+    def leaf(x):
+        xf = x.astype(jnp.float32)
+        m = xf.shape[0]
+        flat = xf.reshape(m, -1)
+        mask = topk_threshold_mask(flat, topk_count(flat.shape[1], frac))
+        return (flat * mask).reshape(xf.shape).astype(x.dtype)
+
+    return jax.tree.map(leaf, tree)
+
+
+# ----------------------------------------------------------- error feedback
+
+def ef_correct(delta, residual):
+    """δ_m + e_m in fp32 — the innovation the compressor actually sees."""
+    return jax.tree.map(
+        lambda d, e: d.astype(jnp.float32) + e.astype(jnp.float32),
+        delta, residual)
+
+
+def ef_residual(corrected, wire, upload, residual):
+    """Post-upload residual transition (storage dtype follows ``residual``):
+    uploaders keep what their wire dropped, e_m ← (δ_m+e_m) − wire_m;
+    skippers carry e_m unchanged (their unsent innovation re-enters the
+    NEXT δ_m through the stale worker copy, not through e_m)."""
+    def leaf(c, w, e):
+        mm = upload.reshape((-1,) + (1,) * (c.ndim - 1))
+        err = c.astype(jnp.float32) - w.astype(jnp.float32)
+        return jnp.where(mm, err.astype(e.dtype), e)
+    return jax.tree.map(leaf, corrected, wire, residual)

@@ -18,15 +18,40 @@ lives in first-class strategy objects in :mod:`repro.core.comm`; the
   * ``lag``    (eq. 5)  — naive stochastic LAG (different samples — shown
     ineffective in §2.1; reproduced as a baseline).
   * ``always``          — threshold never satisfied ⇒ distributed Adam.
-  * ``cinn``  (beyond-paper) — compressed-innovation gating: upload iff the
-    b-bit quantized innovation ||Q_b(δ_m)||² exceeds the RHS (LAQ /
-    arXiv 2111.00705 family); proves the strategy layer's extensibility.
+
+Beyond-paper rules (the compressed-upload family — these both SKIP uploads
+like the paper's rules AND shrink the uploads that do happen):
+
+  * ``cinn`` — compressed-innovation gating: upload iff the b-bit quantized
+    innovation ||Q_b(δ_m)||² exceeds the RHS (arXiv 2111.00705 family);
+    ``quantize_bits`` (default 8) sets the wire width.
+  * ``laq``  — full LAQ [Sun et al., 2019]: each worker carries an
+    error-feedback residual e_m across rounds; the wire is Q_b(δ_m + e_m)
+    and e_m accumulates the quantization error after every upload.
+    ``error_feedback=False`` is the memory-free variant — see
+    ``comm.LAQStrategy`` for the error-retention semantics (the lazy
+    innovation already re-injects compression error once, so the textbook
+    residual doubles the band; prefer False at b ≤ 4). Uploads are
+    accounted at ``quantize_bits`` (default 8) bits per entry.
+  * ``topk`` — top-k sparsified innovation with error feedback
+    (arXiv 2112.04088 style): only the ``topk_frac`` largest-magnitude
+    entries of δ_m + e_m ride the wire (per worker, per leaf); the dropped
+    mass lands in e_m. Uploads are accounted SPARSELY as
+    k·(value_bits + index_bits) with k = ⌈topk_frac·n⌉,
+    value_bits = ``quantize_bits`` or 32, and index_bits = ⌈log₂ n⌉ —
+    NOT as n·32.
+  * ``avp``  — variance-adaptive upload period (arXiv 2007.06134 style):
+    each worker keeps its own integer period p_m ∈ [period_min,
+    period_max] and uploads when its staleness reaches p_m; p_m shrinks
+    while the innovation energy exceeds the shared recent-progress RHS and
+    grows when it does not. One gradient evaluation per iteration — the
+    adaptation reads the RHS ring, never a second evaluation.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
-RULES = ("cada1", "cada2", "lag", "always", "cinn")
+RULES = ("cada1", "cada2", "lag", "always", "cinn", "laq", "topk", "avp")
 
 
 @dataclass(frozen=True)
@@ -38,7 +63,13 @@ class CommRule:
     max_delay: int = 50     # D — forces an upload and snapshot period
     quantize_bits: int = 0  # 0 = rule default; b-bit uniform innovation
     #                         upload (LAQ-style composition — beyond-paper;
-    #                         the ``cinn`` rule defaults to 8 bits)
+    #                         the ``cinn``/``laq`` rules default to 8 bits)
+    error_feedback: bool = True  # laq/topk: carry the per-worker residual
+    #                              e_m across rounds (False = drop the
+    #                              compression error instead)
+    topk_frac: float = 0.1  # topk: fraction of innovation entries uploaded
+    period_min: int = 1     # avp: per-worker upload-period lower bound
+    period_max: int = 0     # avp: upper bound (0 = max_delay)
 
     def __post_init__(self):
         # validate against the live strategy registry (late import — comm.py
@@ -55,6 +86,28 @@ class CommRule:
             raise ValueError("threshold c must be >= 0")
         if self.quantize_bits and not 2 <= self.quantize_bits < 32:
             raise ValueError("quantize_bits must be 0 or in [2, 32)")
+        if not 0.0 < self.topk_frac <= 1.0:
+            raise ValueError("topk_frac must be in (0, 1]")
+        if self.period_min < 1 or self.period_max < 0:
+            raise ValueError("period_min must be >= 1 and period_max >= 0")
+        if self.resolved_period_max < self.period_min:
+            raise ValueError(
+                f"period_max ({self.resolved_period_max}) must be >= "
+                f"period_min ({self.period_min})")
+
+    @property
+    def resolved_period_max(self) -> int:
+        """avp upper period bound: explicit, or the staleness cap D."""
+        return self.period_max or self.max_delay
+
+    def rhs(self, diff_hist):
+        """The shared recent-progress RHS, (c/d_max)·Σ_d ||θ^{k+1-d}−θ^{k-d}||².
+
+        The ONE home of the formula: both Algorithm-1 rounds gate against
+        it and avp adapts its periods against it — they cannot drift.
+        """
+        import jax.numpy as jnp
+        return (self.c / self.d_max) * jnp.sum(diff_hist)
 
     @property
     def grad_evals_per_iter(self) -> int:

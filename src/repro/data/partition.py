@@ -53,13 +53,26 @@ def dirichlet_partition(labels: np.ndarray, m: int, alpha: float = 0.3,
     return [np.sort(np.array(s, dtype=np.int64)) for s in shards]
 
 
-def pad_to_matrix(shards: list[np.ndarray]) -> np.ndarray:
-    """(M, n_max) index matrix; short shards wrap around (with-replacement)."""
+def pad_to_matrix(shards: list[np.ndarray], seed: int = 0) -> np.ndarray:
+    """(M, n_max) index matrix; short shards wrap around (with-replacement).
+
+    The wrap fill is a seeded random subset of the shard, NOT its head:
+    every example appears either ⌊n_max/len(s)⌋ or ⌊n_max/len(s)⌋+1 times,
+    so per-example sampling probability within a worker is uniform to
+    within one part in ``len(s)``. (A head-truncated ``np.tile`` gave the
+    first ``n_max % len(s)`` examples a whole extra replica — on unequal
+    shards, the paper's covtype setup, that systematically oversampled
+    head-of-shard examples.)
+    """
     n_max = max(len(s) for s in shards)
+    rng = np.random.default_rng(seed)
     out = np.zeros((len(shards), n_max), dtype=np.int64)
     for i, s in enumerate(shards):
         if len(s) == 0:
             raise ValueError(f"worker {i} received an empty shard")
-        reps = int(np.ceil(n_max / len(s)))
-        out[i] = np.tile(s, reps)[:n_max]
+        reps, rem = divmod(n_max, len(s))
+        fill = np.tile(s, reps)
+        if rem:
+            fill = np.concatenate([fill, rng.permutation(s)[:rem]])
+        out[i] = fill
     return out

@@ -7,9 +7,12 @@ wherever it fits; the 34B/314B/405B archs need production memory policy
 every deviation is recorded here in one place and noted in DESIGN.md
 §Arch-applicability and the EXPERIMENTS.md roofline table.
 
-``rule_kind`` may be ANY strategy registered in :mod:`repro.core.comm`
-(paper rules plus beyond-paper ones like ``cinn``); the policy only
-decides hyper-parameters and memory knobs, never rule behaviour.
+``rule_kind`` may be ANY strategy registered in :mod:`repro.core.comm` —
+paper rules plus the beyond-paper compressed-upload family (``cinn``,
+``laq``, ``topk``) and the variance-adaptive period rule (``avp``); the
+policy only decides hyper-parameters and memory knobs, never rule
+behaviour. For ``topk`` the kept fraction scales down with model size
+(the absolute kept count is what the DCN wire pays for).
 """
 from __future__ import annotations
 
@@ -33,7 +36,11 @@ def train_policy(cfg: ModelConfig, mesh, rule_kind: str | None = None
         raise ValueError(f"unknown rule kind {rule_kind!r}; registered "
                          f"strategies: {strategy_kinds()}")
 
-    rule = CommRule(kind=rule_kind, c=0.6, d_max=10, max_delay=50)
+    # topk: a 34B+ innovation at frac=0.1 still ships gigabytes per upload;
+    # 1% keeps the sparse wire proportionate on the big archs.
+    topk_frac = 0.01 if (rule_kind == "topk" and n > 20e9) else 0.1
+    rule = CommRule(kind=rule_kind, c=0.6, d_max=10, max_delay=50,
+                    topk_frac=topk_frac)
 
     if n > 100e9:  # grok-1-314b, llama3-405b
         if not multi:

@@ -43,6 +43,16 @@ def main() -> None:
                         "repro.core.comm is launchable")
     p.add_argument("--quantize-bits", type=int, default=0,
                    help="b-bit innovation uploads (0 = rule default)")
+    p.add_argument("--topk-frac", type=float, default=0.1,
+                   help="topk rule: fraction of innovation entries "
+                        "uploaded per (worker, leaf)")
+    p.add_argument("--no-error-feedback", action="store_true",
+                   help="laq/topk: drop the compression error instead of "
+                        "carrying the per-worker residual e_m")
+    p.add_argument("--period-min", type=int, default=1,
+                   help="avp rule: per-worker upload-period lower bound")
+    p.add_argument("--period-max", type=int, default=0,
+                   help="avp rule: upper bound (0 = max-delay)")
     p.add_argument("--steps", type=int, default=50)
     p.add_argument("--global-batch", type=int, default=8)
     p.add_argument("--seq", type=int, default=128)
@@ -64,7 +74,11 @@ def main() -> None:
     mesh = make_host_mesh()
     hp = TrainHParams(rule=CommRule(kind=args.rule, c=args.c, d_max=10,
                                     max_delay=50,
-                                    quantize_bits=args.quantize_bits),
+                                    quantize_bits=args.quantize_bits,
+                                    error_feedback=not args.no_error_feedback,
+                                    topk_frac=args.topk_frac,
+                                    period_min=args.period_min,
+                                    period_max=args.period_max),
                       lr=args.lr, microbatches=args.microbatches)
     make, _, m = jit_train_step(cfg, mesh, hp)
     if args.workers:

@@ -149,6 +149,223 @@ def test_cinn_lhs_is_quantized_innovation_energy():
     np.testing.assert_allclose(np.asarray(lhs), [1.0, 0.0])
 
 
+def test_laq_lhs_and_residual_transition():
+    """Full LAQ: the wire is Q_b(δ + e), the gate is its energy, and the
+    uploader's residual absorbs exactly the quantization error."""
+    rule = CommRule(kind="laq", quantize_bits=2)
+    strat = strategy_for(rule)
+    comm = _state(rule)  # worker_grads = 0, residual = 0 ⇒ corrected = fresh
+    fresh = _wtree([[1.0, 0.4], [0.0, 0.0]], [[0.0], [0.0]])
+    lhs, cache = strat.lhs(_ctx(rule, fresh, comm), comm.extras)
+    # 2-bit: 0.4/1.0 rounds to 0 ⇒ wire row0 = [1, 0], energy 1
+    np.testing.assert_allclose(np.asarray(lhs), [1.0, 0.0])
+    q, corrected = cache
+    np.testing.assert_allclose(np.asarray(q["w"]), [[1.0, 0.0], [0.0, 0.0]])
+    wire = strat.wire_delta(_ctx(rule, fresh, comm), comm.extras, cache,
+                            None)
+    assert wire is q  # the gate's plane IS the wire — no recompute
+    ex = strat.post_upload(comm.extras, cache, jnp.array([True, False]),
+                           _ctx(rule, fresh, comm))
+    # uploader keeps the rounding error; skipper's residual untouched
+    np.testing.assert_allclose(np.asarray(ex["residual"]["w"]),
+                               [[0.0, 0.4], [0.0, 0.0]])
+
+    # residual feeds the NEXT wire: e=[0,0.4] + fresh ⇒ corrected=[1,0.8],
+    # which now rounds to [1, 1]·scale
+    comm2 = comm._replace(extras=ex)
+    lhs2, cache2 = strat.lhs(_ctx(rule, fresh, comm2), ex)
+    np.testing.assert_allclose(np.asarray(cache2[0]["w"][0]), [1.0, 1.0])
+
+    # error_feedback=False pins e ≡ 0
+    rule_no = CommRule(kind="laq", quantize_bits=2, error_feedback=False)
+    strat_no = strategy_for(rule_no)
+    ex_no = strat_no.post_upload(comm.extras, cache,
+                                 jnp.array([True, True]),
+                                 _ctx(rule_no, fresh, comm))
+    np.testing.assert_array_equal(np.asarray(ex_no["residual"]["w"]), 0.0)
+
+
+def test_laq_error_feedback_bounded_vs_memory_free_exact():
+    """Error-retention semantics, pinned (found in review): the lazy
+    INNOVATION δ = fresh − stale already re-injects compression error once
+    (the stale copy absorbs only the quantized wire), so the textbook
+    residual injects it twice — on a stationary gradient the
+    error_feedback=True stale copies oscillate INSIDE the quantization
+    band (bounded, EF-SGD-grade) and never lock on, while the memory-free
+    error_feedback=False variant locks on exactly within a few rounds."""
+    params4 = {"w": jnp.zeros(4)}
+    g = jnp.array([[1.0, 0.37, -0.8, 0.05]])  # one worker, constant grad
+
+    def vgrad(params, batch):
+        return jnp.zeros((1,)), {"w": g}
+
+    def errs(error_feedback):
+        rule = CommRule(kind="laq", c=0.0, d_max=4, max_delay=3,
+                        quantize_bits=2, error_feedback=error_feedback)
+        strat = strategy_for(rule)
+        comm = init_comm_state(strat, params4, 1)
+        out = []
+        for k in range(12):
+            res = comm_round(strat, comm, params4, None, jnp.asarray(k),
+                             vgrad=vgrad)
+            comm = res.comm
+            out.append(float(jnp.max(jnp.abs(
+                comm.worker_grads["w"] - g))))
+        return out
+
+    exact = errs(False)
+    assert all(e == 0.0 for e in exact[4:]), exact   # locks on exactly
+    textbook = errs(True)
+    band = float(jnp.max(jnp.abs(g)))                # 2-bit scale ≈ max|g|
+    assert all(e <= band for e in textbook), textbook  # bounded (EF-SGD)
+    assert all(e > 0.0 for e in textbook), textbook    # never locks on
+
+
+def test_topk_sparsifies_and_carries_dropped_mass():
+    """topk keeps the ⌈frac·size⌉ largest-|·| entries per (worker, leaf);
+    the dropped entries land in the residual on upload."""
+    from repro.core.quantize import per_worker_topk_sparsify
+    rule = CommRule(kind="topk", topk_frac=0.5)
+    strat = strategy_for(rule)
+    comm = _state(rule)
+    fresh = _wtree([[3.0, 1.0], [-2.0, 5.0]], [[0.5], [-0.25]])
+    lhs, cache = strat.lhs(_ctx(rule, fresh, comm), comm.extras)
+    wire, corrected = cache
+    # w: k=1 per row keeps the largest-|·| entry; b: size-1 leaf keeps all
+    np.testing.assert_allclose(np.asarray(wire["w"]),
+                               [[3.0, 0.0], [0.0, 5.0]])
+    np.testing.assert_allclose(np.asarray(wire["b"]), [[0.5], [-0.25]])
+    np.testing.assert_allclose(np.asarray(lhs),
+                               [9.0 + 0.25, 25.0 + 0.0625])
+    ex = strat.post_upload(comm.extras, cache, jnp.array([True, False]),
+                           _ctx(rule, fresh, comm))
+    np.testing.assert_allclose(np.asarray(ex["residual"]["w"]),
+                               [[0.0, 1.0], [0.0, 0.0]])
+    # the standalone op agrees with the strategy's wire
+    sp = per_worker_topk_sparsify(fresh, 0.5)
+    np.testing.assert_array_equal(np.asarray(sp["w"]),
+                                  np.asarray(wire["w"]))
+
+
+def test_avp_period_gate_and_adaptation():
+    """avp uploads exactly when staleness reaches the per-worker period,
+    and the period walks down (up) while the innovation energy is above
+    (below) the shared RHS, clipped to the configured bounds."""
+    rule = CommRule(kind="avp", c=4.0, d_max=4, max_delay=10,
+                    period_min=1, period_max=5)
+    strat = strategy_for(rule)
+    comm = _state(rule)._replace(staleness=jnp.array([2, 3], jnp.int32))
+    assert int(comm.extras["period"][0]) == 1  # starts at period_min
+    extras = {"period": jnp.array([3, 3], jnp.int32)}
+    fresh = _wtree([[4.0, 0.0], [0.0, 0.0]], [[0.0], [0.0]])
+    lhs, energy = strat.lhs(_ctx(rule, fresh, comm), extras)
+    # worker 0: staleness 2 < period 3 ⇒ −inf; worker 1: 3 ≥ 3 ⇒ +inf
+    assert np.asarray(lhs)[0] == -np.inf and np.asarray(lhs)[1] == np.inf
+    np.testing.assert_allclose(np.asarray(energy), [16.0, 0.0])
+    # rhs = (c/d_max)·Σ diff_hist = 1: worker 0 (16 > 1) shrinks, worker 1
+    # (0 ≤ 1) grows
+    comm_rhs = comm._replace(diff_hist=jnp.full((4,), 0.25, jnp.float32))
+    ex = strat.post_upload(extras, energy, jnp.array([False, True]),
+                           _ctx(rule, fresh, comm_rhs))
+    np.testing.assert_array_equal(np.asarray(ex["period"]), [2, 4])
+    # clipping at both bounds
+    ex_lo = strat.post_upload({"period": jnp.array([1, 5], jnp.int32)},
+                              energy, jnp.array([True, True]),
+                              _ctx(rule, fresh, comm_rhs))
+    np.testing.assert_array_equal(np.asarray(ex_lo["period"]), [1, 5])
+
+
+def test_new_rule_bytes_accounting():
+    """laq = b-bit dense; topk = sparse k·(value+index) bits; avp = full
+    fp32 — and the compressed rules undercut 'always' per upload."""
+    import math
+    n = 46
+    full = strategy_for(CommRule(kind="always")).bytes_per_upload(n)
+    laq = strategy_for(CommRule(kind="laq")).bytes_per_upload(n)
+    assert laq == n * 1.0 < full  # 8-bit default
+    assert strategy_for(
+        CommRule(kind="laq", quantize_bits=4)).bytes_per_upload(n) == n / 2
+    topk = strategy_for(
+        CommRule(kind="topk", topk_frac=0.1)).bytes_per_upload(n)
+    k = math.ceil(0.1 * n)
+    assert topk == k * (32 + math.ceil(math.log2(n))) / 8.0 < full
+    assert strategy_for(CommRule(kind="avp")).bytes_per_upload(n) == full
+
+
+def test_cinn_single_quantize_per_round_bit_equal(monkeypatch):
+    """Satellite regression: the round quantizes the innovation ONCE (the
+    gate's plane is reused for the wire) and the trajectory is bit-equal
+    to the old quantize-twice path, on both state planes."""
+    import repro.core.comm as comm_mod
+    from repro.core.comm import CommStrategy, CompressedInnovationStrategy
+    from repro.core.engine import CADAEngine, make_sampler
+    from repro.data.partition import pad_to_matrix, uniform_partition
+    from repro.data.synthetic import ijcnn1_like
+    from repro.models.small import logreg_init, logreg_loss
+    from repro.optim.fused import FusedAMSGrad
+
+    m, steps = 3, 6
+    ds = ijcnn1_like(n=300)
+    mtx = pad_to_matrix(uniform_partition(ds.n, m, seed=0))
+    sample = make_sampler(ds.x, ds.y, mtx, 16)
+    params = logreg_init(None, 22, 2)
+    batches = jax.vmap(sample)(jax.random.split(jax.random.PRNGKey(2),
+                                                steps))
+    rule = CommRule(kind="cinn", c=5.0, d_max=4, max_delay=6)
+
+    def run(fused):
+        eng = CADAEngine(logreg_loss, FusedAMSGrad(lr=0.05), rule, m,
+                         fused=fused)
+        return jax.jit(eng.run)(eng.init(params), batches)
+
+    results = {}
+    for fused in (False, True):
+        results[("new", fused)] = run(fused)
+    # old behaviour: the wire recomputes transform_delta instead of
+    # reusing the gate's cache
+    monkeypatch.setattr(CompressedInnovationStrategy, "wire_delta",
+                        CommStrategy.wire_delta)
+    monkeypatch.setattr(CompressedInnovationStrategy, "flat_wire_delta",
+                        CommStrategy.flat_wire_delta)
+    for fused in (False, True):
+        results[("old", fused)] = run(fused)
+    monkeypatch.undo()
+    for fused in (False, True):
+        (st_n, mets_n), (st_o, mets_o) = (results[("new", fused)],
+                                          results[("old", fused)])
+        np.testing.assert_array_equal(np.asarray(mets_n["upload_mask"]),
+                                      np.asarray(mets_o["upload_mask"]))
+        for a, b in zip(jax.tree.leaves(st_n.params),
+                        jax.tree.leaves(st_o.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # ...and the new path emits exactly ONE quantization per round: count
+    # quantizer invocations while tracing a single step on each plane
+    calls = {"n": 0}
+    real_q = comm_mod.per_worker_quantize_dequantize
+    real_qf = comm_mod.per_worker_quantize_dequantize_flat
+
+    def counting_q(tree, bits):
+        calls["n"] += 1
+        return real_q(tree, bits)
+
+    def counting_qf(layout, buf, bits):
+        calls["n"] += 1
+        return real_qf(layout, buf, bits)
+
+    monkeypatch.setattr(comm_mod, "per_worker_quantize_dequantize",
+                        counting_q)
+    monkeypatch.setattr(comm_mod, "per_worker_quantize_dequantize_flat",
+                        counting_qf)
+    batch = jax.tree.map(lambda x: x[0], batches)
+    for fused in (False, True):
+        eng = CADAEngine(logreg_loss, FusedAMSGrad(lr=0.05), rule, m,
+                         fused=fused)
+        calls["n"] = 0
+        jax.jit(eng.step).lower(eng.init(params), batch)
+        assert calls["n"] == 1, (fused, calls["n"])
+
+
 # ------------------------------------------------------ state transitions
 
 def test_cada2_post_upload_updates_only_uploaders():

@@ -155,6 +155,27 @@ def test_flat_quantize_matches_pytree_quantize(rng):
         np.asarray(plane[:, layout.n:]))
 
 
+def test_flat_topk_matches_pytree_topk(rng):
+    """Per-(worker, leaf-segment) top-k on the flat plane is bit-equal to
+    the pytree sparsifier (same threshold rule over the same entries),
+    and the padded tail passes through untouched."""
+    from repro.core.quantize import per_worker_topk_sparsify
+    m = 3
+    tree = {"w": jnp.asarray(rng.normal(size=(m, 6, 2)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(m, 4)), jnp.float32)}
+    layout = F.layout_of({"w": tree["w"][0], "b": tree["b"][0]})
+    plane = layout.pack_worker(tree)
+    for frac in (0.1, 0.5, 1.0):
+        s_flat = F.per_worker_topk_sparsify_flat(layout, plane, frac)
+        s_tree = per_worker_topk_sparsify(tree, frac)
+        np.testing.assert_array_equal(
+            np.asarray(s_flat), np.asarray(layout.pack_worker(s_tree)))
+    np.testing.assert_array_equal(
+        np.asarray(F.per_worker_topk_sparsify_flat(
+            layout, plane, 0.25)[:, layout.n:]),
+        np.asarray(plane[:, layout.n:]))
+
+
 # ------------------------------------- fused vs reference engine parity
 
 def _small_problem(m):
