@@ -145,6 +145,39 @@ def sweep_rules(iters=400) -> list[dict]:
     return rows
 
 
+def sweep_avp(iters=400) -> list[dict]:
+    """avp's period gate alone vs composed with the CADA LHS check
+    (``avp_compose``: upload only when due AND the innovation energy
+    clears the RHS). Pointwise (same state) the composed gate is a
+    SUBSET of the plain one, but over a full run the veto changes the
+    period dynamics (skipped uploads keep staleness high, so shrunken
+    periods fire more often) — total uploads can land on either side;
+    this sweep records the realized loss/communication trade."""
+    sample, params = _problem()
+    rows = []
+    for compose in (False, True):
+        eng = CADAEngine(logreg_loss, adam(lr=0.01),
+                         CommRule(kind="avp", c=0.6, d_max=10,
+                                  max_delay=100, period_min=1,
+                                  period_max=8, avp_compose=compose), M)
+        st = eng.init(params)
+        batches = jax.vmap(sample)(
+            jax.random.split(jax.random.PRNGKey(1), iters))
+        _, mets = jax.jit(eng.run)(st, batches)
+        rows.append({
+            "sweep": "avp", "avp_compose": compose,
+            "final_loss": float(np.asarray(mets["loss"])[-20:].mean()),
+            "skip_rate": float(np.asarray(mets["skip_rate"]).mean()),
+            "uploads": int(np.asarray(mets["uploads"]).sum()),
+        })
+        print(f"  avp compose={compose!s:5} "
+              f"loss={rows[-1]['final_loss']:.4f} "
+              f"skip={rows[-1]['skip_rate']:.2f} "
+              f"uploads={rows[-1]['uploads']}")
+    assert all(r["uploads"] > 0 for r in rows), rows  # cap still forces
+    return rows
+
+
 def sweep_H(iters=400, hs=(1, 8, 16)) -> list[dict]:
     sample, params = _problem()
     rows = []
@@ -170,7 +203,7 @@ def main() -> None:
     args = p.parse_args()
     rows = (sweep_c(args.iters) + sweep_D(args.iters)
             + sweep_bits(args.iters) + sweep_rules(args.iters)
-            + sweep_H(args.iters))
+            + sweep_avp(args.iters) + sweep_H(args.iters))
     # paper supplement claims, asserted:
     c_rows = [r for r in rows if r["sweep"] == "c"]
     assert c_rows[0]["skip_rate"] < 0.02          # c=0 => no skipping

@@ -118,9 +118,11 @@ def bench_cada(iters: int = 300, lm_steps: int = 30) -> dict:
         1.0 - out["cada2"]["steps_per_sec"]
         / out["always"]["steps_per_sec"], 4)
 
-    out["trainer_lm"] = bench_trainer_lm(lm_steps)
-    _warn_if_regressed("trainer-lm", out["trainer_lm"]["steps_per_sec"],
-                       (prev or {}).get("trainer_lm"))
+    lm = bench_trainer_lm(lm_steps)
+    out.update(lm)
+    for name in ("trainer_lm", "sharded_flat", "sharded_perleaf_ref"):
+        _warn_if_regressed(f"trainer-{name}", lm[name]["steps_per_sec"],
+                           (prev or {}).get(name))
 
     with open(BENCH_PATH, "w") as f:
         json.dump(out, f, indent=1)
@@ -128,12 +130,31 @@ def bench_cada(iters: int = 300, lm_steps: int = 30) -> dict:
           f"(gating overhead {out['gating_overhead_frac']:.1%}), "
           f"{out['uploads_saved_frac']:.0%} uploads saved, "
           f"trainer-LM {out['trainer_lm']['steps_per_sec']} steps/s "
+          f"(sharded-state hparams: flat "
+          f"{out['sharded_flat']['steps_per_sec']} vs old per-leaf "
+          f"fallback {out['sharded_perleaf_ref']['steps_per_sec']}) "
           f"-> {BENCH_PATH}", file=sys.stderr)
     return out
 
 
 def bench_trainer_lm(steps: int = 30) -> dict:
-    """Hierarchical-CADA trainer throughput on the (smoke) LM path."""
+    """Hierarchical-CADA trainer throughput on the (smoke) LM path.
+
+    Three arms, INTERLEAVED per the 2-core caution (sequential phases
+    fold machine drift into the comparison):
+
+      * ``trainer_lm``       — the default hparams (fused flat plane);
+      * ``sharded_flat``     — the same rule at
+        ``state_fsdp_axes=("data",)``: the hparams that USED to force the
+        per-leaf fallback (``_flat_enabled``) and now run the fused flat
+        plane (mesh-free here, so same program as ``trainer_lm`` — a
+        same-program control for the entry below);
+      * ``sharded_perleaf_ref`` — those hparams on the per-leaf pytree
+        path (``fused=False``), i.e. what the deleted fallback actually
+        ran. ``sharded_flat`` vs ``sharded_perleaf_ref`` IS the
+        fork-deletion perf trace: the speedup these policies gained by
+        moving onto the flat plane.
+    """
     import jax
     import numpy as np
 
@@ -145,35 +166,50 @@ def bench_trainer_lm(steps: int = 30) -> dict:
     arch = "stablelm-1.6b"
     cfg = C.get_smoke_config(arch)
     m = 2
-    hp = TrainHParams(rule=CommRule(kind="cada2", c=0.6, d_max=10,
-                                    max_delay=50), lr=1e-3)
-    step = jax.jit(make_train_step(cfg, hp, m), donate_argnums=(0,))
-    st0 = init_train_state(cfg, hp, m, jax.random.PRNGKey(0))
+    rule = CommRule(kind="cada2", c=0.6, d_max=10, max_delay=50)
+    variants = {
+        "trainer_lm": TrainHParams(rule=rule, lr=1e-3),
+        "sharded_flat": TrainHParams(rule=rule, lr=1e-3,
+                                     state_fsdp_axes=("data",)),
+        "sharded_perleaf_ref": TrainHParams(rule=rule, lr=1e-3,
+                                            state_fsdp_axes=("data",),
+                                            fused=False),
+    }
     batch = worker_split(
         {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 65), 0,
                                       cfg.vocab)}, m)
 
-    def fresh():
-        # the step donates its state, so each rep gets copies of st0
-        return jax.tree.map(lambda x: x.copy(), st0)
+    arms = {}
+    for name, hp in variants.items():
+        step = jax.jit(make_train_step(cfg, hp, m), donate_argnums=(0,))
+        st0 = init_train_state(cfg, hp, m, jax.random.PRNGKey(0))
 
-    st, mets = step(fresh(), batch)          # compile + warmup
-    jax.block_until_ready(st.params)
-    dt = float("inf")                        # best-of-3 (noisy boxes)
-    for _ in range(3):
-        # re-init per rep: continuing one trajectory across reps would
-        # time DIFFERENT upload regimes (CADA uploads thin out as training
-        # advances), making later reps incomparably cheaper
-        st = fresh()
-        jax.block_until_ready(st)  # keep the async state copy off the clock
-        t0 = time.time()
-        for _ in range(steps):
-            st, mets = step(st, batch)
+        def fresh(st0=st0):
+            # the step donates its state, so each rep gets copies of st0
+            return jax.tree.map(lambda x: x.copy(), st0)
+
+        st, mets = step(fresh(), batch)      # compile + warmup
         jax.block_until_ready(st.params)
-        dt = min(dt, time.time() - t0)
-    return {"arch": f"{arch}(smoke)", "workers": m, "rule": "cada2",
-            "steps_per_sec": round(steps / dt, 1),
-            "final_loss": float(np.asarray(mets["loss"]))}
+        arms[name] = {"step": step, "fresh": fresh, "mets": mets,
+                      "dt": float("inf")}
+    for _ in range(3):                       # best-of-3, arms interleaved
+        for name, arm in arms.items():
+            # re-init per rep: continuing one trajectory across reps would
+            # time DIFFERENT upload regimes (CADA uploads thin out as
+            # training advances), making later reps incomparably cheaper
+            st = arm["fresh"]()
+            jax.block_until_ready(st)  # async state copy off the clock
+            t0 = time.time()
+            for _ in range(steps):
+                st, arm["mets"] = arm["step"](st, batch)
+            jax.block_until_ready(st.params)
+            arm["dt"] = min(arm["dt"], time.time() - t0)
+    return {name: {"arch": f"{arch}(smoke)", "workers": m, "rule": "cada2",
+                   "state_fsdp_axes": list(variants[name].state_fsdp_axes),
+                   "fused": variants[name].fused,
+                   "steps_per_sec": round(steps / arm["dt"], 1),
+                   "final_loss": float(np.asarray(arm["mets"]["loss"]))}
+            for name, arm in arms.items()}
 
 
 def main() -> None:
@@ -233,6 +269,7 @@ def main() -> None:
         for r in (ablations.sweep_c(iters) + ablations.sweep_D(iters)
                   + ablations.sweep_bits(iters)
                   + ablations.sweep_rules(iters)
+                  + ablations.sweep_avp(iters)
                   + ablations.sweep_H(iters)):
             emit("ablations(supplement)", r)
 

@@ -21,7 +21,13 @@ def _flatten_with_paths(tree: Any):
     return paths, leaves, treedef
 
 
-def save(path: str, tree: Any, step: int | None = None) -> None:
+def save(path: str, tree: Any, step: int | None = None,
+         flat_meta: Any = None) -> None:
+    """``flat_meta`` (a ``core.flat.FlatLayout`` or a ``{"n", "n_flat"}``
+    dict) records the flat state plane's layout so :func:`restore` can
+    RESHARD flat leaves into a target built with a different state-shard
+    count (``n_flat`` is padded to the shard count, so it changes when
+    the mesh does; ``n``, the true entry count, does not)."""
     os.makedirs(path, exist_ok=True)
     paths, leaves, _ = _flatten_with_paths(tree)
     host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
@@ -42,10 +48,41 @@ def save(path: str, tree: Any, step: int | None = None) -> None:
         "shapes": [list(a.shape) for a in host_leaves],
         "dtypes": [str(a.dtype) for a in host_leaves],
     }
+    if flat_meta is not None:
+        get = (flat_meta.get if isinstance(flat_meta, dict)
+               else lambda k: getattr(flat_meta, k))
+        manifest["flat"] = {"n": int(get("n")), "n_flat": int(get("n_flat"))}
     tmp = os.path.join(path, "manifest.json.tmp")
     with open(tmp, "w") as f:
         json.dump(manifest, f, indent=1)
     os.replace(tmp, os.path.join(path, "manifest.json"))
+
+
+def _reshard_flat(a: np.ndarray, ref, flat: dict | None, path: str
+                  ) -> np.ndarray:
+    """Re-pad a flat-plane leaf saved at one state-shard count into the
+    target layout's ``n_flat`` (the last dim): the true ``n`` entries are
+    kept, the zero padding tail is re-cut. Raises a clean error NAMING the
+    offending plane when the mismatch is not a pure padding change."""
+    ref_shape = tuple(np.shape(ref))
+    if (flat and a.ndim >= 1 and a.shape[:-1] == ref_shape[:-1]
+            and a.shape[-1] == flat["n_flat"]):
+        n = int(flat["n"])
+        new_flat = int(ref_shape[-1])
+        if new_flat < n:
+            raise ValueError(
+                f"flat-plane layout mismatch at {path}: checkpoint holds "
+                f"n={n} true entries (n_flat={flat['n_flat']}), restore "
+                f"target plane has only {new_flat} lanes")
+        tail = a[..., n:]
+        if tail.size and np.any(tail != 0):
+            raise ValueError(
+                f"flat-plane layout mismatch at {path}: padding tail "
+                f"beyond n={n} is not zero — the leaf is not a plane of "
+                f"the recorded flat layout")
+        pad = [(0, 0)] * (a.ndim - 1) + [(0, new_flat - n)]
+        return np.pad(a[..., :n], pad)
+    raise ValueError(f"shape mismatch at {path}: {a.shape} vs {ref_shape}")
 
 
 def restore(path: str, like: Any,
@@ -58,6 +95,12 @@ def restore(path: str, like: Any,
     into a ``like`` whose leaf dtype differs from the manifest's is an
     error, not a silent cast: a checkpoint saved under one dtype policy
     (fp32 moments) must not quietly narrow into another (bf16).
+
+    Flat state planes saved with ``flat_meta`` reshard across state-shard
+    counts: a leaf whose trailing dim is the recorded ``n_flat`` restores
+    into a target plane with a DIFFERENT padded length by keeping the true
+    ``n`` entries and re-cutting the zero tail (shard-count changes only
+    ever move the padding). Any other mismatch raises, naming the plane.
     """
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -72,8 +115,7 @@ def restore(path: str, like: Any,
     for i, (p, ref) in enumerate(zip(paths, leaves)):
         a = data[f"leaf_{i}"]
         if list(a.shape) != list(np.shape(ref)):
-            raise ValueError(f"shape mismatch at {p}: {a.shape} vs "
-                             f"{np.shape(ref)}")
+            a = _reshard_flat(a, ref, manifest.get("flat"), p)
         ref_dtype = str(np.dtype(getattr(ref, "dtype", a.dtype)))
         if saved_dtypes is not None and saved_dtypes[i] != ref_dtype:
             raise ValueError(

@@ -53,7 +53,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec
 
 from repro.core.flat import (per_worker_quantize_dequantize_flat,
-                             per_worker_topk_sparsify_flat)
+                             per_worker_topk_extract_flat,
+                             per_worker_topk_sparsify_flat, spec_dim)
 from repro.core.quantize import (ef_correct, ef_residual,
                                  per_worker_quantize_dequantize,
                                  per_worker_topk_sparsify, topk_count)
@@ -229,9 +230,11 @@ class CommStrategy:
         return {}
 
     def flat_extras_specs(self, param_spec, worker_param_spec, waxis: str,
-                          P) -> dict:
-        """PartitionSpec dict matching :meth:`init_flat_extras`."""
-        del param_spec, worker_param_spec, waxis, P
+                          P, col_axes: tuple = ()) -> dict:
+        """PartitionSpec dict matching :meth:`init_flat_extras`.
+        ``col_axes`` are the state-shard axes of the flat dim of
+        (M, n_flat) planes (the server axes minus the worker axis)."""
+        del param_spec, worker_param_spec, waxis, P, col_axes
         return {}
 
     def flat_pre_step(self, extras: dict, params, params_flat, k) -> dict:
@@ -272,6 +275,14 @@ class CommStrategy:
         """Flat-plane twin of :meth:`wire_delta`."""
         del extras, cache
         return self.transform_delta_flat(ctx.layout, delta)
+
+    def flat_sparse_wire(self, ctx, extras: dict, cache, delta):
+        """Optional TRUE sparse wire: ((M, K) values, (M, K) int32 global
+        indices) that replace the dense plane on the simulated collective,
+        or None (the default — dense wire). Only rules whose compressor
+        leaves a fixed-size support (topk) can ship one."""
+        del ctx, extras, cache, delta
+        return None
 
     # ---- accounting
     @property
@@ -332,7 +343,7 @@ class LAGStrategy(CommStrategy):
     def flat_lhs(self, ctx, extras):
         return kops.batched_diff_sq_norm(
             ctx.fresh, ctx.comm.worker_grads.astype(jnp.float32),
-            interpret=ctx.interpret), None
+            interpret=ctx.interpret, shard=ctx.shard), None
 
 
 @register
@@ -380,8 +391,10 @@ class CADA1Strategy(CommStrategy):
         return {"snapshot": jax.tree.map(jnp.copy, params),
                 "worker_delta": jnp.zeros((m, layout.n_flat), grad_dtype)}
 
-    def flat_extras_specs(self, param_spec, worker_param_spec, waxis, P):
-        return {"snapshot": param_spec, "worker_delta": P(waxis, None)}
+    def flat_extras_specs(self, param_spec, worker_param_spec, waxis, P,
+                          col_axes=()):
+        return {"snapshot": param_spec,
+                "worker_delta": P(waxis, spec_dim(col_axes))}
 
     def flat_pre_step(self, extras, params, params_flat, k):
         return self.pre_step(extras, params, k)
@@ -393,7 +406,7 @@ class CADA1Strategy(CommStrategy):
         delta_fresh = ctx.fresh - ctx.second
         lhs = kops.batched_diff_sq_norm(
             delta_fresh, extras["worker_delta"].astype(jnp.float32),
-            interpret=ctx.interpret)
+            interpret=ctx.interpret, shard=ctx.shard)
         return lhs, delta_fresh
 
     def flat_post_upload(self, extras, delta_fresh, upload, ctx):
@@ -436,7 +449,9 @@ class CADA2Strategy(CommStrategy):
         del layout, params_flat, grad_dtype
         return {"worker_params": broadcast_to_workers(params, m)}
 
-    def flat_extras_specs(self, param_spec, worker_param_spec, waxis, P):
+    def flat_extras_specs(self, param_spec, worker_param_spec, waxis, P,
+                          col_axes=()):
+        del col_axes  # θ^{k−τ_m} stays a pytree with the param specs
         return {"worker_params": worker_param_spec}
 
     def second_eval_per_worker(self, extras):
@@ -444,7 +459,8 @@ class CADA2Strategy(CommStrategy):
 
     def flat_lhs(self, ctx, extras):
         return kops.batched_diff_sq_norm(ctx.fresh, ctx.second,
-                                         interpret=ctx.interpret), None
+                                         interpret=ctx.interpret,
+                                         shard=ctx.shard), None
 
     def flat_post_upload(self, extras, cache, upload, ctx):
         return self.post_upload(extras, cache, upload, ctx)
@@ -497,7 +513,8 @@ class CompressedInnovationStrategy(CommStrategy):
         innovation = ctx.fresh - ctx.comm.worker_grads.astype(jnp.float32)
         q = per_worker_quantize_dequantize_flat(ctx.layout, innovation,
                                                 self.bits_per_entry)
-        return kops.batched_sq_norm(q, interpret=ctx.interpret), q
+        return kops.batched_sq_norm(q, interpret=ctx.interpret,
+                                    shard=ctx.shard), q
 
     def flat_wire_delta(self, ctx, extras, cache, delta):
         del delta
@@ -559,17 +576,19 @@ class ErrorFeedbackStrategy(CommStrategy):
             return {}
         return {"residual": jnp.zeros((m, layout.n_flat), grad_dtype)}
 
-    def flat_extras_specs(self, param_spec, worker_param_spec, waxis, P):
+    def flat_extras_specs(self, param_spec, worker_param_spec, waxis, P,
+                          col_axes=()):
         if not self.rule.error_feedback:
             return {}
-        return {"residual": P(waxis, None)}
+        return {"residual": P(waxis, spec_dim(col_axes))}
 
     def flat_lhs(self, ctx, extras):
         delta = ctx.fresh - ctx.comm.worker_grads.astype(jnp.float32)
         corrected = (ef_correct(delta, extras["residual"])
                      if self.rule.error_feedback else delta)
         wire = self._compress_flat(ctx.layout, corrected)
-        return kops.batched_sq_norm(wire, interpret=ctx.interpret), \
+        return kops.batched_sq_norm(wire, interpret=ctx.interpret,
+                                    shard=ctx.shard), \
             (wire, corrected)
 
     def flat_wire_delta(self, ctx, extras, cache, delta):
@@ -659,6 +678,20 @@ class TopKStrategy(ErrorFeedbackStrategy):
                     layout, sparse, self.rule.quantize_bits)
                 if self.rule.quantize_bits else sparse)
 
+    # ---- true sparse wire (flat plane): when ``sparse_wire`` is set the
+    # simulated collective ships (values, indices) pairs sized k extracted
+    # from the compressed plane — the payload the sparse ACCOUNTING below
+    # already charges for — instead of the dense masked plane. The
+    # residual transition still reads the dense cache, so error feedback
+    # is untouched; reconstruction is bit-equal (the exact-k mask and
+    # the extraction select the same support).
+    def flat_sparse_wire(self, ctx, extras, cache, delta):
+        del extras, delta
+        if not self.rule.sparse_wire or self.rule.topk_frac >= 1.0:
+            return None
+        return per_worker_topk_extract_flat(ctx.layout, cache[0],
+                                            self.rule.topk_frac)
+
     # ---- sparse accounting
     def bytes_per_upload(self, n_params: int) -> float:
         k = topk_count(n_params, self.rule.topk_frac)
@@ -680,6 +713,13 @@ class AVPStrategy(CommStrategy):
     RHS its period shrinks by one (communicate more while informative),
     otherwise it grows by one. One gradient evaluation per iteration —
     the adaptation reads the progress ring, never a second evaluation.
+
+    ``avp_compose`` composes the period gate with the CADA LHS check: the
+    LHS becomes the innovation energy where the worker is due (−∞
+    otherwise), so a worker uploads only when due AND ||δ_m||² > RHS —
+    the period is then a FLOOR on upload spacing (an informativeness
+    check rides on top) instead of a schedule; the shared max-staleness
+    cap still forces an upload eventually.
     """
     kind = "avp"
 
@@ -692,9 +732,11 @@ class AVPStrategy(CommStrategy):
             jnp.where(energy > r.rhs(diff_hist), period - 1, period + 1),
             r.period_min, r.resolved_period_max)
 
-    @staticmethod
-    def _gate(staleness, period):
+    def _gate(self, staleness, period, energy):
         due = staleness >= period
+        if self.rule.avp_compose:
+            return jnp.where(due, energy,
+                             -jnp.inf).astype(jnp.float32)
         return jnp.where(due, jnp.inf, -jnp.inf).astype(jnp.float32)
 
     def init_extras(self, params, m, make_grad_zeros, bcast):
@@ -708,7 +750,8 @@ class AVPStrategy(CommStrategy):
             lambda f, s: f.astype(jnp.float32) - s.astype(jnp.float32),
             ctx.fresh, ctx.comm.worker_grads)
         energy = per_worker_sq_norm(delta)
-        return self._gate(ctx.comm.staleness, extras["period"]), energy
+        return self._gate(ctx.comm.staleness, extras["period"],
+                          energy), energy
 
     def post_upload(self, extras, energy, upload, ctx):
         return {**extras,
@@ -719,14 +762,16 @@ class AVPStrategy(CommStrategy):
     def init_flat_extras(self, layout, params, params_flat, m, grad_dtype):
         return {"period": self._init_periods(m)}
 
-    def flat_extras_specs(self, param_spec, worker_param_spec, waxis, P):
+    def flat_extras_specs(self, param_spec, worker_param_spec, waxis, P,
+                          col_axes=()):
         return {"period": P(None)}
 
     def flat_lhs(self, ctx, extras):
         energy = kops.batched_diff_sq_norm(
             ctx.fresh, ctx.comm.worker_grads.astype(jnp.float32),
-            interpret=ctx.interpret)
-        return self._gate(ctx.comm.staleness, extras["period"]), energy
+            interpret=ctx.interpret, shard=ctx.shard)
+        return self._gate(ctx.comm.staleness, extras["period"],
+                          energy), energy
 
     def flat_post_upload(self, extras, energy, upload, ctx):
         return self.post_upload(extras, energy, upload, ctx)

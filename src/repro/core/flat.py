@@ -11,7 +11,12 @@ the whole communication round as a handful of whole-buffer ops:
   * :class:`FlatLayout` — a static description of a pytree's flat layout
     (per-leaf offsets/sizes/shapes/dtypes, total padded length ``n_flat``)
     with exact ``pack``/``unpack`` round-tripping, including an (M, n_flat)
-    per-worker plane for M-leading trees;
+    per-worker plane for M-leading trees. The layout is SHARDING-AWARE:
+    built with ``shards=S``, ``n_flat`` is padded to a multiple of
+    ``S · align`` so the flat axis splits into S equal contiguous shards —
+    exactly the split a ``PartitionSpec`` over the state-shard mesh axes
+    produces — and :meth:`shard_split`/:meth:`shard_merge` round-trip the
+    per-shard view bit-exactly;
   * :class:`FlatCommState` — the Algorithm-1 communication state with
     ``nabla`` as one (n_flat,) buffer and every per-worker tree as one
     (M, n_flat) plane;
@@ -58,8 +63,14 @@ class FlatLayout:
 
     Hashable and comparable, so it can be closed over by jitted steps and
     compared across engine/trainer instances. ``n`` is the true scalar
-    count, ``n_flat`` the padded buffer length (``n_flat % align == 0``);
-    padding lanes are identically zero through every op in this module.
+    count, ``n_flat`` the padded buffer length (a multiple of both
+    ``align`` and ``shards``); padding lanes are identically zero through
+    every op in this module. ``shards`` is the state-shard count of the
+    target mesh (1 = unsharded): shard ``s`` owns the contiguous slice
+    ``[s·shard_len, (s+1)·shard_len)`` — the same equal contiguous split a
+    ``PartitionSpec`` over the state-shard axes gives each device, so the
+    layout, the sharding specs and the shard-local kernels all agree on
+    where every parameter lives.
     """
     treedef: Any
     shapes: tuple
@@ -68,6 +79,26 @@ class FlatLayout:
     offsets: tuple
     n: int
     n_flat: int
+    shards: int = 1
+
+    @property
+    def shard_len(self) -> int:
+        """Flat entries owned by one state shard (``n_flat / shards``)."""
+        return self.n_flat // self.shards
+
+    # ---- per-shard conversions
+    def shard_split(self, buf: jnp.ndarray) -> jnp.ndarray:
+        """(..., n_flat) buffer -> (..., shards, shard_len) per-shard view.
+
+        A pure reshape (shard s is the contiguous slice it owns), so
+        ``shard_merge(shard_split(buf)) == buf`` bit-exactly — the
+        invariant the checkpoint resharding path relies on.
+        """
+        return buf.reshape(buf.shape[:-1] + (self.shards, self.shard_len))
+
+    def shard_merge(self, parts: jnp.ndarray) -> jnp.ndarray:
+        """(..., shards, shard_len) per-shard view -> (..., n_flat)."""
+        return parts.reshape(parts.shape[:-2] + (self.n_flat,))
 
     # ---- conversions
     def pack(self, tree, dtype=jnp.float32) -> jnp.ndarray:
@@ -124,11 +155,20 @@ class FlatLayout:
         return jnp.concatenate(parts)
 
 
-def layout_of(tree, align: int | None = None) -> FlatLayout:
+def layout_of(tree, align: int | None = None, shards: int = 1) -> FlatLayout:
     """Build the static :class:`FlatLayout` of ``tree`` (arrays or
-    ShapeDtypeStructs both work — only shapes/dtypes are read)."""
+    ShapeDtypeStructs both work — only shapes/dtypes are read).
+
+    ``shards`` is the state-shard count the flat axis must divide into
+    (``distributed.trainer.flat_state_shards`` resolves it from the mesh);
+    ``n_flat`` is padded to a multiple of ``align · shards`` so every shard
+    gets an equal, ``align``-aligned contiguous slice. ``shards=1``
+    reproduces the unsharded layout exactly (same ``n_flat`` as before).
+    """
     if align is None:
         align = PAD_ALIGN
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
     leaves, treedef = jax.tree.flatten(tree)
     shapes = tuple(tuple(l.shape) for l in leaves)
     dtypes = tuple(np.dtype(l.dtype) for l in leaves)
@@ -139,10 +179,21 @@ def layout_of(tree, align: int | None = None) -> FlatLayout:
         offsets.append(off)
         off += s
     n = off
-    n_flat = n + ((-n) % align)
+    step = align * shards
+    n_flat = n + ((-n) % step)
     return FlatLayout(treedef=treedef, shapes=shapes, dtypes=dtypes,
                       sizes=sizes, offsets=tuple(offsets), n=n,
-                      n_flat=max(n_flat, align))
+                      n_flat=max(n_flat, step), shards=shards)
+
+
+def spec_dim(axes: tuple) -> Any:
+    """One PartitionSpec DIMENSION entry for a tuple of mesh axes:
+    ``()`` -> None (replicated), one axis -> its name, several -> the
+    tuple (sharded over their product). The single home of the rule, used
+    by the flat-plane spec builders here and in distributed/sharding.py."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
 
 
 def _segment_ids(layout: FlatLayout) -> np.ndarray:
@@ -186,14 +237,14 @@ def per_worker_quantize_dequantize_flat(layout: FlatLayout, buf, bits: int):
 
 
 def per_worker_topk_sparsify_flat(layout: FlatLayout, buf, frac: float):
-    """Flat-plane twin of ``quantize.per_worker_topk_sparsify``: keep the
-    top-⌈frac·size⌉ largest-|x| entries per (worker, leaf-segment), zero
-    the rest — bit-identical to the pytree form (same threshold rule over
-    the same entries). Top-k runs per segment: segments are ragged (one k
-    per segment) and the threshold rule keeps ALL ties at the kth value,
-    which a rank-based segment-vectorized sort would break — bit-equality
-    with the pytree sparsifier is what the parity gates pin, so the
-    per-segment loop is the deliberate trade-off here (unlike the
+    """Flat-plane twin of ``quantize.per_worker_topk_sparsify``: keep
+    EXACTLY the top-⌈frac·size⌉ largest-|x| entries per (worker,
+    leaf-segment) (ties break toward the lower index — see
+    ``topk_threshold_mask``), zero the rest — bit-identical to the pytree
+    form (same selection over the same entries in the same order). Top-k
+    runs per segment: segments are ragged (one k per segment), and
+    bit-equality with the pytree sparsifier is what the parity gates pin,
+    so the per-segment loop is the deliberate trade-off here (unlike the
     quantizer above, whose max-scales vectorize exactly). The padding
     tail passes through untouched."""
     if frac >= 1.0:
@@ -207,6 +258,34 @@ def per_worker_topk_sparsify_flat(layout: FlatLayout, buf, frac: float):
     if layout.n_flat > layout.n:
         parts.append(buf[:, layout.n:])
     return jnp.concatenate(parts, axis=1)
+
+
+def per_worker_topk_extract_flat(layout: FlatLayout, plane, frac: float):
+    """Extract the top-k SPARSE WIRE from an (M, n_flat) sparsified plane:
+    ((M, K) fp32 values, (M, K) int32 global flat positions) with
+    K = Σ_seg ⌈frac·size_seg⌉ — a fixed-size payload, so it can ride a
+    collective as-is. Applied to the compressor's output — whose support
+    is exactly k entries per segment (``topk_threshold_mask`` keeps
+    exactly k, ties index-broken) — the pair reconstructs the dense plane
+    bit-exactly via :func:`sparse_rows_to_dense`; the parity test pins
+    that equality."""
+    vparts, iparts = [], []
+    for o, s in zip(layout.offsets, layout.sizes):
+        seg = plane[:, o:o + s].astype(jnp.float32)
+        k = topk_count(s, frac)
+        _, idx = jax.lax.top_k(jnp.abs(seg), k)
+        vparts.append(jnp.take_along_axis(seg, idx, axis=1))
+        iparts.append(idx.astype(jnp.int32) + o)
+    return jnp.concatenate(vparts, axis=1), jnp.concatenate(iparts, axis=1)
+
+
+def sparse_rows_to_dense(idx, vals, n_flat: int) -> jnp.ndarray:
+    """Scatter per-worker (values, indices) wire pairs back onto a dense
+    (M, n_flat) plane (the server side of the sparse collective). Indices
+    are distinct per row (disjoint per-segment top-k), so add == set."""
+    m = vals.shape[0]
+    rows = jnp.arange(m)[:, None]
+    return jnp.zeros((m, n_flat), vals.dtype).at[rows, idx].add(vals)
 
 
 # -------------------------------------------------------------- comm state
@@ -228,7 +307,11 @@ class FlatCommState(NamedTuple):
 class FlatCommContext(NamedTuple):
     """What a strategy's flat hooks may consult. ``fresh`` is the packed
     (M, n_flat) fp32 fresh-gradient plane; ``second`` the packed gradients
-    at the strategy's second evaluation points (None if it has none)."""
+    at the strategy's second evaluation points (None if it has none);
+    ``shard`` the static flat-plane sharding descriptor
+    (distributed.sharding.FlatSharding) or None — strategies pass it
+    through to the kernels so the batched LHS norms run shard-local with
+    one psum instead of resharding whole planes."""
     layout: FlatLayout
     params: Any               # θ^k pytree (model form)
     params_flat: jnp.ndarray  # θ^k packed, fp32
@@ -239,6 +322,7 @@ class FlatCommContext(NamedTuple):
     step: jnp.ndarray
     m: int
     interpret: Any            # kernel-mode override for kernels/ops.py
+    shard: Any = None         # FlatSharding | None (static)
 
 
 class FlatCommRoundResult(NamedTuple):
@@ -266,18 +350,21 @@ def init_flat_comm_state(strategy, layout: FlatLayout, params, m: int,
 
 
 def flat_comm_state_specs(strategy, param_spec, worker_param_spec,
-                          waxis: str, P) -> FlatCommState:
+                          waxis: str, P, state_axes: tuple = (),
+                          col_axes: tuple = ()) -> FlatCommState:
     """PartitionSpec tree matching :func:`init_flat_comm_state` — the
-    gradient planes need exactly two spec shapes (replicated buffers and
-    worker-leading planes); parameter-shaped extras reuse the param
-    specs."""
+    gradient planes need exactly two spec shapes (server (n_flat,) buffers
+    sharded over ``state_axes``, worker-leading (M, n_flat) planes sharded
+    worker-axis × ``col_axes``); parameter-shaped extras reuse the param
+    specs. ``col_axes`` is ``state_axes`` minus the worker axis (an axis
+    may not repeat within one spec)."""
     return FlatCommState(
-        nabla=P(None),
-        worker_grads=P(waxis, None),
+        nabla=P(spec_dim(state_axes)),
+        worker_grads=P(waxis, spec_dim(col_axes)),
         staleness=P(None),
         diff_hist=P(None),
         extras=strategy.flat_extras_specs(param_spec, worker_param_spec,
-                                          waxis, P),
+                                          waxis, P, col_axes=col_axes),
     )
 
 
@@ -287,7 +374,7 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
                     params, params_flat, batch, k, *, vgrad,
                     vgrad_per: Callable | None = None,
                     fuse_evals: bool = True,
-                    interpret=None) -> FlatCommRoundResult:
+                    interpret=None, shard=None) -> FlatCommRoundResult:
     """One communication round of Algorithm 1 (lines 4-15) on flat buffers.
 
     Semantically identical to ``comm.comm_round`` (the fused-vs-reference
@@ -301,6 +388,15 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
         are pod-manual shard_maps whose in-specs pin the M-leading axis;
       * the delta / mask-merge / eq. (3) aggregation are whole-plane ops;
       * the LHS norms ride the batched one-pass kernel (kernels/ops.py).
+
+    ``shard`` (static, ``distributed.sharding.FlatSharding`` or None)
+    threads the flat-plane sharding through the round: the LHS norms run
+    shard-local with one psum, and the wire / eq. (3) aggregation are
+    pinned to the worker-plane layout so GSPMD never reshards a full plane
+    mid-round. A strategy may also ship a true SPARSE wire
+    (``flat_sparse_wire`` returning (values, indices) pairs sized k): the
+    pair is what crosses the simulated collective and is scattered back
+    server-side — bit-equal to the dense masked plane.
     """
     r = strategy.rule
     m = comm.staleness.shape[0]
@@ -337,7 +433,7 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
     ctx = FlatCommContext(layout=layout, params=params,
                           params_flat=params_flat, batch=batch, fresh=fresh,
                           second=second, comm=comm._replace(extras=extras),
-                          step=k, m=m, interpret=interpret)
+                          step=k, m=m, interpret=interpret, shard=shard)
 
     # Lines 7/9: rule LHS vs the shared recent-progress RHS.
     lhs, cache = strategy.flat_lhs(ctx, extras)
@@ -349,11 +445,29 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
     # single whole-plane op (one (M, n_flat) sweep instead of ~6 tree_maps).
     wg32 = comm.worker_grads.astype(jnp.float32)
     delta = strategy.flat_wire_delta(ctx, extras, cache, fresh - wg32)
-    wire = jnp.where(upload[:, None], delta, 0.0).astype(
-        comm.worker_grads.dtype)
+    sparse = strategy.flat_sparse_wire(ctx, extras, cache, delta)
+    if sparse is not None:
+        # True sparse wire: the (M, K) value/index pair is the collective
+        # payload; the dense plane is reconstructed server-side. Values are
+        # masked and cast exactly like the dense wire, so the two paths
+        # are bit-equal wherever the extraction captured the full support.
+        vals, idx = sparse
+        vals = jnp.where(upload[:, None], vals, 0.0).astype(
+            comm.worker_grads.dtype)
+        wire = sparse_rows_to_dense(idx, vals, layout.n_flat)
+    else:
+        wire = jnp.where(upload[:, None], delta, 0.0).astype(
+            comm.worker_grads.dtype)
+    if shard is not None:
+        # pin the wire to the worker-plane layout: the cross-worker mean
+        # below IS the gated collective, and an unpinned intermediate lets
+        # GSPMD gather the full plane before reducing it.
+        wire = shard.constrain_worker(wire)
     nabla = (comm.nabla.astype(jnp.float32)
              + jnp.mean(wire.astype(jnp.float32), axis=0)
              ).astype(comm.nabla.dtype)
+    if shard is not None:
+        nabla = shard.constrain_server(nabla)
     worker_grads = (wg32 + wire.astype(jnp.float32)
                     ).astype(comm.worker_grads.dtype)
 

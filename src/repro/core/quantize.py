@@ -71,17 +71,23 @@ def topk_count(size: int, frac: float) -> int:
 
 
 def topk_threshold_mask(x: jnp.ndarray, k: int) -> jnp.ndarray:
-    """(M, s) bool mask of the k largest-|x| entries per row.
+    """(M, s) bool mask of the k largest-|x| entries per row — EXACTLY k.
 
-    Threshold form (|x| >= kth largest |x|): ties at the threshold are ALL
-    kept, so the mask is deterministic and identical however the row is
-    stored — the property that keeps the pytree and flat-plane sparsifiers
-    bit-equal.
+    Ties at the kth magnitude break deterministically toward the LOWER
+    index (``lax.top_k``'s stable order), so the mask is identical however
+    the row is stored (pytree leaf or flat segment — packing preserves
+    index order, the property that keeps the two sparsifiers bit-equal),
+    the kept count always matches the k the sparse accounting charges for,
+    and the (values, indices) sparse wire payload carries the support
+    entry for entry. (The previous |x| >= kth THRESHOLD form kept every
+    tie — under systematic ties, e.g. a 2-class softmax whose per-feature
+    gradient columns are exact negations, it shipped more than k entries
+    than the wire pays for and than a fixed-k payload can carry.)
     """
     k = int(min(max(k, 1), x.shape[1]))
-    absx = jnp.abs(x)
-    kth = jax.lax.top_k(absx, k)[0][:, -1:]
-    return absx >= kth
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    rows = jnp.arange(x.shape[0])[:, None]
+    return jnp.zeros(x.shape, bool).at[rows, idx].set(True)
 
 
 def per_worker_topk_sparsify(tree, frac: float):

@@ -39,13 +39,20 @@ like the paper's rules AND shrink the uploads that do happen):
     mass lands in e_m. Uploads are accounted SPARSELY as
     k·(value_bits + index_bits) with k = ⌈topk_frac·n⌉,
     value_bits = ``quantize_bits`` or 32, and index_bits = ⌈log₂ n⌉ —
-    NOT as n·32.
+    NOT as n·32. With ``sparse_wire=True`` the flat plane also SHIPS the
+    sparse form: (values, indices) pairs sized k cross the simulated
+    collective instead of the dense masked plane (bit-equal reconstruction
+    — see ``flat.per_worker_topk_extract_flat``).
   * ``avp``  — variance-adaptive upload period (arXiv 2007.06134 style):
     each worker keeps its own integer period p_m ∈ [period_min,
     period_max] and uploads when its staleness reaches p_m; p_m shrinks
     while the innovation energy exceeds the shared recent-progress RHS and
     grows when it does not. One gradient evaluation per iteration — the
     adaptation reads the RHS ring, never a second evaluation.
+    ``avp_compose=True`` composes the period gate with the CADA LHS check:
+    a worker uploads only when it is due AND its innovation energy clears
+    the RHS (the period becomes a floor on upload spacing instead of a
+    schedule; the max-staleness cap still forces eventually).
 """
 from __future__ import annotations
 
@@ -68,8 +75,13 @@ class CommRule:
     #                              e_m across rounds (False = drop the
     #                              compression error instead)
     topk_frac: float = 0.1  # topk: fraction of innovation entries uploaded
+    sparse_wire: bool = False  # topk: ship (values, indices) pairs sized k
+    #                            through the flat-plane collective instead
+    #                            of the dense masked plane
     period_min: int = 1     # avp: per-worker upload-period lower bound
     period_max: int = 0     # avp: upper bound (0 = max_delay)
+    avp_compose: bool = False  # avp: upload only when due AND the
+    #                            innovation energy clears the CADA RHS
 
     def __post_init__(self):
         # validate against the live strategy registry (late import — comm.py

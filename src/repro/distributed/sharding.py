@@ -14,16 +14,81 @@ Policy (GSPMD does the propagation; we pin the state):
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Any
 
 import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.flat import spec_dim
 from repro.models.config import ModelConfig, param_count
 from repro.models.model import abstract_params
 
 FSDP_THRESHOLD = 6e9  # bytes of bf16 params per model-shard before FSDP
+
+
+# ------------------------------------------------------- flat state plane
+
+@dataclass(frozen=True)
+class FlatSharding:
+    """Static description of how the flat state plane shards over a mesh.
+
+    ``axes`` are the mesh axes the (n_flat,) SERVER planes (θ̂/h/v̂/∇) shard
+    over (ZeRO-style, from ``TrainHParams.state_fsdp_axes`` /
+    ``shard_cada_state`` / the FSDP axes); ``waxis`` is the worker axis
+    leading the (M, n_flat) planes. Hashable, so the kernel wrappers in
+    kernels/ops.py can take it as a static argument and build the
+    shard_map'd, psum-reduced forms around the Pallas/jnp kernels.
+    """
+    mesh: Any
+    waxis: str
+    axes: tuple
+
+    @property
+    def col_axes(self) -> tuple:
+        """State-shard axes of the FLAT dim of worker planes: the server
+        axes minus the worker axis (one spec may not repeat an axis)."""
+        return tuple(a for a in self.axes if a != self.waxis)
+
+    @property
+    def plane_axes(self) -> tuple:
+        """Every mesh axis a worker plane touches (rows + columns)."""
+        return tuple(dict.fromkeys((self.waxis,) + self.col_axes))
+
+    @property
+    def shards(self) -> int:
+        """State-shard count = required divisor of ``FlatLayout.n_flat``."""
+        s = 1
+        for a in self.axes:
+            s *= int(self.mesh.shape[a])
+        return s
+
+    def server_spec(self) -> P:
+        """(n_flat,) server-plane PartitionSpec."""
+        return P(spec_dim(self.axes))
+
+    def worker_spec(self) -> P:
+        """(M, n_flat) worker-plane PartitionSpec."""
+        return P(self.waxis, spec_dim(self.col_axes))
+
+    def constrain_server(self, x):
+        # STAGED pin: the pinned jax 0.4.37's SPMD partitioner MISCOMPILES
+        # the direct reshard of a freshly packed (concatenate + pad) 1-D
+        # buffer to a sharded layout on meshes with more than one
+        # non-trivial axis — the values come back permuted (norms are
+        # permutation-invariant, so only position-sensitive consumers like
+        # unpack see it; pinned by the pod-mesh trainer test). Pinning the
+        # pack product to an explicit replicated layout FIRST and then to
+        # the shard spec compiles correctly on every mesh we can force.
+        x = jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*(None,) * x.ndim)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.server_spec()))
+
+    def constrain_worker(self, x):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.worker_spec()))
 
 
 def _axsize(mesh, name):

@@ -31,7 +31,13 @@ State-memory policy knobs (production necessities for the 314B/405B archs):
     DCN bytes — LAQ-adjacent, beyond-paper)
   * ``microbatches`` — gradient accumulation inside the step (activation
     memory /= microbatches at fixed global batch)
-  * moments are fp32 {h, v̂} only (see kernels/cada_update.py).
+  * ``moments_dtype`` — {h, v̂} storage on the flat plane (bf16 halves the
+    8P-byte moment footprint; math stays fp32 — kernels/cada_update.py)
+  * ``state_fsdp_axes`` / ``shard_cada_state`` / FSDP — ZeRO the FLAT
+    state planes over those mesh axes (see ``flat_state_axes``): the
+    (n_flat,) server planes split into equal contiguous shards, the
+    (M, n_flat) worker planes shard worker axis × remaining state axes,
+    and the fused kernels run shard-local with psum'd scalar reductions.
 """
 from __future__ import annotations
 
@@ -52,7 +58,8 @@ from repro.kernels import ops as kops
 from repro.launch.mesh import DATA, POD, partial_auto_shard_map
 from repro.models.config import ModelConfig
 from repro.models.model import abstract_params, init_params, lm_loss
-from repro.distributed.sharding import (param_pspecs, to_named, wants_fsdp)
+from repro.distributed.sharding import (FlatSharding, param_pspecs,
+                                        to_named, wants_fsdp)
 
 
 @dataclass(frozen=True)
@@ -64,12 +71,15 @@ class TrainHParams:
     eps: float = 1e-8
     microbatches: int = 1
     cada_dtype: str = "float32"     # nabla / stale-tree storage
-    moments_dtype: str = "float32"  # {h, v̂} storage (bf16 = beyond-paper)
+    moments_dtype: str = "float32"  # {h, v̂} storage (bf16 = beyond-paper;
+    #   lives on the flat plane: the fused kernel is dtype-parametric)
     fused: bool = True              # flat-buffer state plane + fused
-    #   AMSGrad/CADA server update (core/flat.py). Auto-falls back to the
-    #   per-leaf reference path for param-aligned sharding policies the
-    #   flat plane does not express (explicit FSDP, ZeRO'd or data-sharded
-    #   state, bf16 moments) — see _flat_enabled.
+    #   AMSGrad/CADA server update (core/flat.py) — the ONLY state plane:
+    #   every sharding policy (FSDP, ZeRO'd/data-sharded state, bf16
+    #   moments) runs on sharded flat planes (see flat_state_axes).
+    #   fused=False is an explicit DEBUG flag selecting the per-leaf
+    #   pytree reference implementation (the readable oracle the parity
+    #   gates pin the flat plane against).
     fsdp: bool | None = None        # None = auto (sharding.wants_fsdp)
     fsdp_axes: tuple = ("data",)    # params: gathered per layer per micro
     state_fsdp_axes: tuple = ()     # () = same as fsdp_axes. Set to
@@ -100,31 +110,60 @@ class DistTrainState(NamedTuple):
     #                          'always' baseline keeps no innovation state)
 
 
-def _flat_enabled(cfg: ModelConfig, hp: TrainHParams) -> bool:
-    """Whether the step runs on the flat state plane.
-
-    Must be derivable from (cfg, hparams) alone — no mesh:
-    ``init_train_state`` and the step builders resolve it independently
-    and their state structures have to agree. The per-leaf reference path
-    remains the carrier for param-aligned sharding policies (explicit
-    FSDP, pod-ZeRO'd or data-sharded state) and bf16 moments, which the
-    single-buffer plane does not express. Models big enough that ANY mesh
-    could auto-enable FSDP (``sharding.wants_fsdp`` at model-parallel 1 —
-    the mesh-free worst case) also stay on the reference path: a flat
-    plane with replicated P(None) state would re-materialize exactly the
-    memory FSDP exists to shard.
-    """
-    from repro.distributed.sharding import FSDP_THRESHOLD
-    from repro.models.config import param_count
-    return (hp.fused and hp.fsdp is not True and not hp.state_fsdp_axes
-            and not hp.shard_cada_state and hp.moments_dtype == "float32"
-            and 2 * param_count(cfg) <= FSDP_THRESHOLD)
-
-
 # ------------------------------------------------------------------- specs
 
 def worker_axis_name(mesh) -> str:
     return POD if POD in mesh.shape else DATA
+
+
+def flat_state_axes(cfg: ModelConfig, mesh, hp: TrainHParams) -> tuple:
+    """Mesh axes the (n_flat,) flat SERVER planes (θ̂/h/v̂/∇) shard over.
+
+    Resolution order mirrors the reference plane's memory policy:
+    explicit ``state_fsdp_axes`` (ZeRO the state wider than the params —
+    e.g. ("data", "pod") on the 314B/405B archs), then
+    ``shard_cada_state`` (("data",)), then the param FSDP axes when FSDP
+    is on (explicitly or by ``sharding.wants_fsdp`` size auto-detection),
+    else replicate. Axes absent from the mesh (or of size 1) are dropped,
+    so the same hparams resolve sanely on every mesh.
+    """
+    if not hp.fused:
+        return ()
+    if hp.state_fsdp_axes:
+        axes = hp.state_fsdp_axes
+    elif hp.shard_cada_state:
+        axes = (DATA,)
+    elif hp.fsdp or (hp.fsdp is None and wants_fsdp(cfg, mesh)):
+        axes = hp.fsdp_axes
+    else:
+        return ()
+    return tuple(a for a in axes if a in mesh.shape and mesh.shape[a] > 1)
+
+
+def flat_sharding(cfg: ModelConfig, mesh, hp: TrainHParams) -> FlatSharding:
+    """The resolved :class:`sharding.FlatSharding` for (cfg, mesh, hp) —
+    the ONE object the layout pad divisor (``.shards``), the plane specs
+    (``.col_axes`` / ``.server_spec``), and the shard-local kernels all
+    read, so they cannot disagree. ``axes`` is empty when no state
+    sharding applies (every property then degrades to the unsharded
+    form)."""
+    return FlatSharding(mesh=mesh, waxis=worker_axis_name(mesh),
+                        axes=flat_state_axes(cfg, mesh, hp))
+
+
+def flat_state_shards(cfg: ModelConfig, mesh, hp: TrainHParams) -> int:
+    """State-shard count of the flat plane on ``mesh`` — the divisor
+    ``FlatLayout.n_flat`` is padded to. Pass this as ``shards=`` to
+    ``init_train_state`` / ``abstract_train_state`` when pairing them with
+    ``jit_train_step`` (which resolves it from the same mesh): the state
+    structures must agree."""
+    return flat_sharding(cfg, mesh, hp).shards
+
+
+def flat_layout(cfg: ModelConfig, shards: int = 1) -> F.FlatLayout:
+    """The trainer's flat layout for ``cfg`` at a given state-shard count
+    (checkpoint tooling uses this to reshard across shard counts)."""
+    return F.layout_of(abstract_params(cfg), shards=shards)
 
 
 def _strip_axis(spec: P, axis: str) -> P:
@@ -154,18 +193,21 @@ def train_state_specs(cfg: ModelConfig, mesh, hp: TrainHParams
     psp = param_pspecs(cfg, mesh, hp.fsdp, hp.fsdp_axes)
     waxis = worker_axis_name(mesh)
     strategy = strategy_for(hp.rule)
-    if _flat_enabled(cfg, hp):
+    if hp.fused:
         # flat plane: gradient-shaped state needs only two spec shapes —
-        # replicated flat buffers and worker-leading (M, n_flat) planes;
-        # parameter-shaped extras keep the param specs.
+        # (n_flat,) server planes sharded over the state axes (ZeRO) and
+        # worker-leading (M, n_flat) planes sharded worker axis × the
+        # remaining state axes; parameter-shaped extras keep param specs.
+        fs = flat_sharding(cfg, mesh, hp)
         return DistTrainState(
             step=P(),
             params=psp,
-            h=P(None), vhat=P(None),
+            h=fs.server_spec(), vhat=fs.server_spec(),
             comm=(None if strategy.stateless else
                   F.flat_comm_state_specs(
                       strategy, psp, _prepend_worker(psp, waxis),
-                      waxis, P)),
+                      waxis, P, state_axes=fs.axes,
+                      col_axes=fs.col_axes)),
         )
     wsp = _prepend_worker(psp, waxis)
     # optimizer moments may ZeRO over more axes than params (see hparams)
@@ -232,20 +274,24 @@ def worker_split_abstract(batch: dict, m: int) -> dict:
 
 # ------------------------------------------------------------------- state
 
-def init_train_state(cfg: ModelConfig, hp: TrainHParams, m: int, rng
-                     ) -> DistTrainState:
+def init_train_state(cfg: ModelConfig, hp: TrainHParams, m: int, rng,
+                     shards: int = 1) -> DistTrainState:
+    """``shards`` is the flat-plane state-shard count (pad divisor of
+    ``n_flat``). Mesh-free callers keep the default 1; when pairing with
+    ``jit_train_step`` pass ``flat_state_shards(cfg, mesh, hp)`` so the
+    state structure matches the compiled step's."""
     params = init_params(cfg, rng)
     strategy = strategy_for(hp.rule)
     # h and v̂ are allocated as DISTINCT buffers throughout: the jitted
     # step donates the state, and aliased leaves trip XLA's
     # donate-the-same-buffer-twice check.
-    if _flat_enabled(cfg, hp):
-        layout = F.layout_of(params)
+    if hp.fused:
+        layout = F.layout_of(params, shards=shards)
         return DistTrainState(
             step=jnp.zeros([], jnp.int32),
             params=params,
-            h=jnp.zeros((layout.n_flat,), jnp.float32),
-            vhat=jnp.zeros((layout.n_flat,), jnp.float32),
+            h=jnp.zeros((layout.n_flat,), hp.moments_jnp_dtype),
+            vhat=jnp.zeros((layout.n_flat,), hp.moments_jnp_dtype),
             comm=(None if strategy.stateless else
                   F.init_flat_comm_state(strategy, layout, params, m,
                                          grad_dtype=hp.cada_jnp_dtype)),
@@ -264,9 +310,11 @@ def init_train_state(cfg: ModelConfig, hp: TrainHParams, m: int, rng
     )
 
 
-def abstract_train_state(cfg: ModelConfig, hp: TrainHParams, m: int):
+def abstract_train_state(cfg: ModelConfig, hp: TrainHParams, m: int,
+                         shards: int = 1):
     return jax.eval_shape(
-        partial(init_train_state, cfg, hp, m), jax.random.PRNGKey(0))
+        partial(init_train_state, cfg, hp, m, shards=shards),
+        jax.random.PRNGKey(0))
 
 
 # -------------------------------------------------------------------- step
@@ -351,7 +399,8 @@ def make_pod_vgrads(cfg: ModelConfig, hp: TrainHParams, mesh):
 
 def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
                     wconstrain=None, vgrad_factory=None,
-                    micro_constrain=None):
+                    micro_constrain=None, shards: int = 1,
+                    flat_shard=None):
     """Pure (state, batch) -> (state, metrics) hierarchical-CADA step.
 
     ``batch`` leaves carry an (M,)-leading worker axis. Shard with
@@ -362,6 +411,11 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
     shard_map; ``micro_constrain`` (optional) re-pins the data-axis
     sharding after the microbatch reshape — without it GSPMD partially
     replicates the per-pod batch (measured 4× flop inflation — §Perf).
+    ``shards`` / ``flat_shard`` (a ``sharding.FlatSharding``) describe the
+    flat state plane's sharding: the layout pads to ``shards`` equal
+    slices and the fused kernels + LHS norms run shard-local with psum'd
+    scalars. Mesh-free callers leave both at their defaults (unsharded
+    plane, plain whole-plane ops).
     """
     strategy = strategy_for(hp.rule)
     if wconstrain is None:
@@ -415,9 +469,9 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
         losses, grads = vgrad_per_raw(wparams, batch)
         return losses, wconstrain(grads)
 
-    use_flat = _flat_enabled(cfg, hp)
+    use_flat = hp.fused
     if use_flat:
-        layout = F.layout_of(abstract_params(cfg))
+        layout = F.layout_of(abstract_params(cfg), shards=shards)
         # the stacked 2M-row fused evaluation (identical numerics — vmap
         # row independence) applies only on the vmap route (the pod-manual
         # shard_map pins the M-leading axis in its in-specs) and only on
@@ -429,11 +483,19 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
 
         def fused_update(pflat, h, vhat, grad_flat):
             """Fused AMSGrad/CADA server update on the packed plane —
-            Pallas on TPU, fused flat jnp elsewhere (kernels/ops.py)."""
+            Pallas on TPU, fused flat jnp elsewhere (kernels/ops.py);
+            shard-local with one psum'd ‖Δθ‖² when the plane is sharded."""
             theta, h2, vh2, dsq = kops.fused_amsgrad_flat(
                 pflat, h, vhat, grad_flat, hp.lr,
-                b1=hp.b1, b2=hp.b2, eps=hp.eps)
+                b1=hp.b1, b2=hp.b2, eps=hp.eps, shard=flat_shard)
             return layout.unpack(layout.cast_roundtrip(theta)), h2, vh2, dsq
+
+        def pack_server(params):
+            """θ^k packed onto the (possibly ZeRO-sharded) server plane."""
+            pflat = layout.pack(params)
+            if flat_shard is not None:
+                pflat = flat_shard.constrain_server(pflat)
+            return pflat
 
     # ------------- stateless rules (always ⇒ distributed Adam/AMSGrad):
     # no innovation state is materialized — the production path for the
@@ -444,8 +506,10 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
             losses, fresh = vgrad(state.params, batch)
             if use_flat:
                 grad_flat = jnp.mean(layout.pack_worker(fresh), axis=0)
+                if flat_shard is not None:
+                    grad_flat = flat_shard.constrain_server(grad_flat)
                 params, h, vhat, dsq = fused_update(
-                    layout.pack(state.params), state.h, state.vhat,
+                    pack_server(state.params), state.h, state.vhat,
                     grad_flat)
             else:
                 grad = jax.tree.map(lambda g: jnp.mean(g, axis=0), fresh)
@@ -468,10 +532,11 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
     if use_flat:
         def step_flat(state: DistTrainState, batch):
             k = state.step
-            pflat = layout.pack(state.params)
+            pflat = pack_server(state.params)
             out = F.flat_comm_round(
                 strategy, layout, state.comm, state.params, pflat, batch,
-                k, vgrad=vgrad, vgrad_per=vgrad_per, fuse_evals=fuse_evals)
+                k, vgrad=vgrad, vgrad_per=vgrad_per, fuse_evals=fuse_evals,
+                shard=flat_shard)
             params, h, vhat, dsq = fused_update(
                 pflat, state.h, state.vhat, F.nabla_f32(out.comm))
             comm = F.record_progress(out.comm, dsq, k)
@@ -507,6 +572,11 @@ def jit_train_step(cfg: ModelConfig, mesh, hp: TrainHParams):
     waxis = worker_axis_name(mesh)
     m = mesh.shape[waxis]
     sspecs = train_state_specs(cfg, mesh, hp)
+    # flat-plane sharding: resolved ONCE here, threaded through the layout
+    # (pad divisor), the specs above, and the shard-local kernel forms.
+    fs = flat_sharding(cfg, mesh, hp)
+    shards = fs.shards
+    flat_shard = fs if (hp.fused and fs.axes) else None
 
     # NOTE: constraining the vmapped gradient trees directly
     # (with_sharding_constraint to the worker_grads specs) was measured to
@@ -538,7 +608,8 @@ def jit_train_step(cfg: ModelConfig, mesh, hp: TrainHParams):
 
     step = make_train_step(
         cfg, hp, m,
-        vgrad_factory=vgrad_factory, micro_constrain=micro_constrain)
+        vgrad_factory=vgrad_factory, micro_constrain=micro_constrain,
+        shards=shards, flat_shard=flat_shard)
     sshard = jax.tree.map(lambda s: to_named(mesh, s), sspecs,
                           is_leaf=lambda x: isinstance(x, P))
     spec_for = train_batch_specs(mesh)

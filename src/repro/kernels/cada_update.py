@@ -39,13 +39,20 @@ def _amsgrad_kernel(theta_ref, h_ref, vhat_ref, grad_ref, lr_ref,
     Paper convention: v^{k+1} = β2·v̂^k + (1-β2)(∇^k)² (note v̂, not v), then
     v̂^{k+1} = max(v, v̂), and ε sits INSIDE the sqrt. Because (2b) reads v̂
     rather than v, the raw second moment v is a kernel-local temporary — the
-    persistent optimizer state is only {h, v̂} (8P bytes, not 12P).
+    persistent optimizer state is only {h, v̂} (8P bytes, not 12P; bf16
+    moment storage halves that again). Moments are dtype-parametric: math
+    runs in fp32, the STORED (rounded) value drives the update — matching
+    the per-leaf reference stream, so fp32 storage is bit-identical to the
+    pre-parametric kernel and bf16 storage parity-matches the reference.
     """
     g = grad_ref[...].astype(jnp.float32)
-    h = b1 * h_ref[...] + (1.0 - b1) * g
-    v = b2 * vhat_ref[...] + (1.0 - b2) * g * g
-    vhat = jnp.maximum(v, vhat_ref[...])
-    upd = -lr_ref[0] * h / jnp.sqrt(eps + vhat)
+    h32 = h_ref[...].astype(jnp.float32)
+    vh32 = vhat_ref[...].astype(jnp.float32)
+    h = (b1 * h32 + (1.0 - b1) * g).astype(h_out.dtype)
+    v = b2 * vh32 + (1.0 - b2) * g * g
+    vhat = jnp.maximum(v, vh32).astype(vhat_out.dtype)
+    upd = (-lr_ref[0] * h.astype(jnp.float32)
+           / jnp.sqrt(eps + vhat.astype(jnp.float32)))
 
     theta = theta_ref[...]
     theta_out[...] = (theta.astype(jnp.float32) + upd).astype(theta.dtype)
@@ -66,7 +73,8 @@ def fused_amsgrad_flat(theta, h, vhat, grad, lr, *, b1=0.9, b2=0.999,
                        eps=1e-8, interpret=False):
     """Fused update over pre-flattened (n_blocks*BLOCK,) buffers.
 
-    Returns (theta', h', vhat', ||update||²). Moments must be fp32.
+    Returns (theta', h', vhat', ||update||²). Moments keep their incoming
+    storage dtype (fp32 or bf16 — see the kernel's dtype discipline).
     """
     n = theta.shape[0]
     assert n % BLOCK == 0, f"flat size {n} not a multiple of {BLOCK}"
@@ -85,8 +93,8 @@ def fused_amsgrad_flat(theta, h, vhat, grad, lr, *, b1=0.9, b2=0.999,
                    pl.BlockSpec((1, 1), lambda i: (0, 0))),
         out_shape=(
             jax.ShapeDtypeStruct(shape2d, theta.dtype),
-            jax.ShapeDtypeStruct(shape2d, jnp.float32),
-            jax.ShapeDtypeStruct(shape2d, jnp.float32),
+            jax.ShapeDtypeStruct(shape2d, h.dtype),
+            jax.ShapeDtypeStruct(shape2d, vhat.dtype),
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
         ),
         interpret=interpret,

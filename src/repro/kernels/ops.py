@@ -16,6 +16,14 @@ with zeros up to whole kernel blocks and sliced back, so every pytree —
 logreg through the LM path — takes the fused route (zero-padded gradients
 leave zero moments and a zero update, so reductions are unaffected).
 
+Sharded flat planes (the ``shard`` flag on the flat ops, a static
+``distributed.sharding.FlatSharding``): the same kernels run SHARD-LOCAL
+under a shard_map that is manual over the state-shard axes — each device
+streams only its ``n_flat / shards`` slice (or its rows of the (M, n_flat)
+planes) — and the scalar reductions (‖Δθ‖², the (M,) rule-LHS norms) are
+completed with ONE psum of fp32 partials. The only cross-device bytes the
+state math ever pays are those O(M) scalars; no plane is gathered.
+
 ``fused_cada_update`` is the pytree-level entry point used by the optimizer:
 it flattens the parameter pytree into one padded fp32 stream, runs the fused
 update, and scatters back — giving the one-HBM-pass optimizer step plus the
@@ -59,15 +67,42 @@ def _pad_plane(a, block=_cu.BLOCK):
     return jnp.pad(a, ((0, 0), (0, pad))) if pad else a
 
 
+def _shard_map(f, shard, in_specs, out_specs, manual):
+    """shard_map manual over ``manual``, auto elsewhere (compat shim)."""
+    from repro.launch.mesh import partial_auto_shard_map
+    return partial_auto_shard_map(f, shard.mesh, in_specs, out_specs,
+                                  manual)
+
+
 # ------------------------------------------------------------------ flat ops
 
-@partial(jax.jit, static_argnames=("b1", "b2", "eps", "interpret"))
+@partial(jax.jit, static_argnames=("b1", "b2", "eps", "interpret", "shard"))
 def fused_amsgrad_flat(theta, h, vhat, grad, lr, *, b1=0.9, b2=0.999,
-                       eps=1e-8, interpret=None):
+                       eps=1e-8, interpret=None, shard=None):
     """Fused AMSGrad/CADA step over arbitrary-length flat buffers.
 
-    Returns (theta', h', vhat', ||update||²); moments must be fp32.
+    Returns (theta', h', vhat', ||update||²); moments keep their incoming
+    storage dtype (fp32 or bf16 — see kernels/cada_update.py).
+
+    ``shard`` (static FlatSharding, optional): run SHARD-LOCAL — manual
+    shard_map over the state-shard axes, each device fusing its own
+    ``n_flat / shards`` slice in one pass, with a single psum of the fp32
+    ‖Δθ‖² partials. The global result is identical (the padding discipline
+    makes every local slice self-contained).
     """
+    if shard is not None and shard.axes:
+        from jax.sharding import PartitionSpec as P
+        spec = shard.server_spec()
+
+        def local(t, hh, vh, g, lr_):
+            t2, h2, vh2, sq = fused_amsgrad_flat(
+                t, hh, vh, g, lr_, b1=b1, b2=b2, eps=eps,
+                interpret=interpret)
+            return t2, h2, vh2, jax.lax.psum(sq, shard.axes)
+
+        return _shard_map(local, shard, (spec,) * 4 + (P(),),
+                          (spec, spec, spec, P()), shard.axes)(
+            theta, h, vhat, grad, jnp.asarray(lr, jnp.float32))
     pallas, interpret = _use_pallas(interpret)
     if not pallas:
         return _ref.amsgrad_ref(theta, h, vhat, grad, lr, b1=b1, b2=b2,
@@ -87,10 +122,27 @@ def diff_sq_norm_flat(a, b, *, interpret=None):
     return _cu.diff_sq_norm_flat(ap, bp, interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def batched_diff_sq_norm(a, b, *, interpret=None):
+@partial(jax.jit, static_argnames=("interpret", "shard"))
+def batched_diff_sq_norm(a, b, *, interpret=None, shard=None):
     """(M,) per-worker ||a_m − b_m||² over (M, n) planes — the CADA rule
-    LHS for all M workers in one pass (fp32 accumulate)."""
+    LHS for all M workers in one pass (fp32 accumulate).
+
+    ``shard`` (static FlatSharding, optional): shard-local form — manual
+    over the worker axis (each device sweeps only its own rows) and the
+    plane's column axes, finishing the per-row partials with one psum over
+    the column axes. Rows stay whole per device otherwise.
+    """
+    if shard is not None:
+        from jax.sharding import PartitionSpec as P
+        cols = shard.col_axes
+        in_spec = shard.worker_spec()
+
+        def local(al, bl):
+            r = batched_diff_sq_norm(al, bl, interpret=interpret)
+            return jax.lax.psum(r, cols) if cols else r
+
+        return _shard_map(local, shard, (in_spec, in_spec),
+                          P(shard.waxis), shard.plane_axes)(a, b)
     pallas, interpret = _use_pallas(interpret)
     if not pallas:
         d = a.astype(jnp.float32) - b.astype(jnp.float32)
@@ -99,9 +151,20 @@ def batched_diff_sq_norm(a, b, *, interpret=None):
     return _cu.batched_diff_sq_norm_flat(ap, bp, interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def batched_sq_norm(a, *, interpret=None):
-    """(M,) per-worker ||a_m||² over an (M, n) plane."""
+@partial(jax.jit, static_argnames=("interpret", "shard"))
+def batched_sq_norm(a, *, interpret=None, shard=None):
+    """(M,) per-worker ||a_m||² over an (M, n) plane (``shard`` as in
+    :func:`batched_diff_sq_norm`)."""
+    if shard is not None:
+        from jax.sharding import PartitionSpec as P
+        cols = shard.col_axes
+
+        def local(al):
+            r = batched_sq_norm(al, interpret=interpret)
+            return jax.lax.psum(r, cols) if cols else r
+
+        return _shard_map(local, shard, (shard.worker_spec(),),
+                          P(shard.waxis), shard.plane_axes)(a)
     pallas, interpret = _use_pallas(interpret)
     if not pallas:
         v = a.astype(jnp.float32)

@@ -9,14 +9,20 @@ def amsgrad_ref(theta, h, vhat, grad, lr, *, b1=0.9, b2=0.999, eps=1e-8):
     """Reference fused AMSGrad/CADA update on flat fp32/bf16 buffers.
 
     Matches optim/adam.py (paper eqs. 2a-2c: v from v̂, ε inside the sqrt;
-    v itself is a temporary — only {h, v̂} persist).
+    v itself is a temporary — only {h, v̂} persist). Moments keep their
+    incoming storage dtype; math runs in fp32 and the STORED (rounded)
+    moment drives the update — the same dtype discipline as the Pallas
+    kernel and the per-leaf reference stream (bit-identical for fp32).
     Returns (theta', h', vhat', ||update||²).
     """
     g = grad.astype(jnp.float32)
-    h_new = b1 * h + (1.0 - b1) * g
-    v_new = b2 * vhat + (1.0 - b2) * g * g
-    vhat_new = jnp.maximum(v_new, vhat)
-    upd = -lr * h_new / jnp.sqrt(eps + vhat_new)
+    h32 = h.astype(jnp.float32)
+    vh32 = vhat.astype(jnp.float32)
+    h_new = (b1 * h32 + (1.0 - b1) * g).astype(h.dtype)
+    v_new = b2 * vh32 + (1.0 - b2) * g * g
+    vhat_new = jnp.maximum(v_new, vh32).astype(vhat.dtype)
+    upd = (-lr * h_new.astype(jnp.float32)
+           / jnp.sqrt(eps + vhat_new.astype(jnp.float32)))
     theta_new = (theta.astype(jnp.float32) + upd).astype(theta.dtype)
     return theta_new, h_new, vhat_new, jnp.sum(upd * upd)
 

@@ -29,7 +29,8 @@ from repro.distributed.serving import (                        # noqa: E402
     jit_decode_step, jit_prefill_step,
 )
 from repro.distributed.trainer import (                        # noqa: E402
-    abstract_train_state, jit_train_step, worker_split_abstract,
+    abstract_train_state, flat_state_shards, jit_train_step,
+    worker_split_abstract,
 )
 from repro.launch.mesh import (                                # noqa: E402
     DCN_BW, HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh,
@@ -56,7 +57,10 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
         make, _, m = jit_train_step(cfg, mesh, hp)
         batch_sds = worker_split_abstract(
             input_specs(cfg, shape)["batch"], m)
-        state_sds = abstract_train_state(cfg, hp, m)
+        # state shapes must match the step's: the flat layout pads to the
+        # mesh's state-shard count
+        state_sds = abstract_train_state(
+            cfg, hp, m, shards=flat_state_shards(cfg, mesh, hp))
         with set_mesh(mesh):
             lowered = make(batch_sds).lower(state_sds, batch_sds)
         meta = {"step": "train_step", "rule": hp.rule.kind,

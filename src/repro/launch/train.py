@@ -20,8 +20,9 @@ from repro.checkpoint import io as ckpt
 from repro.core.comm import strategy_kinds
 from repro.core.rules import CommRule
 from repro.data.synthetic import lm_tokens
-from repro.distributed.trainer import (TrainHParams, init_train_state,
-                                       jit_train_step, worker_split)
+from repro.distributed.trainer import (TrainHParams, flat_state_shards,
+                                       init_train_state, jit_train_step,
+                                       worker_split)
 from repro.launch.mesh import make_host_mesh, set_mesh
 
 
@@ -46,6 +47,10 @@ def main() -> None:
     p.add_argument("--topk-frac", type=float, default=0.1,
                    help="topk rule: fraction of innovation entries "
                         "uploaded per (worker, leaf)")
+    p.add_argument("--sparse-wire", action="store_true",
+                   help="topk rule: ship (values, indices) pairs sized k "
+                        "through the gated collective instead of the "
+                        "dense masked plane")
     p.add_argument("--no-error-feedback", action="store_true",
                    help="laq/topk: drop the compression error instead of "
                         "carrying the per-worker residual e_m")
@@ -53,6 +58,15 @@ def main() -> None:
                    help="avp rule: per-worker upload-period lower bound")
     p.add_argument("--period-max", type=int, default=0,
                    help="avp rule: upper bound (0 = max-delay)")
+    p.add_argument("--avp-compose", action="store_true",
+                   help="avp rule: upload only when due AND the "
+                        "innovation energy clears the CADA RHS")
+    p.add_argument("--state-fsdp-axes", default="",
+                   help="comma list of mesh axes to ZeRO the flat "
+                        "optimizer/comm state over (e.g. 'data')")
+    p.add_argument("--moments-dtype", default="float32",
+                   choices=["float32", "bfloat16"],
+                   help="storage dtype of the flat {h, v̂} moment planes")
     p.add_argument("--steps", type=int, default=50)
     p.add_argument("--global-batch", type=int, default=8)
     p.add_argument("--seq", type=int, default=128)
@@ -77,12 +91,21 @@ def main() -> None:
                                     quantize_bits=args.quantize_bits,
                                     error_feedback=not args.no_error_feedback,
                                     topk_frac=args.topk_frac,
+                                    sparse_wire=args.sparse_wire,
                                     period_min=args.period_min,
-                                    period_max=args.period_max),
-                      lr=args.lr, microbatches=args.microbatches)
+                                    period_max=args.period_max,
+                                    avp_compose=args.avp_compose),
+                      lr=args.lr, microbatches=args.microbatches,
+                      moments_dtype=args.moments_dtype,
+                      state_fsdp_axes=tuple(
+                          a for a in args.state_fsdp_axes.split(",") if a))
     make, _, m = jit_train_step(cfg, mesh, hp)
+    # the flat layout pads to the mesh's state-shard count: state init
+    # must use the SAME count as the compiled step
+    shards = flat_state_shards(cfg, mesh, hp)
     if args.workers:
         m = args.workers  # host-mesh override (simulated workers)
+        shards = 1        # mesh-free step builder: unsharded flat plane
         from repro.distributed.trainer import make_train_step
         # donate the state: the train loop threads it linearly, so the
         # buffers alias in place instead of being copied every step
@@ -93,7 +116,8 @@ def main() -> None:
     batches = make_token_batches(cfg, global_batch=args.global_batch,
                                  seq=args.seq, steps=args.steps)
     with set_mesh(mesh):
-        state = init_train_state(cfg, hp, m, jax.random.PRNGKey(0))
+        state = init_train_state(cfg, hp, m, jax.random.PRNGKey(0),
+                                 shards=shards)
         if step is None:
             sds = jax.tree.map(
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),

@@ -49,24 +49,29 @@ class FusedAMSGrad(NamedTuple):
         return p, FusedState(count=state.count + 1, h=h, vhat=vhat), sq
 
     # ---- flat-plane interface (core/flat.py hot paths)
-    def init_flat(self, n_flat: int) -> FusedState:
-        """State over pre-flattened (n_flat,) fp32 buffers — no pytree
+    def init_flat(self, n_flat: int, dtype=jnp.float32) -> FusedState:
+        """State over pre-flattened (n_flat,) buffers — no pytree
         bookkeeping, so the step needs no pack/unpack of the moments.
+        ``dtype`` is the moment STORAGE dtype (bf16 halves the 8P-byte
+        footprint; math stays fp32 — see kernels/cada_update.py).
         (h and v̂ are distinct buffers — donation-safe.)"""
         return FusedState(count=jnp.zeros([], jnp.int32),
-                          h=jnp.zeros((n_flat,), jnp.float32),
-                          vhat=jnp.zeros((n_flat,), jnp.float32))
+                          h=jnp.zeros((n_flat,), dtype),
+                          vhat=jnp.zeros((n_flat,), dtype))
 
-    def apply_flat(self, theta, state: FusedState, grad, *, interpret=None):
+    def apply_flat(self, theta, state: FusedState, grad, *, interpret=None,
+                   shard=None):
         """One fused step over flat buffers: (theta', state', ||Δθ||²).
 
         ``interpret`` is the 3-way kernel-mode flag of kernels/ops.py
-        (None = Pallas on TPU / fused flat jnp elsewhere).
+        (None = Pallas on TPU / fused flat jnp elsewhere); ``shard`` the
+        static FlatSharding for the shard-local, psum-reduced form.
         """
         lr = self.lr(state.count) if callable(self.lr) else self.lr
         t, h, vhat, sq = kops.fused_amsgrad_flat(
             theta, state.h, state.vhat, grad, lr,
-            b1=self.b1, b2=self.b2, eps=self.eps, interpret=interpret)
+            b1=self.b1, b2=self.b2, eps=self.eps, interpret=interpret,
+            shard=shard)
         return t, FusedState(count=state.count + 1, h=h, vhat=vhat), sq
 
 

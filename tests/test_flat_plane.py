@@ -268,6 +268,224 @@ def test_donated_engine_state_aliases():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
 
 
+# ------------------------------------------------------- sharded layout
+
+needs_mesh8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(the CI mesh matrix leg)")
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4, 8])
+def test_layout_shards_pad_and_roundtrip(rng, shards):
+    """n_flat pads to a multiple of align·shards; per-shard split/merge
+    and pack/unpack round-trip bit-exactly; the true entries are invariant
+    to the shard count (only the padding tail moves)."""
+    tree = _mixed_tree(rng)
+    lay = F.layout_of(tree, shards=shards)
+    assert lay.shards == shards
+    assert lay.n_flat % (F.PAD_ALIGN * shards) == 0
+    assert lay.shard_len * shards == lay.n_flat
+    buf = lay.pack(tree)
+    np.testing.assert_array_equal(
+        np.asarray(lay.shard_merge(lay.shard_split(buf))), np.asarray(buf))
+    back = lay.unpack(buf)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # shard-count independence of the true prefix
+    base = F.layout_of(tree)
+    np.testing.assert_array_equal(np.asarray(buf[:lay.n]),
+                                  np.asarray(base.pack(tree)[:base.n]))
+    # (M, n_flat) planes split the same way
+    wtree = jax.tree.map(lambda l: jnp.stack([l, l + 1]), tree)
+    plane = lay.pack_worker(wtree)
+    np.testing.assert_array_equal(
+        np.asarray(lay.shard_merge(lay.shard_split(plane))),
+        np.asarray(plane))
+
+
+def test_spec_dim():
+    from jax.sharding import PartitionSpec as P
+    assert F.spec_dim(()) is None
+    assert F.spec_dim(("data",)) == "data"
+    assert F.spec_dim(("data", "pod")) == ("data", "pod")
+    assert P(F.spec_dim(("data",))) == P("data")
+
+
+def test_fused_amsgrad_bf16_moments_matches_per_leaf_reference(rng):
+    """Dtype-parametric moments: the fused kernel (jnp fallback AND
+    interpret-mode Pallas) with bf16 {h, v̂} matches the per-leaf reference
+    stream's dtype discipline — the STORED (rounded) moment drives the
+    update."""
+    from repro.distributed.trainer import TrainHParams, _amsgrad_apply
+    n = 700
+    theta = jnp.asarray(rng.normal(size=n), jnp.float32)
+    h = jnp.asarray(rng.normal(size=n) * 0.1, jnp.bfloat16)
+    vhat = jnp.abs(jnp.asarray(rng.normal(size=n) * 0.01, jnp.bfloat16))
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    hp = TrainHParams(lr=0.01, moments_dtype="bfloat16")
+    want_p, want_h, want_v, want_sq = _amsgrad_apply(
+        {"x": theta}, {"x": h}, {"x": vhat}, {"x": g}, hp)
+    for interpret in (None, True):
+        t2, h2, v2, sq = kops.fused_amsgrad_flat(theta, h, vhat, g, 0.01,
+                                                 interpret=interpret)
+        assert h2.dtype == jnp.bfloat16 and v2.dtype == jnp.bfloat16
+        # θ to 1-2 ulp (separately-jitted programs fuse the update stream
+        # differently); the STORED moments must round identically
+        np.testing.assert_allclose(np.asarray(t2),
+                                   np.asarray(want_p["x"]), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(h2, np.float32),
+                                      np.asarray(want_h["x"], np.float32))
+        np.testing.assert_array_equal(np.asarray(v2, np.float32),
+                                      np.asarray(want_v["x"], np.float32))
+        np.testing.assert_allclose(float(sq), float(want_sq), rtol=1e-6)
+
+
+# --------------------------------------------------- shard-local kernels
+
+def _mesh_shard(shape, axes, waxis, saxes):
+    from repro.distributed.sharding import FlatSharding
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh(shape, axes)
+    return mesh, FlatSharding(mesh=mesh, waxis=waxis, axes=saxes)
+
+
+@needs_mesh8
+def test_sharded_fused_update_matches_unsharded(rng):
+    """The shard_map'd fused update (each device one n_flat/S slice, one
+    psum'd ‖Δθ‖²) equals the whole-plane form."""
+    mesh, shard = _mesh_shard((8, 1), ("data", "model"), "data", ("data",))
+    n = 8 * 32
+    theta = jnp.asarray(rng.normal(size=n), jnp.float32)
+    h = jnp.asarray(rng.normal(size=n) * 0.1, jnp.float32)
+    vhat = jnp.abs(jnp.asarray(rng.normal(size=n) * 0.01, jnp.float32))
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    want = kops.fused_amsgrad_flat(theta, h, vhat, g, 0.01)
+    got = jax.jit(lambda *a: kops.fused_amsgrad_flat(
+        *a, 0.01, shard=shard))(theta, h, vhat, g)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+@needs_mesh8
+@pytest.mark.parametrize("mesh_kind", ["rows", "rows_and_cols"])
+def test_sharded_batched_norms_match_oracle(rng, mesh_kind):
+    """The shard-local batched LHS forms (manual over worker rows, psum
+    over column shards) equal the plain whole-plane kernels — on a
+    worker-axis-only mesh and on a pod×data mesh where the flat dim itself
+    shards (the pod-mesh layout)."""
+    if mesh_kind == "rows":
+        mesh, shard = _mesh_shard((8, 1), ("data", "model"), "data",
+                                  ("data",))
+        m = 8
+    else:
+        mesh, shard = _mesh_shard((2, 4), ("pod", "data"), "pod",
+                                  ("data",))
+        m = 2
+    n = 4 * 24
+    a = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(jax.jit(lambda x, y: kops.batched_diff_sq_norm(
+            x, y, shard=shard))(a, b)),
+        np.asarray(kops.batched_diff_sq_norm(a, b)), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(jax.jit(lambda x: kops.batched_sq_norm(
+            x, shard=shard))(a)),
+        np.asarray(kops.batched_sq_norm(a)), rtol=1e-5)
+
+
+# -------------------------------------------------------- sparse topk wire
+
+def test_topk_sparse_wire_extract_scatter_roundtrip(rng):
+    """(values, indices) extraction from a sparsified plane reconstructs
+    it bit-exactly (tie-free data), padding tail untouched."""
+    tree = {"w": jnp.zeros((6, 2), jnp.float32),
+            "b": jnp.zeros((4,), jnp.float32)}
+    layout = F.layout_of(tree)
+    plane = jnp.asarray(rng.normal(size=(3, layout.n_flat)), jnp.float32)
+    sp = F.per_worker_topk_sparsify_flat(layout, plane, 0.3)
+    vals, idx = F.per_worker_topk_extract_flat(layout, sp, 0.3)
+    dense = F.sparse_rows_to_dense(idx, vals, layout.n_flat)
+    np.testing.assert_array_equal(np.asarray(dense[:, :layout.n]),
+                                  np.asarray(sp[:, :layout.n]))
+    # fixed payload size: K = Σ_seg ⌈frac·s⌉
+    from repro.core.quantize import topk_count
+    K = sum(topk_count(s, 0.3) for s in layout.sizes)
+    assert vals.shape == idx.shape == (3, K)
+
+
+def test_topk_sparse_wire_parity_with_dense(rng):
+    """Satellite gate: the topk rule with ``sparse_wire=True`` (the (v, i)
+    pairs ride the simulated collective) reproduces the dense-wire run
+    bit-exactly — identical masks, staleness, bytes, and parameters."""
+    from repro.core.engine import CADAEngine
+    from repro.optim.fused import FusedAMSGrad
+    m, steps = 3, 8
+    loss_fn, params, sample = _small_problem(m)
+    batches = jax.vmap(sample)(jax.random.split(jax.random.PRNGKey(2),
+                                                steps))
+    runs = {}
+    for sparse in (False, True):
+        rule = CommRule(kind="topk", c=5.0, d_max=4, max_delay=6,
+                        topk_frac=0.25, sparse_wire=sparse)
+        eng = CADAEngine(loss_fn, FusedAMSGrad(lr=0.05), rule, m)
+        runs[sparse] = jax.jit(eng.run)(eng.init(params), batches)
+    std, md = runs[False]
+    sts, ms = runs[True]
+    np.testing.assert_array_equal(np.asarray(ms["upload_mask"]),
+                                  np.asarray(md["upload_mask"]))
+    np.testing.assert_array_equal(np.asarray(ms["staleness"]),
+                                  np.asarray(md["staleness"]))
+    np.testing.assert_allclose(np.asarray(ms["bytes_up"]),
+                               np.asarray(md["bytes_up"]), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(sts.params),
+                    jax.tree.leaves(std.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_avp_compose_gates_on_energy(rng):
+    """Satellite: ``avp_compose`` composes the period gate with the CADA
+    LHS. Pointwise the composed gate is a SUBSET of the plain one
+    (the energy check can only veto), so up to and including the FIRST
+    iteration where the two trajectories' masks differ, composed ⊆
+    plain — after that the states diverge and no global ordering holds.
+    The max-staleness cap still forces uploads."""
+    from repro.core.engine import CADAEngine
+    from repro.optim.fused import FusedAMSGrad
+    m, steps = 3, 10
+    loss_fn, params, sample = _small_problem(m)
+    batches = jax.vmap(sample)(jax.random.split(jax.random.PRNGKey(4),
+                                                steps))
+    mets = {}
+    for compose in (False, True):
+        rule = CommRule(kind="avp", c=5.0, d_max=4, max_delay=6,
+                        period_min=2, period_max=4, avp_compose=compose)
+        eng = CADAEngine(loss_fn, FusedAMSGrad(lr=0.05), rule, m)
+        _, mets[compose] = jax.jit(eng.run)(eng.init(params), batches)
+    plain = np.asarray(mets[False]["upload_mask"])
+    comp = np.asarray(mets[True]["upload_mask"])
+    for i in range(steps):
+        assert not (comp[i] & ~plain[i]).any(), \
+            f"composed gate added an upload at iteration {i}"
+        if not np.array_equal(comp[i], plain[i]):
+            break  # trajectories diverge from here on
+    else:
+        pytest.fail("compose never vetoed an upload — the test setup "
+                    "does not exercise the composition")
+    assert int(comp.sum()) > 0  # the staleness cap still forces uploads
+    # flat plane and pytree reference agree on the composed gate too
+    rule = CommRule(kind="avp", c=5.0, d_max=4, max_delay=6,
+                    period_min=2, period_max=4, avp_compose=True)
+    eng_r = CADAEngine(loss_fn, FusedAMSGrad(lr=0.05), rule, m,
+                       fused=False)
+    _, mr = jax.jit(eng_r.run)(eng_r.init(params), batches)
+    np.testing.assert_array_equal(np.asarray(mets[True]["upload_mask"]),
+                                  np.asarray(mr["upload_mask"]))
+
+
 def test_donated_trainer_step_aliases():
     """The trainer's jitted step with donated state aliases too (the
     launch/train.py and benchmarks/run.py hot loops)."""

@@ -114,6 +114,59 @@ def test_state_specs_structure():
     assert specs_a.comm is None
 
 
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8 (the CI mesh matrix leg)")
+def test_flat_round_with_manual_shard_maps_on_pod_mesh(monkeypatch):
+    """The flat state plane on the MULTI-POD mesh (worker = pod): a
+    (pod=2, data=4, model=1) mesh with the CADA state sharded over 'data'
+    — worker planes shard pod × data, so the batched LHS and the fused
+    update run under MANUAL shard_maps over both axes and psum their
+    fp32 partials over the column shards. The run must match the
+    mesh-free reference's masks.
+
+    The pod-manual VGRAD shard_map stays off (REPRO_NO_PODMAP): executing
+    it trips an XLA spmd-partitioner CHECK (hlo_sharding_util.cc
+    IsManualSubgroup) on the pinned jax 0.4.37 for BOTH state planes —
+    a pre-existing partial-auto limitation recorded in ROADMAP's
+    jax-compat item (revisit at jax >= 0.6). The kernel-side manual
+    shard_maps this test exercises are the flat round's own."""
+    from repro.launch.mesh import compat_make_mesh
+    from repro.distributed.trainer import flat_state_shards
+    monkeypatch.setenv("REPRO_NO_PODMAP", "1")
+    mesh = compat_make_mesh((2, 4, 1), ("pod", "data", "model"))
+    hp = TrainHParams(rule=CommRule(kind="cada2", c=20.0, d_max=4,
+                                    max_delay=10), lr=1e-3,
+                      shard_cada_state=True)
+    make, sspecs, m = jit_train_step(CFG, mesh, hp)
+    assert m == 2  # the pod is the worker
+    batches = [worker_split(_batch(jax.random.PRNGKey(50 + i)), m)
+               for i in range(3)]
+    sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                       batches[0])
+    mets = []
+    with set_mesh(mesh):
+        step = make(sds)
+        st = init_train_state(CFG, hp, m, jax.random.PRNGKey(42),
+                              shards=flat_state_shards(CFG, mesh, hp))
+        for b in batches:
+            st, mm = step(st, b)
+            mets.append(mm)
+    # worker planes really shard pod × data
+    wg = st.comm.worker_grads
+    assert tuple(wg.sharding.spec) == ("pod", "data")
+    # mesh-free reference trajectory: identical Algorithm-1 decisions
+    hp_r = TrainHParams(rule=hp.rule, lr=1e-3, fused=False)
+    step_r = jax.jit(make_train_step(CFG, hp_r, m))
+    str_ = init_train_state(CFG, hp_r, m, jax.random.PRNGKey(42))
+    for i, b in enumerate(batches):
+        str_, mr = step_r(str_, b)
+        np.testing.assert_array_equal(np.asarray(mets[i]["upload_mask"]),
+                                      np.asarray(mr["upload_mask"]),
+                                      err_msg=f"pod-map mask at step {i}")
+        assert np.isfinite(float(mets[i]["loss"]))
+
+
 def test_jit_train_step_on_host_mesh():
     mesh = make_host_mesh()
     hp = TrainHParams(rule=CommRule(kind="cada2", c=0.5, d_max=4,
