@@ -12,6 +12,12 @@
     compressed-innovation rule) at matched hyper-parameters: final loss vs
     uploads vs bytes actually sent. New strategies appear here with no
     benchmark change.
+  * network sweep              — the sim runtime (repro.sim) prices the
+    same trajectories under LAN/WAN/heterogeneous-cluster profiles:
+    simulated time-to-target-loss, bytes on wire, worker utilization per
+    (profile, rule). This is where the compressed-upload rules' byte
+    savings become WALL-CLOCK savings (and where they cost, on free
+    links).
 """
 from __future__ import annotations
 
@@ -26,7 +32,7 @@ from repro.core.engine import CADAEngine, make_sampler
 from repro.core.rules import CommRule
 from repro.data.partition import pad_to_matrix, uniform_partition
 from repro.data.synthetic import ijcnn1_like
-from repro.models.small import logreg_init, logreg_loss
+from repro.models.small import logreg_init, logreg_loss, mlp_init, mlp_loss
 from repro.optim.adam import adam
 
 M = 10
@@ -37,6 +43,32 @@ def _problem():
     mtx = pad_to_matrix(uniform_partition(ds.n, M, seed=0))
     return (make_sampler(ds.x, ds.y, mtx, 32),
             logreg_init(None, 22, 2))
+
+
+def _mlp_problem():
+    """The wall-clock benches' problem (shared with run.py's bench_sim):
+    the ~1.6k-param MLP, big enough that the dense plane costs ~51 ms on
+    the WAN's 1 Mbit/s uplink — the wire width is a first-order
+    wall-clock term (logreg's 184 B disappears under the 20 ms
+    latency)."""
+    ds = ijcnn1_like(n=4000)
+    mtx = pad_to_matrix(uniform_partition(ds.n, M, seed=0))
+    return (make_sampler(ds.x, ds.y, mtx, 32),
+            mlp_init(jax.random.PRNGKey(7), 22, 64, 2))
+
+
+def network_rules() -> dict:
+    """The rule table the wall-clock benches compare (shared with run.py's
+    bench_sim, so BENCH_sim.json and the ablations sweep always describe
+    the SAME scenario): the upload-everything baseline, the paper rule,
+    and the two compressed wires."""
+    return {
+        "always": CommRule(kind="always", c=0.6, d_max=10, max_delay=100),
+        "cada2": CommRule(kind="cada2", c=0.6, d_max=10, max_delay=100),
+        "laq": CommRule(kind="laq", c=0.6, d_max=10, max_delay=100),
+        "topk": CommRule(kind="topk", c=0.6, d_max=10, max_delay=100,
+                         topk_frac=0.1, sparse_wire=True),
+    }
 
 
 def sweep_c(iters=400, cs=(0.0, 0.1, 0.3, 1.0, 3.0, 10.0)) -> list[dict]:
@@ -178,6 +210,57 @@ def sweep_avp(iters=400) -> list[dict]:
     return rows
 
 
+def sweep_network(iters=300, profiles=("lan", "wan", "hetero"),
+                  target_loss=0.05) -> list[dict]:
+    """Wall-clock CADA: one problem, one batch stream, every (network
+    profile × rule) pair through the discrete-event runtime. The WAN rows
+    are the subsystem's point: a compressed rule (laq 8-bit or topk
+    sparse-wire) must beat ``always`` on simulated time-to-target-loss
+    when uploads are expensive — while on a (near-)free LAN the
+    per-iteration-best rule wins. One async bounded-staleness row per
+    profile records the barrier-free runtime on the same scenario."""
+    from repro.sim import simulate, summarize
+
+    sample, params = _mlp_problem()
+    batches = jax.vmap(sample)(
+        jax.random.split(jax.random.PRNGKey(1), iters))
+    rules = network_rules()
+    rows = []
+    for profile in profiles:
+        for name, rule in rules.items():
+            res = simulate(mlp_loss, rule, params, batches,
+                           n_workers=M, network=profile, mode="barrier",
+                           lr=0.01)
+            rows.append({"sweep": "network", "profile": profile,
+                         "rule": name, **summarize(res, target_loss)})
+            r = rows[-1]
+            print(f"  {profile:6s} {name:7s} t_target="
+                  f"{r['time_to_target_s']} s  wall={r['sim_wall_s']:.3f}s "
+                  f"up={r['mbytes_up']:.4f}MB util={r['utilization_mean']}")
+        res = simulate(mlp_loss, rules["cada2"], params, batches,
+                       n_workers=M, network=profile, mode="async",
+                       async_tau=20, lr=0.01)
+        rows.append({"sweep": "network", "profile": profile,
+                     "rule": "cada2/async", **summarize(res, target_loss)})
+        r = rows[-1]
+        print(f"  {profile:6s} cada2/async t_target="
+              f"{r['time_to_target_s']} s  wall={r['sim_wall_s']:.3f}s "
+              f"util={r['utilization_mean']}")
+    # the subsystem's raison d'être, asserted: expensive uploads (WAN) make
+    # a compressed wire a WALL-CLOCK win over always-upload (checkable
+    # only when the wan profile was part of this sweep)
+    if "wan" in profiles:
+        wan = {r["rule"]: r for r in rows if r["profile"] == "wan"}
+        compressed = [wan[k]["time_to_target_s"] for k in ("laq", "topk")
+                      if wan[k]["time_to_target_s"] is not None]
+        assert compressed, \
+            f"no compressed rule reached the target on wan: {wan}"
+        t_always = wan["always"]["time_to_target_s"]
+        # an 'always' that never settles at the target loses trivially
+        assert t_always is None or min(compressed) < t_always, wan
+    return rows
+
+
 def sweep_H(iters=400, hs=(1, 8, 16)) -> list[dict]:
     sample, params = _problem()
     rows = []
@@ -203,7 +286,8 @@ def main() -> None:
     args = p.parse_args()
     rows = (sweep_c(args.iters) + sweep_D(args.iters)
             + sweep_bits(args.iters) + sweep_rules(args.iters)
-            + sweep_avp(args.iters) + sweep_H(args.iters))
+            + sweep_avp(args.iters) + sweep_network(min(args.iters, 300))
+            + sweep_H(args.iters))
     # paper supplement claims, asserted:
     c_rows = [r for r in rows if r["sweep"] == "c"]
     assert c_rows[0]["skip_rate"] < 0.02          # c=0 => no skipping

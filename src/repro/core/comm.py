@@ -94,6 +94,7 @@ class CommContext(NamedTuple):
     m: int
     vgrad: Callable
     vgrad_per: Callable
+    participation: Any = None  # (M,) bool round-participation mask | None
 
 
 class CommRoundResult(NamedTuple):
@@ -151,6 +152,11 @@ class CommStrategy:
     #: True ⇒ the rule keeps NO innovation state (engines may drop the
     #: whole CommState and run the lean distributed-baseline path)
     stateless: bool = False
+    #: flat-extras keys that are SHARED across workers (not (M,)-leading):
+    #: the event-driven async runtime (repro.sim) slices every other extras
+    #: entry to a single worker row when it gates one worker at a time, and
+    #: passes these through whole (e.g. CADA1's snapshot θ̃).
+    async_shared_extras: tuple = ()
 
     def __init__(self, rule: CommRule):
         self.rule = rule
@@ -353,6 +359,7 @@ class CADA1Strategy(CommStrategy):
     δ̃_m = ∇ℓ(θ^k;ξ) − ∇ℓ(θ̃;ξ) evaluated at the SAME sample."""
     kind = "cada1"
     grad_evals_per_iter = 2
+    async_shared_extras = ("snapshot",)
 
     def init_extras(self, params, m, make_grad_zeros, bcast):
         return {"snapshot": params,
@@ -754,9 +761,12 @@ class AVPStrategy(CommStrategy):
                           energy), energy
 
     def post_upload(self, extras, energy, upload, ctx):
-        return {**extras,
-                "period": self._adapt(extras["period"], energy,
-                                      ctx.comm.diff_hist)}
+        period = self._adapt(extras["period"], energy, ctx.comm.diff_hist)
+        if ctx.participation is not None:
+            # an OFFLINE worker evaluated nothing this round — its period
+            # cannot adapt to a gradient it never computed
+            period = jnp.where(ctx.participation, period, extras["period"])
+        return {**extras, "period": period}
 
     # ---- flat plane: only the energy norm changes form.
     def init_flat_extras(self, layout, params, params_flat, m, grad_dtype):
@@ -815,12 +825,17 @@ def comm_state_specs(strategy: CommStrategy, param_spec, worker_param_spec,
 
 
 def comm_round(strategy: CommStrategy, comm: CommState, params, batch, k,
-               *, vgrad, vgrad_per=None) -> CommRoundResult:
+               *, vgrad, vgrad_per=None,
+               participation=None) -> CommRoundResult:
     """One rule-agnostic communication round of Algorithm 1 (lines 4-15).
 
     The caller supplies the gradient evaluators and afterwards applies the
     server update (lines 16-17) to ``result.comm.nabla``, then records the
     progress scalar via :func:`record_progress`.
+
+    ``participation`` ((M,) bool or None) masks the upload decision for
+    partial-participation rounds (see ``flat.flat_comm_round`` — the sim
+    runtime's knob); ``None`` leaves the graph unchanged.
     """
     r = strategy.rule
     m = comm.staleness.shape[0]
@@ -832,13 +847,16 @@ def comm_round(strategy: CommStrategy, comm: CommState, params, batch, k,
     losses, fresh = vgrad(params, batch)
     ctx = CommContext(params=params, batch=batch, fresh=fresh,
                       comm=comm._replace(extras=extras), step=k, m=m,
-                      vgrad=vgrad, vgrad_per=vgrad_per)
+                      vgrad=vgrad, vgrad_per=vgrad_per,
+                      participation=participation)
 
     # Lines 7/9: rule LHS vs the shared recent-progress RHS.
     lhs, cache = strategy.lhs(ctx, extras)
     rhs = r.rhs(comm.diff_hist)
     # Line 10: upload if the condition is VIOLATED or staleness capped.
     upload = (lhs > rhs) | (comm.staleness >= r.max_delay)
+    if participation is not None:
+        upload = upload & participation
 
     # Eq. (3): server refines ∇ with the uploaded innovations δ_m. The
     # strategy's wire format (quantize/sparsify/error-feedback hook) is
@@ -868,16 +886,19 @@ def comm_round(strategy: CommStrategy, comm: CommState, params, batch, k,
     extras = strategy.post_upload(extras, cache, upload, ctx)
 
     uploads = jnp.sum(upload.astype(jnp.int32))
+    n_active = (jnp.asarray(m, jnp.int32) if participation is None
+                else jnp.sum(participation.astype(jnp.int32)))
     metrics = {
         "uploads": uploads,
-        "skip_rate": 1.0 - uploads.astype(jnp.float32) / m,
+        # fraction of ACTIVE workers that skipped (an offline worker does
+        # not "skip" — it was never asked)
+        "skip_rate": 1.0 - uploads.astype(jnp.float32) / n_active,
         "upload_mask": upload,
         "staleness": staleness,
         "rhs": rhs,
         "mean_lhs": jnp.mean(jnp.where(jnp.isfinite(lhs), lhs, 0.0)),
         "max_staleness": jnp.max(staleness),
-        "grad_evals": jnp.asarray(m * strategy.grad_evals_per_iter,
-                                  jnp.int32),
+        "grad_evals": n_active * strategy.grad_evals_per_iter,
         "bytes_up": (uploads.astype(jnp.float32)
                      * strategy.bytes_per_upload(tree_size(params))),
     }

@@ -130,15 +130,22 @@ class CADAEngine:
         )
 
     # -------------------------------------------------------------- step
-    def step(self, state: EngineState, batch) -> tuple[EngineState, dict]:
-        """One iteration of Algorithm 1. ``batch`` has leading axis M."""
+    def step(self, state: EngineState, batch,
+             participation=None) -> tuple[EngineState, dict]:
+        """One iteration of Algorithm 1. ``batch`` has leading axis M.
+
+        ``participation`` ((M,) bool or None) masks uploads for
+        partial-participation rounds (the sim runtime's knob); None keeps
+        the compiled graph exactly as before.
+        """
         if self.fused:
-            return self._step_flat(state, batch)
+            return self._step_flat(state, batch, participation)
         k = state.step
 
         # Lines 4-15: the shared communication round.
         out = comm_round(self.strategy, state.comm, state.params, batch, k,
-                         vgrad=self._vgrad, vgrad_per=self._vgrad_per)
+                         vgrad=self._vgrad, vgrad_per=self._vgrad_per,
+                         participation=participation)
 
         # Lines 16-17: server Adam update driven by ∇^k (eqs. 2a-2c).
         opt = (self.optimizer if not self._fused_opt
@@ -153,7 +160,7 @@ class CADAEngine:
         metrics = {"loss": jnp.mean(out.losses), **out.metrics}
         return new_state, metrics
 
-    def _step_flat(self, state: EngineState, batch):
+    def _step_flat(self, state: EngineState, batch, participation=None):
         """The flat-plane hot path: one packed gradient plane per round,
         single-op comm math, fused server update with ||Δθ||² for free."""
         k = state.step
@@ -162,7 +169,7 @@ class CADAEngine:
             self.strategy, layout, state.comm, state.params,
             state.params_flat, batch, k, vgrad=self._vgrad,
             vgrad_per=self._vgrad_per, fuse_evals=self._fuse_evals,
-            interpret=self._interpret)
+            interpret=self._interpret, participation=participation)
 
         nabla = F.nabla_f32(out.comm)
         if self._fused_opt:
@@ -188,11 +195,23 @@ class CADAEngine:
         return new_state, metrics
 
     # --------------------------------------------------------------- run
-    def run(self, state: EngineState, batches) -> tuple[EngineState, dict]:
-        """Scan over pre-sampled batches with leading axis (steps, M, ...)."""
-        def body(s, b):
-            return self.step(s, b)
-        return jax.lax.scan(body, state, batches)
+    def run(self, state: EngineState, batches,
+            participation=None) -> tuple[EngineState, dict]:
+        """Scan over pre-sampled batches with leading axis (steps, M, ...).
+
+        ``participation`` ((steps, M) bool or None) feeds per-round
+        partial-participation masks into the scan; None compiles the exact
+        pre-existing graph (the sim's degenerate-parity anchor).
+        """
+        if participation is None:
+            def body(s, b):
+                return self.step(s, b)
+            return jax.lax.scan(body, state, batches)
+
+        def body_p(s, xs):
+            b, p = xs
+            return self.step(s, b, p)
+        return jax.lax.scan(body_p, state, (batches, participation))
 
 
 def _as_protocol(fused: FusedAMSGrad) -> Optimizer:

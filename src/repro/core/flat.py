@@ -323,6 +323,7 @@ class FlatCommContext(NamedTuple):
     m: int
     interpret: Any            # kernel-mode override for kernels/ops.py
     shard: Any = None         # FlatSharding | None (static)
+    participation: Any = None  # (M,) bool round-participation mask | None
 
 
 class FlatCommRoundResult(NamedTuple):
@@ -374,7 +375,8 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
                     params, params_flat, batch, k, *, vgrad,
                     vgrad_per: Callable | None = None,
                     fuse_evals: bool = True,
-                    interpret=None, shard=None) -> FlatCommRoundResult:
+                    interpret=None, shard=None,
+                    participation=None) -> FlatCommRoundResult:
     """One communication round of Algorithm 1 (lines 4-15) on flat buffers.
 
     Semantically identical to ``comm.comm_round`` (the fused-vs-reference
@@ -397,6 +399,14 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
     (``flat_sparse_wire`` returning (values, indices) pairs sized k): the
     pair is what crosses the simulated collective and is scattered back
     server-side — bit-equal to the dense masked plane.
+
+    ``participation`` ((M,) bool or None) models PARTIAL PARTICIPATION
+    (repro.sim's heterogeneous-cluster runtime): a non-participating worker
+    never uploads this round — not even when its staleness is capped (it is
+    offline, so the cap fires on its next participating round) — and its
+    staleness keeps growing. ``None`` (the default) leaves the round's
+    graph completely unchanged, which is what keeps the sim's degenerate
+    zero-latency config bit-exact against the plain engine.
     """
     r = strategy.rule
     m = comm.staleness.shape[0]
@@ -433,13 +443,16 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
     ctx = FlatCommContext(layout=layout, params=params,
                           params_flat=params_flat, batch=batch, fresh=fresh,
                           second=second, comm=comm._replace(extras=extras),
-                          step=k, m=m, interpret=interpret, shard=shard)
+                          step=k, m=m, interpret=interpret, shard=shard,
+                          participation=participation)
 
     # Lines 7/9: rule LHS vs the shared recent-progress RHS.
     lhs, cache = strategy.flat_lhs(ctx, extras)
     rhs = r.rhs(comm.diff_hist)
     # Line 10: upload if the condition is VIOLATED or staleness capped.
     upload = (lhs > rhs) | (comm.staleness >= r.max_delay)
+    if participation is not None:
+        upload = upload & participation
 
     # Eq. (3): innovation delta, wire format, masked aggregation — each a
     # single whole-plane op (one (M, n_flat) sweep instead of ~6 tree_maps).
@@ -475,16 +488,20 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
     extras = strategy.flat_post_upload(extras, cache, upload, ctx)
 
     uploads = jnp.sum(upload.astype(jnp.int32))
+    # offline workers evaluate nothing — charge grad evals to participants
+    n_active = (jnp.asarray(m, jnp.int32) if participation is None
+                else jnp.sum(participation.astype(jnp.int32)))
     metrics = {
         "uploads": uploads,
-        "skip_rate": 1.0 - uploads.astype(jnp.float32) / m,
+        # fraction of ACTIVE workers that skipped (an offline worker does
+        # not "skip" — it was never asked)
+        "skip_rate": 1.0 - uploads.astype(jnp.float32) / n_active,
         "upload_mask": upload,
         "staleness": staleness,
         "rhs": rhs,
         "mean_lhs": jnp.mean(jnp.where(jnp.isfinite(lhs), lhs, 0.0)),
         "max_staleness": jnp.max(staleness),
-        "grad_evals": jnp.asarray(m * strategy.grad_evals_per_iter,
-                                  jnp.int32),
+        "grad_evals": n_active * strategy.grad_evals_per_iter,
         "bytes_up": (uploads.astype(jnp.float32)
                      * strategy.bytes_per_upload(layout.n)),
     }

@@ -53,6 +53,19 @@ like the paper's rules AND shrink the uploads that do happen):
     a worker uploads only when it is due AND its innovation energy clears
     the RHS (the period becomes a floor on upload spacing instead of a
     schedule; the max-staleness cap still forces eventually).
+
+The RUNTIME axis is orthogonal to the rule axis: every rule above runs
+under (a) the synchronous engines (``core/engine.py`` /
+``distributed/trainer.py`` — rounds, no clock), and (b) the discrete-event
+heterogeneous-cluster runtime (:mod:`repro.sim` — simulated wall-clock
+with per-worker compute/link models, stragglers, partial participation,
+and a bounded-staleness ASYNC mode where the server applies the fused
+Adam update per arriving upload and workers gate with these same
+strategies against their stale copy, staleness capped at τ_max). The
+rules' ``bytes_per_upload`` accounting is what the sim's link model
+prices, so the compressed-upload family's savings become wall-clock
+savings under expensive links (``--runtime sim --network wan``); see
+``src/repro/sim/README.md``.
 """
 from __future__ import annotations
 

@@ -25,11 +25,23 @@ def uniform_partition(n: int, m: int, seed: int = 0) -> list[np.ndarray]:
 
 def random_sizes_partition(n: int, m: int, seed: int = 0,
                            min_frac: float = 0.3) -> list[np.ndarray]:
+    if m > n:
+        raise ValueError(f"cannot split {n} examples into {m} non-empty "
+                         "shards")
     rng = np.random.default_rng(seed)
     w = min_frac + rng.random(m)
     w = w / w.sum()
-    sizes = np.maximum(1, (w * n).astype(int))
-    sizes[-1] = n - sizes[:-1].sum()
+    # guarantee every shard >= 1 whatever the weights: give each worker one
+    # example up front and share the remaining n-m by weight, handing the
+    # rounding remainder to the largest fractional parts. (The previous
+    # ``sizes[-1] = n - sizes[:-1].sum()`` underflowed to <= 0 when m was
+    # close to n: every earlier shard is clamped to >= 1, so their sum
+    # could reach n before the last worker was served.)
+    frac = w * (n - m)
+    sizes = 1 + np.floor(frac).astype(int)
+    rem = n - sizes.sum()
+    if rem:
+        sizes[np.argsort(-(frac - np.floor(frac)), kind="stable")[:rem]] += 1
     idx = rng.permutation(n)
     out, s = [], 0
     for sz in sizes:

@@ -34,11 +34,65 @@ def make_token_batches(cfg, *, global_batch, seq, steps, seed=0):
     return toks[:n].reshape(steps, global_batch, seq + 1)
 
 
+def run_sim(cfg, rule, args) -> None:
+    """`--runtime sim`: train under the discrete-event heterogeneous-
+    cluster runtime (repro.sim) — simulated wall-clock under the chosen
+    network profile, synchronous barrier or bounded-staleness async
+    (`--async-tau`). No mesh: workers are simulated processes."""
+    import jax.numpy as jnp
+
+    from repro.models.model import init_params, lm_loss
+    from repro.sim import simulate, summarize
+
+    m = args.workers or 4
+    steps = args.steps
+    toks = make_token_batches(cfg, global_batch=args.global_batch,
+                              seq=args.seq, steps=steps)
+    per_step = [worker_split({"tokens": toks[i]}, m) for i in range(steps)]
+    batches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
+
+    mode = "async" if args.async_tau else "barrier"
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    res = simulate(lambda p, wb: lm_loss(cfg, p, wb)[0], rule, params,
+                   batches, n_workers=m, network=args.network, mode=mode,
+                   async_tau=args.async_tau,
+                   participation=args.participation, lr=args.lr,
+                   eval_s=args.sim_eval_ms * 1e-3)
+    row = summarize(res, args.target_loss or None)
+    print(f"[sim] {args.network}/{mode} rule={rule.kind}: "
+          f"{res.steps} server steps in {res.wall_s:.3f} simulated s, "
+          f"loss {row['final_loss']:.4f}, uploads {res.uploads}, "
+          f"up {row['mbytes_up']:.3f} MB, "
+          f"utilization {row['utilization_mean']:.2f}")
+    print(json.dumps(row, indent=1))
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", required=True, choices=C.list_archs())
     p.add_argument("--smoke", action="store_true",
                    help="reduced config (CPU-sized)")
+    p.add_argument("--runtime", default="mesh", choices=["mesh", "sim"],
+                   help="mesh = run on the host devices; sim = the "
+                        "discrete-event heterogeneous-cluster runtime "
+                        "(repro.sim) — simulated wall-clock under "
+                        "--network, no accelerator mesh")
+    p.add_argument("--network", default="lan",
+                   help="sim runtime: network profile "
+                        "(zero | lan | wan | hetero)")
+    p.add_argument("--async-tau", type=int, default=0,
+                   help="sim runtime: >0 runs the bounded-staleness ASYNC "
+                        "mode with staleness cap tau (uploads applied as "
+                        "they arrive); 0 = synchronous barrier mode")
+    p.add_argument("--participation", type=float, default=1.0,
+                   help="sim barrier mode: fraction of workers "
+                        "participating per round")
+    p.add_argument("--sim-eval-ms", type=float, default=1.0,
+                   help="sim runtime: simulated milliseconds per worker "
+                        "gradient evaluation")
+    p.add_argument("--target-loss", type=float, default=0.0,
+                   help="sim runtime: report simulated "
+                        "time-to-target-loss for this target (0 = off)")
     p.add_argument("--rule", default="cada2", choices=list(strategy_kinds()),
                    help="communication rule; every strategy registered in "
                         "repro.core.comm is launchable")
@@ -85,16 +139,19 @@ def main() -> None:
     if not cfg.embed_input:
         raise SystemExit(f"{args.arch} consumes modality embeddings; use "
                          "examples/serve_decode.py or the dry-run for it")
+    rule = CommRule(kind=args.rule, c=args.c, d_max=10, max_delay=50,
+                    quantize_bits=args.quantize_bits,
+                    error_feedback=not args.no_error_feedback,
+                    topk_frac=args.topk_frac,
+                    sparse_wire=args.sparse_wire,
+                    period_min=args.period_min,
+                    period_max=args.period_max,
+                    avp_compose=args.avp_compose)
+    if args.runtime == "sim":
+        run_sim(cfg, rule, args)
+        return
     mesh = make_host_mesh()
-    hp = TrainHParams(rule=CommRule(kind=args.rule, c=args.c, d_max=10,
-                                    max_delay=50,
-                                    quantize_bits=args.quantize_bits,
-                                    error_feedback=not args.no_error_feedback,
-                                    topk_frac=args.topk_frac,
-                                    sparse_wire=args.sparse_wire,
-                                    period_min=args.period_min,
-                                    period_max=args.period_max,
-                                    avp_compose=args.avp_compose),
+    hp = TrainHParams(rule=rule,
                       lr=args.lr, microbatches=args.microbatches,
                       moments_dtype=args.moments_dtype,
                       state_fsdp_axes=tuple(

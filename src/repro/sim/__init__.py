@@ -1,0 +1,17 @@
+"""Discrete-event heterogeneous-cluster simulation: CADA in wall-clock.
+
+See README.md in this directory for the event model, the staleness
+semantics of the async mode, and the network-profile definitions.
+"""
+from repro.sim.clock import (ComputeModel, LinkModel, NetworkProfile,
+                             PROFILES, network_profile)
+from repro.sim.events import EventQueue, ParticipationModel
+from repro.sim.report import summarize, time_to_target
+from repro.sim.runtime import MODES, SimConfig, SimResult, SimRuntime, simulate
+
+__all__ = [
+    "ComputeModel", "LinkModel", "NetworkProfile", "PROFILES",
+    "network_profile", "EventQueue", "ParticipationModel", "summarize",
+    "time_to_target", "MODES", "SimConfig", "SimResult", "SimRuntime",
+    "simulate",
+]

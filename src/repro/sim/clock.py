@@ -1,0 +1,237 @@
+"""Wall-clock models of the heterogeneous-cluster simulation.
+
+Two model families turn the engine's round-accounting into simulated
+seconds:
+
+  * :class:`ComputeModel` — per-worker gradient-evaluation times. Three
+    kinds: ``deterministic`` (fixed per-worker mean), ``lognormal``
+    (mean-preserving multiplicative jitter), ``trace`` (replay recorded
+    per-eval durations). Rules that evaluate twice per iteration (CADA1's
+    snapshot gradient, CADA2's stale-iterate gradient) are charged per
+    ``strategy.grad_evals_per_iter`` — the runtime asks for ``n_evals``
+    draws per iteration, so the second evaluation costs real simulated
+    time, exactly as §2.2 counts it.
+  * :class:`LinkModel` — per-worker latency + bandwidth. Transfer time is
+    ``latency + nbytes / bandwidth``; the byte counts come from each
+    strategy's ``bytes_per_upload`` accounting, so quantized (laq/cinn)
+    and sparse (topk ``--sparse-wire``) rules get *faster* uploads, not
+    just cheaper-in-rounds ones.
+
+Both models are deterministic given their seed: random draws are keyed on
+``(seed, worker, local_iter)``, never on call order, so barrier and async
+runtimes (which visit workers in different orders) see identical samples
+and every simulation replays exactly.
+
+Straggler injection lives here too: permanent per-worker slowdown factors
+and transient windows ``(worker, t_start, t_end, factor)`` multiply the
+compute draw for events that start inside the window.
+
+:func:`network_profile` packages the named scenario presets the launcher
+and benchmarks expose (``zero`` / ``lan`` / ``wan`` / ``hetero``).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+
+def _per_worker(value, m: int) -> np.ndarray:
+    """Broadcast a scalar or length-M sequence to an (M,) float array."""
+    arr = np.asarray(value, np.float64)
+    if arr.ndim == 0:
+        arr = np.full((m,), float(arr))
+    if arr.shape != (m,):
+        raise ValueError(f"expected scalar or shape ({m},), got {arr.shape}")
+    return arr
+
+
+@dataclass(frozen=True)
+class ComputeModel:
+    """Per-worker gradient-evaluation times (simulated seconds).
+
+    ``eval_s`` is the mean seconds per single gradient evaluation (scalar
+    or per-worker). ``kind``:
+
+      * ``deterministic`` — every eval takes exactly its worker's mean;
+      * ``lognormal`` — each eval draws ``eval_s · exp(N(−σ²/2, σ))``
+        (mean-preserving, heavy right tail — the classic straggler shape);
+      * ``trace`` — ``traces[m][j]`` is worker m's j-th eval duration,
+        cycled when the trace is shorter than the run.
+    """
+    m: int
+    eval_s: tuple
+    kind: str = "deterministic"
+    sigma: float = 0.0
+    traces: tuple = ()
+    slowdown: tuple = ()            # per-worker permanent factors (M,)
+    transient: tuple = ()           # (worker, t_start, t_end, factor) rows
+    seed: int = 0
+
+    @classmethod
+    def make(cls, m: int, eval_s=1e-3, kind: str = "deterministic",
+             sigma: float = 0.0, traces=None, slowdown=None,
+             transient=(), seed: int = 0) -> "ComputeModel":
+        if kind not in ("deterministic", "lognormal", "trace"):
+            raise ValueError(f"unknown compute kind {kind!r}")
+        if kind == "trace" and not traces:
+            raise ValueError("kind='trace' needs per-worker traces")
+        return cls(
+            m=m,
+            eval_s=tuple(_per_worker(eval_s, m)),
+            kind=kind,
+            sigma=float(sigma),
+            traces=tuple(tuple(float(t) for t in tr)
+                         for tr in (traces or ())),
+            slowdown=tuple(_per_worker(1.0 if slowdown is None else slowdown,
+                                       m)),
+            transient=tuple(tuple(row) for row in transient),
+            seed=seed,
+        )
+
+    def _factor(self, worker: int, now: float) -> float:
+        f = self.slowdown[worker]
+        for w, t0, t1, fac in self.transient:
+            if w == worker and t0 <= now < t1:
+                f *= fac
+        return f
+
+    def eval_time(self, worker: int, local_iter: int, eval_idx: int,
+                  now: float) -> float:
+        """Seconds for ONE gradient evaluation (the ``eval_idx``-th of
+        iteration ``local_iter``), starting at simulated time ``now``."""
+        if self.kind == "trace":
+            tr = self.traces[worker % len(self.traces)]
+            base = tr[(local_iter + eval_idx) % len(tr)]
+        else:
+            base = self.eval_s[worker]
+            if self.kind == "lognormal" and self.sigma > 0.0:
+                rng = np.random.default_rng(
+                    (self.seed, worker, local_iter, eval_idx))
+                base *= math.exp(rng.normal(-0.5 * self.sigma ** 2,
+                                            self.sigma))
+        return base * self._factor(worker, now)
+
+    def iter_time(self, worker: int, local_iter: int, now: float,
+                  n_evals: int) -> float:
+        """Seconds of compute for one local iteration = ``n_evals``
+        sequential gradient evaluations."""
+        t = 0.0
+        for e in range(n_evals):
+            t += self.eval_time(worker, local_iter, e, now + t)
+        return t
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    """Per-worker link: transfer time = latency + bytes / bandwidth.
+
+    ``bandwidth`` is bytes/second; ``math.inf`` (or 0 latency with inf
+    bandwidth — the ``zero`` profile) makes transfers free. Uplink and
+    downlink are symmetric unless ``down_bandwidth`` is given (WAN links
+    are usually asymmetric; the broadcast direction is the fat one).
+    """
+    m: int
+    latency_s: tuple
+    bandwidth: tuple
+    down_bandwidth: tuple
+
+    @classmethod
+    def make(cls, m: int, latency_s=0.0, bandwidth=math.inf,
+             down_bandwidth=None) -> "LinkModel":
+        return cls(
+            m=m,
+            latency_s=tuple(_per_worker(latency_s, m)),
+            bandwidth=tuple(_per_worker(bandwidth, m)),
+            down_bandwidth=tuple(_per_worker(
+                bandwidth if down_bandwidth is None else down_bandwidth, m)),
+        )
+
+    def _xfer(self, latency: float, bw: float, nbytes: float) -> float:
+        if nbytes <= 0:
+            return 0.0
+        return latency + (0.0 if math.isinf(bw) else nbytes / bw)
+
+    def up_time(self, worker: int, nbytes: float) -> float:
+        return self._xfer(self.latency_s[worker], self.bandwidth[worker],
+                          nbytes)
+
+    def down_time(self, worker: int, nbytes: float) -> float:
+        return self._xfer(self.latency_s[worker],
+                          self.down_bandwidth[worker], nbytes)
+
+
+@dataclass(frozen=True)
+class NetworkProfile:
+    """A named (compute, link) scenario the runtime simulates under."""
+    name: str
+    compute: ComputeModel
+    link: LinkModel
+
+
+PROFILES = ("zero", "lan", "wan", "hetero")
+
+
+def network_profile(name: str, m: int, *, eval_s: float = 1e-3,
+                    seed: int = 0) -> NetworkProfile:
+    """The scenario presets (`--network` on the launcher, swept by
+    ``benchmarks.ablations.sweep_network``):
+
+      * ``zero``   — zero latency, infinite bandwidth, homogeneous
+        deterministic compute: wall-clock is compute only. This is the
+        DEGENERATE config whose barrier-mode trajectories must reproduce
+        the plain engine bit-exactly (the sim parity gate).
+      * ``lan``    — 0.1 ms latency, 10 GB/s links, homogeneous compute:
+        communication is nearly free, so per-iteration convergence wins.
+      * ``wan``    — 20 ms latency, 1 Mbit/s up / 10 Mbit/s down (the
+        constrained federated-uplink regime), homogeneous compute:
+        uploads dominate and are BANDWIDTH-bound — skipping rounds and
+        shrinking wires is where the communication-adaptive rules earn
+        wall-clock.
+      * ``hetero`` — heterogeneous cluster: per-worker compute means
+        spread ×1..×3 with lognormal jitter (σ=0.3), the last worker a
+        permanent ×4 straggler, per-worker bandwidth spread around LAN
+        numbers. The straggler-tolerance scenario of Adaptive Worker
+        Grouping (PAPERS.md).
+
+    ``eval_s`` rescales the compute grain (a real LM step is not a logreg
+    step); all link numbers are absolute.
+    """
+    if name == "zero":
+        return NetworkProfile(
+            name=name,
+            compute=ComputeModel.make(m, eval_s=eval_s, seed=seed),
+            link=LinkModel.make(m, latency_s=0.0, bandwidth=math.inf),
+        )
+    if name == "lan":
+        return NetworkProfile(
+            name=name,
+            compute=ComputeModel.make(m, eval_s=eval_s, seed=seed),
+            link=LinkModel.make(m, latency_s=1e-4, bandwidth=1e10),
+        )
+    if name == "wan":
+        # federated-WAN numbers: 20 ms RTT-ish latency, 1 Mbit/s uplink
+        # (the constrained direction), 10 Mbit/s downlink — uploads are
+        # BANDWIDTH-dominated, so shrinking the wire (laq 8-bit, topk
+        # sparse) buys wall-clock directly, on top of skipped rounds
+        return NetworkProfile(
+            name=name,
+            compute=ComputeModel.make(m, eval_s=eval_s, seed=seed),
+            link=LinkModel.make(m, latency_s=2e-2, bandwidth=1.25e5,
+                                down_bandwidth=1.25e6),
+        )
+    if name == "hetero":
+        spread = np.linspace(1.0, 3.0, m)
+        slowdown = np.ones(m)
+        slowdown[-1] = 4.0
+        bw = np.linspace(2e9, 5e8, m)
+        return NetworkProfile(
+            name=name,
+            compute=ComputeModel.make(m, eval_s=spread * eval_s,
+                                      kind="lognormal", sigma=0.3,
+                                      slowdown=slowdown, seed=seed),
+            link=LinkModel.make(m, latency_s=1e-3, bandwidth=bw),
+        )
+    raise ValueError(f"unknown network profile {name!r}; "
+                     f"known: {PROFILES}")

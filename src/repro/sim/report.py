@@ -1,0 +1,82 @@
+"""Metrics over simulated runs: time-to-target-loss, bytes-on-wire,
+worker utilization.
+
+Everything here consumes a :class:`repro.sim.runtime.SimResult` and
+returns plain floats/dicts (JSON-ready — ``benchmarks.run --only sim``
+writes them to ``BENCH_sim.json`` verbatim).
+
+``time_to_target`` is the wall-clock twin of
+``benchmarks.common.uploads_to_target``: the first simulated second after
+which the smoothed loss stays at/below the target for the REST of the run
+(suffix-max over a sliding mean), so a transient dip cannot claim the
+target. Async runs interleave per-worker losses on one clock; the sliding
+window therefore spans at least one gate per worker before it trusts a
+level.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim.runtime import SimResult
+
+TARGET_SLACK = 1.02   # smoothed loss must stay within 2% of the target
+
+
+def smoothed_loss(result: SimResult, window: int = 0):
+    """(times, smoothed) sliding-mean loss series in time order."""
+    order = np.argsort(result.loss_times, kind="stable")
+    t = np.asarray(result.loss_times)[order]
+    x = np.asarray(result.losses)[order]
+    w = window or max(5, 2 * len(result.utilization))
+    w = min(w, len(x)) or 1
+    smooth = np.convolve(x, np.ones(w) / w, mode="valid")
+    return t[w - 1:], smooth
+
+
+def time_to_target(result: SimResult, target_loss: float,
+                   window: int = 0) -> float | None:
+    """First simulated second after which the smoothed loss stays ≤ the
+    target (within :data:`TARGET_SLACK`) for the rest of the run, or None
+    if the run never settles there."""
+    t, smooth = smoothed_loss(result, window)
+    if len(smooth) == 0:
+        return None
+    suffix_max = np.maximum.accumulate(smooth[::-1])[::-1]
+    ok = suffix_max <= target_loss * TARGET_SLACK
+    if not ok.any():
+        return None
+    return float(t[int(np.argmax(ok))])
+
+
+def final_loss(result: SimResult, tail: int = 20) -> float:
+    """Mean loss over the last ``tail`` observations (time-ordered)."""
+    order = np.argsort(result.loss_times, kind="stable")
+    x = np.asarray(result.losses)[order]
+    return float(x[-min(tail, len(x)):].mean())
+
+
+def summarize(result: SimResult, target_loss: float | None = None) -> dict:
+    """JSON-ready summary row of one simulated run."""
+    util = np.asarray(result.utilization)
+    row = {
+        "mode": result.mode,
+        "profile": result.profile,
+        "steps": int(result.steps),
+        "sim_wall_s": round(result.wall_s, 6),
+        "steps_per_sim_sec": (round(result.steps / result.wall_s, 3)
+                              if result.wall_s > 0 else None),
+        "final_loss": final_loss(result),
+        "uploads": int(result.uploads),
+        "grad_evals": int(result.grad_evals),
+        "mbytes_up": round(result.bytes_up / 1e6, 6),
+        "mbytes_down": round(result.bytes_down / 1e6, 6),
+        "utilization_mean": round(float(util.mean()), 4),
+        "utilization_min": round(float(util.min()), 4),
+        "max_staleness": int(result.max_staleness),
+    }
+    if target_loss is not None:
+        ttt = time_to_target(result, target_loss)
+        row["target_loss"] = target_loss
+        row["time_to_target_s"] = (round(ttt, 6) if ttt is not None
+                                   else None)
+    return row

@@ -1,0 +1,418 @@
+"""Event-driven heterogeneous-cluster runtimes: Algorithm 1 in wall-clock.
+
+Two runtimes lift the engine's lock-step rounds onto simulated time:
+
+  * **barrier** (synchronous): the numerics are EXACTLY the engine's own
+    scan — ``CADAEngine.run`` with an optional per-round participation
+    mask — and the discrete-event layer prices each round afterwards:
+    every participating worker downloads θ^k, computes its
+    ``grad_evals_per_iter`` gradient evaluations, uploads if its rule
+    fired, and the server closes the round when the LAST participant
+    finishes (stragglers stall everyone — the cost the async mode
+    removes). Under the ``zero`` profile with full participation the
+    trajectory is bit-for-bit the plain engine's (the parity gate pins
+    masks/staleness exact and params equal for every registered rule).
+
+  * **async** (bounded staleness): workers free-run — download θ, compute,
+    gate with the UNMODIFIED :mod:`repro.core.comm` strategy hooks against
+    their stale row of the (M, n_flat) plane, and upload when the rule
+    fires or their staleness reaches τ_max. The server applies the fused
+    flat-plane Adam update (``FusedAMSGrad.apply_flat``) the moment each
+    upload arrives — no barrier, so one straggler no longer prices every
+    round. Staleness is the max of the worker's local iterations since its
+    last upload (the sync counter) and the server versions since that
+    upload; τ_max defaults to the rule's ``max_delay``.
+
+The link models price bytes via each strategy's ``bytes_per_upload``, so
+compressed wires (laq 8-bit, topk sparse) are *faster*, not just cheaper
+in rounds; the downlink broadcast of θ is charged dense (``4n`` bytes by
+default) every download.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flat as F
+from repro.core.engine import CADAEngine
+from repro.core.rules import CommRule
+from repro.optim.fused import FusedAMSGrad
+from repro.sim.clock import NetworkProfile, network_profile
+from repro.sim.events import (COMPUTE_DONE, DOWNLOAD_DONE, UPLOAD_ARRIVE,
+                              EventQueue, ParticipationModel, WorkerProc)
+
+MODES = ("barrier", "async")
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    """What to simulate: the network scenario and the runtime mode."""
+    network: NetworkProfile
+    mode: str = "barrier"
+    async_tau: int = 0            # staleness cap τ_max (0 → rule.max_delay)
+    participation: float = 1.0    # barrier mode: fraction of workers/round
+    server_update_s: float = 0.0  # simulated cost of the fused Adam step
+    download_bytes: float | None = None   # None → dense fp32 θ (4·n bytes)
+    async_lr_scale: float | None = None   # None → 1/M: the Adam step fires
+    #                               per ARRIVAL, so M arrivals ≈ one sync
+    #                               round — unscaled, async runs at an
+    #                               effective M× learning rate (Adam steps
+    #                               are ~lr-sized whatever ∇'s magnitude)
+    #                               and visibly oscillates
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, "
+                             f"got {self.mode!r}")
+        if self.async_tau < 0:
+            raise ValueError("async_tau must be >= 0")
+        if self.mode == "async" and self.participation != 1.0:
+            raise ValueError(
+                "participation sampling is a barrier-mode knob (async "
+                "workers free-run; model slow/absent workers with the "
+                "ComputeModel's straggler injection instead)")
+
+
+@dataclass
+class SimResult:
+    """One simulated run. ``loss_times``/``losses`` are the wall-clock loss
+    series (barrier: per round; async: per worker gate); ``times`` are the
+    server-update completion times."""
+    mode: str
+    profile: str
+    steps: int                     # server updates completed
+    wall_s: float
+    times: np.ndarray              # (steps,) server-update times
+    loss_times: np.ndarray
+    losses: np.ndarray
+    uploads: int
+    grad_evals: int
+    bytes_up: float
+    bytes_down: float
+    utilization: np.ndarray        # (M,) compute-busy fraction of wall
+    max_staleness: int
+    final_params: Any
+    upload_masks: np.ndarray | None = None    # barrier: (steps, M)
+    staleness: np.ndarray | None = None       # barrier: (steps, M)
+    participation_masks: np.ndarray | None = None  # barrier: (steps, M)
+    metrics: dict = field(default_factory=dict)  # barrier: raw engine mets
+
+
+class SimRuntime:
+    """Simulate Algorithm 1 under a :class:`SimConfig`.
+
+    The engine's numerics are reused wholesale: barrier mode IS
+    ``CADAEngine.run`` (plus participation); async mode drives the same
+    strategy flat hooks one worker row at a time and the same fused Adam
+    kernel server-side.
+    """
+
+    def __init__(self, loss_fn, rule: CommRule, n_workers: int,
+                 config: SimConfig, *, lr: float = 0.01, optimizer=None,
+                 interpret=None):
+        self.cfg = config
+        self.m = n_workers
+        self.rule = rule
+        self.engine = CADAEngine(
+            loss_fn, FusedAMSGrad(lr=lr) if optimizer is None else optimizer,
+            rule, n_workers, interpret=interpret)
+        if config.mode == "async" and not self.engine._fused_opt:
+            raise ValueError("async mode applies the fused flat-plane Adam "
+                             "update server-side; pass a FusedAMSGrad")
+
+    # ------------------------------------------------------------- shared
+    def _byte_costs(self, n: int) -> tuple[float, float]:
+        up = self.engine.strategy.bytes_per_upload(n)
+        down = (4.0 * n if self.cfg.download_bytes is None
+                else float(self.cfg.download_bytes))
+        return up, down
+
+    def run(self, params, batches) -> SimResult:
+        """Simulate over pre-sampled batches with leading axis
+        (steps, M, ...). Barrier mode runs exactly ``steps`` rounds; async
+        mode runs until the server has applied ``steps`` updates (batches
+        are cycled per worker as needed)."""
+        if self.cfg.mode == "barrier":
+            return self._run_barrier(params, batches)
+        return self._run_async(params, batches)
+
+    # ------------------------------------------------------------ barrier
+    def _run_barrier(self, params, batches) -> SimResult:
+        eng, cfg = self.engine, self.cfg
+        compute, link = cfg.network.compute, cfg.network.link
+        steps = jax.tree.leaves(batches)[0].shape[0]
+        part = ParticipationModel(self.m, cfg.participation, cfg.seed)
+
+        st = eng.init(params)
+        if part.full:
+            # no participation arg at all: the compiled graph is byte-for-
+            # byte the plain engine's — the degenerate-parity anchor
+            pmasks = np.ones((steps, self.m), bool)
+            fst, mets = jax.jit(eng.run)(st, batches)
+        else:
+            pmasks = part.masks(steps)
+            fst, mets = jax.jit(eng.run)(st, batches, jnp.asarray(pmasks))
+
+        masks = np.asarray(mets["upload_mask"])          # (steps, M)
+        staleness = np.asarray(mets["staleness"])
+        losses = np.asarray(mets["loss"], np.float64)
+        n = eng._layout.n if eng.fused else sum(
+            x.size for x in jax.tree.leaves(params))
+        up_bytes, down_bytes = self._byte_costs(n)
+        evals = eng.strategy.grad_evals_per_iter
+
+        t = 0.0
+        t_end = np.zeros(steps)
+        busy = np.zeros(self.m)
+        bytes_up = bytes_down = 0.0
+        for k in range(steps):
+            finish = t
+            for w in range(self.m):
+                if not pmasks[k, w]:
+                    continue
+                dt_down = link.down_time(w, down_bytes)
+                dt_comp = compute.iter_time(w, k, t + dt_down, evals)
+                dt_up = link.up_time(w, up_bytes) if masks[k, w] else 0.0
+                busy[w] += dt_comp
+                bytes_down += down_bytes
+                if masks[k, w]:
+                    bytes_up += up_bytes
+                finish = max(finish, t + dt_down + dt_comp + dt_up)
+            t = finish + cfg.server_update_s
+            t_end[k] = t
+
+        wall = float(t)
+        return SimResult(
+            mode="barrier", profile=cfg.network.name, steps=steps,
+            wall_s=wall, times=t_end, loss_times=t_end, losses=losses,
+            uploads=int(masks.sum()),
+            grad_evals=int(np.asarray(mets["grad_evals"]).sum()),
+            bytes_up=bytes_up, bytes_down=bytes_down,
+            utilization=busy / wall if wall > 0 else np.zeros(self.m),
+            max_staleness=int(staleness.max()),
+            final_params=fst.params,
+            upload_masks=masks, staleness=staleness,
+            participation_masks=pmasks, metrics=mets)
+
+    # -------------------------------------------------------------- async
+    def _slice_extras(self, extras: dict, w: int) -> dict:
+        shared = self.engine.strategy.async_shared_extras
+        return {key: (val if key in shared
+                      else jax.tree.map(lambda x: x[w:w + 1], val))
+                for key, val in extras.items()}
+
+    def _merge_extras(self, extras: dict, row: dict, w: int) -> dict:
+        shared = self.engine.strategy.async_shared_extras
+        return {key: (val if key in shared
+                      else jax.tree.map(
+                          lambda full, r: full.at[w].set(r[0]), val,
+                          row[key]))
+                for key, val in extras.items()}
+
+    def _build_gate(self, tau: int):
+        """Jitted per-worker gate: fresh (+second) gradient evaluation, the
+        strategy's LHS vs the server RHS, wire formation and the worker-row
+        state transition — :func:`repro.core.flat.flat_comm_round`'s lines
+        7-14 on a single (1, n_flat) row."""
+        eng = self.engine
+        strategy, layout, rule = eng.strategy, eng._layout, self.rule
+
+        def gate(wparams, wflat, batch1, wg_row, stale1, diff_hist,
+                 extras_row):
+            losses, fresh_tree = eng._vgrad(wparams, batch1)
+            fresh = layout.pack_worker(fresh_tree)
+            shared_pt = strategy.second_eval_shared(extras_row)
+            perw_pts = strategy.second_eval_per_worker(extras_row)
+            if shared_pt is not None:
+                _, second_tree = eng._vgrad(shared_pt, batch1)
+                second = layout.pack_worker(second_tree)
+            elif perw_pts is not None:
+                _, second_tree = eng._vgrad_per(perw_pts, batch1)
+                second = layout.pack_worker(second_tree)
+            else:
+                second = None
+            comm_row = F.FlatCommState(
+                nabla=jnp.zeros_like(wg_row[0]), worker_grads=wg_row,
+                staleness=stale1, diff_hist=diff_hist, extras=extras_row)
+            ctx = F.FlatCommContext(
+                layout=layout, params=wparams, params_flat=wflat,
+                batch=batch1, fresh=fresh, second=second, comm=comm_row,
+                step=jnp.zeros([], jnp.int32), m=1,
+                interpret=eng._interpret, shard=None)
+            lhs, cache = strategy.flat_lhs(ctx, extras_row)
+            upload = (lhs > rule.rhs(diff_hist)) | (stale1 >= tau)
+            wg32 = wg_row.astype(jnp.float32)
+            delta = strategy.flat_wire_delta(ctx, extras_row, cache,
+                                             fresh - wg32)
+            wire = jnp.where(upload[:, None], delta, 0.0).astype(
+                wg_row.dtype)
+            new_wg = (wg32 + wire.astype(jnp.float32)).astype(wg_row.dtype)
+            new_extras = strategy.flat_post_upload(extras_row, cache,
+                                                   upload, ctx)
+            return losses[0], upload[0], wire[0], new_wg[0], new_extras
+
+        return jax.jit(gate)
+
+    def _build_apply(self):
+        """Jitted server transition on upload arrival: eq. (3)'s ∇ refine
+        with ONE worker's wire, the fused Adam step, the RHS ring push, and
+        the strategy's shared pre-step (CADA1's snapshot refresh cadence is
+        the server version counter)."""
+        eng, cfg = self.engine, self.cfg
+        strategy, layout = eng.strategy, eng._layout
+        m, d_max = self.m, self.rule.d_max
+        scale = (1.0 / m if cfg.async_lr_scale is None
+                 else cfg.async_lr_scale)
+        lr = eng.optimizer.lr
+        opt = eng.optimizer._replace(
+            lr=(lambda k, _lr=lr: _lr(k) * scale) if callable(lr)
+            else lr * scale)
+
+        def apply(theta, opt_state, nabla, wire, diff_hist, k_srv, extras):
+            nabla32 = nabla.astype(jnp.float32) + wire.astype(
+                jnp.float32) / m
+            new_nabla = nabla32.astype(nabla.dtype)
+            theta, opt_state, dsq = opt.apply_flat(
+                theta, opt_state, nabla32, interpret=eng._interpret)
+            theta = layout.cast_roundtrip(theta)
+            diff_hist = jax.lax.dynamic_update_index_in_dim(
+                diff_hist, dsq.astype(jnp.float32), k_srv % d_max, axis=0)
+            params = layout.unpack(theta)
+            extras = strategy.flat_pre_step(extras, params, theta,
+                                            k_srv + 1)
+            return theta, params, opt_state, new_nabla, diff_hist, extras
+
+        return jax.jit(apply)
+
+    def _run_async(self, params, batches) -> SimResult:
+        eng, cfg = self.engine, self.cfg
+        compute, link = cfg.network.compute, cfg.network.link
+        n_batches = jax.tree.leaves(batches)[0].shape[0]
+        steps = n_batches                      # target server versions
+        tau = cfg.async_tau or self.rule.max_delay
+        evals = eng.strategy.grad_evals_per_iter
+
+        st = eng.init(params)
+        layout = eng._layout
+        up_bytes, down_bytes = self._byte_costs(layout.n)
+        gate = self._build_gate(tau)
+        apply = self._build_apply()
+
+        # server numeric state
+        theta, opt_state = st.params_flat, st.opt_state
+        srv_params = st.params
+        nabla, diff_hist = st.comm.nabla, st.comm.diff_hist
+        worker_grads, extras = st.comm.worker_grads, st.comm.extras
+        k_srv = 0
+
+        # per-worker copies of θ (everyone starts at the init point, free)
+        wparams = [srv_params] * self.m
+        wflat = [theta] * self.m
+        procs = [WorkerProc(w, since_upload=tau, upload_version=-tau)
+                 for w in range(self.m)]
+
+        q = EventQueue()
+        for w in range(self.m):
+            dt = compute.iter_time(w, 0, 0.0, evals)
+            procs[w].busy_s += dt
+            q.push(dt, COMPUTE_DONE, w)
+
+        loss_t, loss_v, srv_times = [], [], []
+        t = 0.0
+        max_events = steps * self.m * 64 + 1024    # runaway guard
+        n_events = 0
+        while q and k_srv < steps:
+            n_events += 1
+            if n_events > max_events:
+                raise RuntimeError(
+                    f"async sim exceeded {max_events} events at version "
+                    f"{k_srv}/{steps} — check the rule's staleness cap")
+            ev = q.pop()
+            t, w = ev.time, ev.worker
+            p = procs[w]
+
+            if ev.kind == COMPUTE_DONE:
+                batch1 = jax.tree.map(
+                    lambda x: x[p.local_iter % n_batches, w:w + 1], batches)
+                stale = p.staleness(k_srv)
+                p.max_staleness = max(p.max_staleness, stale)
+                loss, upload, wire, wg_row, extras_row = gate(
+                    wparams[w], wflat[w], batch1,
+                    worker_grads[w:w + 1],
+                    jnp.full((1,), stale, jnp.int32), diff_hist,
+                    self._slice_extras(extras, w))
+                worker_grads = worker_grads.at[w].set(wg_row)
+                extras = self._merge_extras(extras, extras_row, w)
+                loss_t.append(t)
+                loss_v.append(float(loss))
+                p.local_iter += 1
+                if bool(upload):
+                    # restart at 1, matching the sync engine's post-upload
+                    # staleness (flat_comm_round: where(upload, 1, τ+1)),
+                    # so τ_max = max_delay reproduces the rule's cap
+                    # exactly — e.g. τ_max=1 forces an upload every
+                    # local iteration, as max_delay=1 does per round
+                    p.since_upload = 1
+                    p.uploads += 1
+                    p.bytes_up += up_bytes
+                    q.push(t + link.up_time(w, up_bytes), UPLOAD_ARRIVE, w,
+                           wire=wire)
+                else:
+                    p.since_upload += 1
+                    p.bytes_down += down_bytes
+                    q.push(t + link.down_time(w, down_bytes),
+                           DOWNLOAD_DONE, w)
+
+            elif ev.kind == UPLOAD_ARRIVE:
+                theta, srv_params, opt_state, nabla, diff_hist, extras = \
+                    apply(theta, opt_state, nabla, ev.payload["wire"],
+                          diff_hist, jnp.asarray(k_srv, jnp.int32), extras)
+                k_srv += 1
+                srv_times.append(t + cfg.server_update_s)
+                p.upload_version = k_srv
+                p.bytes_down += down_bytes
+                q.push(t + cfg.server_update_s
+                       + link.down_time(w, down_bytes), DOWNLOAD_DONE, w)
+
+            elif ev.kind == DOWNLOAD_DONE:
+                wparams[w], wflat[w] = srv_params, theta
+                dt = compute.iter_time(w, p.local_iter, t, evals)
+                p.busy_s += dt
+                q.push(t + dt, COMPUTE_DONE, w)
+
+        wall = float(srv_times[-1] if srv_times else t)
+        return SimResult(
+            mode="async", profile=cfg.network.name, steps=k_srv,
+            wall_s=wall, times=np.asarray(srv_times),
+            loss_times=np.asarray(loss_t),
+            losses=np.asarray(loss_v, np.float64),
+            uploads=sum(p.uploads for p in procs),
+            grad_evals=sum(p.local_iter for p in procs) * evals,
+            bytes_up=sum(p.bytes_up for p in procs),
+            bytes_down=sum(p.bytes_down for p in procs),
+            utilization=(np.asarray([p.busy_s for p in procs]) / wall
+                         if wall > 0 else np.zeros(self.m)),
+            max_staleness=max(p.max_staleness for p in procs),
+            final_params=srv_params)
+
+
+def simulate(loss_fn, rule: CommRule, params, batches, *,
+             n_workers: int, network: str | NetworkProfile = "zero",
+             mode: str = "barrier", async_tau: int = 0,
+             participation: float = 1.0, lr: float = 0.01,
+             eval_s: float = 1e-3, seed: int = 0,
+             optimizer=None, interpret=None) -> SimResult:
+    """One-call front door: build the profile + config + runtime and run."""
+    if isinstance(network, str):
+        network = network_profile(network, n_workers, eval_s=eval_s,
+                                  seed=seed)
+    cfg = SimConfig(network=network, mode=mode, async_tau=async_tau,
+                    participation=participation, seed=seed)
+    rt = SimRuntime(loss_fn, rule, n_workers, cfg, lr=lr,
+                    optimizer=optimizer, interpret=interpret)
+    return rt.run(params, batches)

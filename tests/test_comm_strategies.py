@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core.comm import (CommContext, CommState, broadcast_to_workers,
                              comm_round, init_comm_state, per_worker_sq_norm,
@@ -518,3 +519,90 @@ def test_broadcast_and_sq_norm():
     t = broadcast_to_workers({"w": jnp.array([3.0, 4.0])}, 2)
     assert t["w"].shape == (2, 2)
     np.testing.assert_allclose(np.asarray(per_worker_sq_norm(t)), [25, 25])
+
+
+# ------------------------------------------------- wire payload accounting
+
+def _quantized_codes_fit(wire, delta, layout, bits):
+    """Every quantized wire entry must be a b-bit code times its
+    (worker, segment) scale: code = wire·levels/scale is an integer with
+    |code| ≤ 2^(b-1)−1. (The per-segment scales themselves are the
+    accounting's O(#leaves) overhead, deliberately excluded — the
+    contract ``bytes_per_upload`` charges is n·b bits of codes.)"""
+    levels = float(2 ** (bits - 1) - 1)
+    w = np.asarray(wire, np.float64)
+    d = np.asarray(delta, np.float64)
+    for o, s in zip(layout.offsets, layout.sizes):
+        seg_w, seg_d = w[:, o:o + s], d[:, o:o + s]
+        scale = np.maximum(np.abs(seg_d).max(axis=1, keepdims=True), 1e-12)
+        codes = seg_w * levels / scale
+        assert np.abs(codes).max() <= levels + 1e-3
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(sizes=st.lists(st.integers(2, 40), min_size=1, max_size=4),
+       bits=st.sampled_from([0, 4, 8]),
+       frac=st.floats(0.05, 0.9))
+def test_bytes_per_upload_equals_actual_wire_payload(sizes, bits, frac):
+    """Satellite property gate: for EVERY registered rule, the
+    ``bytes_per_upload`` the sim's link model trusts equals the payload
+    the strategy's wire actually carries — dense fp32 entries, b-bit
+    quantized codes, or sparse (value, index) pairs."""
+    from repro.core.flat import (layout_of, per_worker_topk_extract_flat,
+                                 sparse_rows_to_dense)
+    from repro.core.quantize import topk_count
+
+    m = 3
+    tree = {f"l{i}": jnp.zeros((s,), jnp.float32)
+            for i, s in enumerate(sizes)}
+    layout = layout_of(tree)
+    n = layout.n
+    rng = np.random.default_rng(42)
+    delta = jnp.asarray(rng.normal(size=(m, layout.n_flat)), jnp.float32)
+    if layout.n_flat > n:
+        delta = delta.at[:, n:].set(0.0)
+
+    for kind in strategy_kinds():
+        if kind == "topk":
+            rule = CommRule(kind=kind, topk_frac=frac)
+        elif kind in ("cinn", "laq"):
+            rule = CommRule(kind=kind, quantize_bits=bits or 0)
+        else:
+            rule = CommRule(kind=kind, quantize_bits=bits)
+        strat = strategy_for(rule)
+        accounted = strat.bytes_per_upload(n)
+
+        if kind == "topk":
+            wire = strat._compress_flat(layout, delta)
+            vals, idx = per_worker_topk_extract_flat(layout, wire, frac)
+            k_leaf = sum(topk_count(s, frac) for s in layout.sizes)
+            k_acc = topk_count(n, frac)
+            # the payload is K (value, index) pairs; the global-k
+            # accounting may undercharge by at most one per leaf
+            assert vals.shape == idx.shape == (m, k_leaf)
+            assert k_acc <= k_leaf <= k_acc + len(layout.sizes)
+            index_bits = max(1, int(np.ceil(np.log2(n))))
+            assert accounted == k_acc * (32 + index_bits) / 8.0
+            # ... and the pairs really carry the whole support
+            np.testing.assert_array_equal(
+                np.asarray(sparse_rows_to_dense(idx, vals, layout.n_flat)),
+                np.asarray(wire))
+            assert int((np.asarray(wire)[:, :n] != 0).sum(axis=1).max()) \
+                <= k_leaf
+        elif kind in ("cinn", "laq") or bits:
+            b = bits or 8      # cinn/laq default to 8-bit wires
+            # laq's wire is its error-feedback compressor (which applies
+            # the 8-bit default even when quantize_bits is unset);
+            # everyone else's is transform_delta_flat
+            wire = (strat._compress_flat(layout, delta) if kind == "laq"
+                    else strat.transform_delta_flat(layout, delta))
+            _quantized_codes_fit(np.asarray(wire)[:, :n],
+                                 np.asarray(delta)[:, :n], layout, b)
+            assert accounted == n * b / 8.0
+        else:
+            # dense fp32: the wire IS the innovation, n entries at 32 bits
+            wire = strat.transform_delta_flat(layout, delta)
+            np.testing.assert_array_equal(np.asarray(wire),
+                                          np.asarray(delta))
+            assert accounted == n * 4.0

@@ -38,6 +38,24 @@ def test_random_sizes_partition_covers(m, seed):
     assert max(sizes) > min(sizes)  # heterogeneous sizes (covtype setup)
 
 
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(2, 24), m=st.integers(2, 24), seed=st.integers(0, 200))
+def test_random_sizes_partition_small_n_large_m(n, m, seed):
+    """Satellite regression: with m close to n, the old
+    ``sizes[-1] = n - sizes[:-1].sum()`` underflowed to <= 0 (every
+    earlier shard is clamped to >= 1), handing the last worker an empty
+    or negative shard. Every shard must stay non-empty and the shards
+    must partition range(n); m > n must raise instead of degenerating."""
+    if m > n:
+        with pytest.raises(ValueError):
+            random_sizes_partition(n, m, seed)
+        return
+    shards = random_sizes_partition(n, m, seed)
+    assert len(shards) == m
+    assert all(len(s) >= 1 for s in shards)
+    assert sorted(np.concatenate(shards).tolist()) == list(range(n))
+
+
 def test_dirichlet_partition_skews_labels():
     labels = np.repeat(np.arange(4), 250)
     shards = dirichlet_partition(labels, m=4, alpha=0.1, seed=0)

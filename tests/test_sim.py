@@ -1,0 +1,371 @@
+"""The discrete-event heterogeneous-cluster runtime (repro.sim).
+
+The two gates the subsystem stands on:
+
+  * **degenerate parity** — under the ``zero`` profile (zero latency,
+    homogeneous compute, barrier mode, full participation) the sim MUST
+    reproduce the plain synchronous engine: per-iteration upload masks and
+    staleness bit-exact, params numerically identical, for every
+    registered rule;
+  * **the wall-clock claim** — where uploads are expensive, a compressed
+    rule beats ``always`` on simulated time-to-target-loss; where they
+    are free, it does not.
+
+Plus the async bounded-staleness mode (convergence, staleness cap,
+determinism, straggler tolerance), partial participation, and the clock /
+event machinery.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import CADAEngine, make_sampler
+from repro.core.rules import RULES, CommRule
+from repro.data.partition import pad_to_matrix, uniform_partition
+from repro.data.synthetic import ijcnn1_like
+from repro.models.small import logreg_init, logreg_loss
+from repro.optim.fused import FusedAMSGrad
+from repro.sim import (ComputeModel, EventQueue, LinkModel, NetworkProfile,
+                       ParticipationModel, SimConfig, SimRuntime,
+                       network_profile, simulate, summarize, time_to_target)
+
+M = 3
+STEPS = 8
+
+
+def _problem(m=M, iters=STEPS, n=600, batch=16):
+    ds = ijcnn1_like(n=n)
+    mtx = pad_to_matrix(uniform_partition(ds.n, m, seed=0))
+    sample = make_sampler(ds.x, ds.y, mtx, batch)
+    params = logreg_init(None, 22, 2)
+    batches = jax.vmap(sample)(
+        jax.random.split(jax.random.PRNGKey(1), iters))
+    return params, batches
+
+
+# ----------------------------------------------------- degenerate parity
+
+@pytest.mark.parametrize("kind", RULES)
+def test_degenerate_sim_matches_engine(kind):
+    """Acceptance gate: zero-latency homogeneous barrier sim ≡ the plain
+    synchronous engine, for every registered rule — masks and staleness
+    bit-exact, params numerically equal. (c chosen so the adaptive rules
+    produce MIXED masks over the run.)"""
+    params, batches = _problem()
+    rule = CommRule(kind=kind, c=20.0, d_max=4, max_delay=10)
+
+    res = simulate(logreg_loss, rule, params, batches, n_workers=M,
+                   network="zero", mode="barrier", lr=0.01)
+
+    eng = CADAEngine(logreg_loss, FusedAMSGrad(lr=0.01), rule, M)
+    st = eng.init(params)
+    fst, mets = jax.jit(eng.run)(st, batches)
+
+    np.testing.assert_array_equal(
+        res.upload_masks, np.asarray(mets["upload_mask"]),
+        err_msg=f"{kind}: sim upload masks diverged from the engine")
+    np.testing.assert_array_equal(
+        res.staleness, np.asarray(mets["staleness"]),
+        err_msg=f"{kind}: sim staleness diverged from the engine")
+    np.testing.assert_array_equal(
+        res.losses, np.asarray(mets["loss"], np.float64))
+    for a, b in zip(jax.tree.leaves(res.final_params),
+                    jax.tree.leaves(fst.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_degenerate_parity_run_has_mixed_masks():
+    """Meta-check: the parity run above exercises BOTH branches."""
+    params, batches = _problem()
+    rule = CommRule(kind="cada2", c=20.0, d_max=4, max_delay=10)
+    res = simulate(logreg_loss, rule, params, batches, n_workers=M,
+                   network="zero", mode="barrier", lr=0.01)
+    total = int(res.upload_masks.sum())
+    assert 0 < total < STEPS * M, total
+
+
+# ------------------------------------------------------ wall-clock claims
+
+def _thin_uplink_profile(m):
+    """Uploads bandwidth-dominated even for logreg's 184-byte plane."""
+    return NetworkProfile(
+        name="thin",
+        compute=ComputeModel.make(m, eval_s=1e-3),
+        link=LinkModel.make(m, latency_s=1e-3, bandwidth=2e3,
+                            down_bandwidth=2e5),
+    )
+
+
+def test_compressed_rule_wins_wall_clock_where_uploads_cost():
+    """laq (8-bit wire + lazy skipping) must beat always on simulated
+    time-to-target when the uplink is the bottleneck — and must NOT beat
+    it when communication is free (zero profile)."""
+    m, iters, target = 4, 150, 0.1
+    params, batches = _problem(m=m, iters=iters, n=1200, batch=32)
+    rules = {
+        "always": CommRule(kind="always", c=0.6, d_max=10, max_delay=100),
+        "laq": CommRule(kind="laq", c=0.6, d_max=10, max_delay=100),
+    }
+    t_thin, t_zero = {}, {}
+    for name, rule in rules.items():
+        res = simulate(logreg_loss, rule, params, batches, n_workers=m,
+                       network=_thin_uplink_profile(m), mode="barrier",
+                       lr=0.01)
+        t_thin[name] = time_to_target(res, target)
+        res0 = simulate(logreg_loss, rule, params, batches, n_workers=m,
+                        network="zero", mode="barrier", lr=0.01)
+        t_zero[name] = time_to_target(res0, target)
+    assert t_thin["laq"] is not None and t_thin["always"] is not None
+    assert t_thin["laq"] < t_thin["always"], t_thin
+    # free links: the per-iteration-best rule is the wall-clock-best rule
+    assert t_zero["always"] <= t_zero["laq"], t_zero
+
+
+def test_wan_profile_prices_rounds_above_zero_profile():
+    params, batches = _problem()
+    rule = CommRule(kind="cada2", c=0.6, d_max=10, max_delay=10)
+    res0 = simulate(logreg_loss, rule, params, batches, n_workers=M,
+                    network="zero", mode="barrier", lr=0.01)
+    resw = simulate(logreg_loss, rule, params, batches, n_workers=M,
+                    network="wan", mode="barrier", lr=0.01)
+    # identical trajectory (profiles only price the schedule) ...
+    np.testing.assert_array_equal(res0.upload_masks, resw.upload_masks)
+    # ... at a very different price
+    assert resw.wall_s > 10 * res0.wall_s
+    assert resw.bytes_up == res0.bytes_up
+
+
+def test_straggler_stalls_barrier_rounds():
+    """Barrier mode: one 10× straggler prices every round ~10×."""
+    params, batches = _problem()
+    rule = CommRule(kind="always", c=0.6, d_max=10, max_delay=10)
+    base = NetworkProfile(
+        name="base", compute=ComputeModel.make(M, eval_s=1e-3),
+        link=LinkModel.make(M))
+    slow = NetworkProfile(
+        name="slow",
+        compute=ComputeModel.make(M, eval_s=1e-3,
+                                  slowdown=[1.0] * (M - 1) + [10.0]),
+        link=LinkModel.make(M))
+    r_base = simulate(logreg_loss, rule, params, batches, n_workers=M,
+                      network=base, mode="barrier", lr=0.01)
+    r_slow = simulate(logreg_loss, rule, params, batches, n_workers=M,
+                      network=slow, mode="barrier", lr=0.01)
+    assert r_slow.wall_s == pytest.approx(10 * r_base.wall_s, rel=1e-6)
+    # fast workers idle while the straggler finishes
+    assert r_slow.utilization[0] == pytest.approx(0.1, rel=1e-6)
+
+
+# ------------------------------------------------- partial participation
+
+def test_partial_participation_masks_uploads():
+    params, batches = _problem(iters=20)
+    rule = CommRule(kind="always", c=0.6, d_max=10, max_delay=100)
+    res = simulate(logreg_loss, rule, params, batches, n_workers=M,
+                   network="zero", mode="barrier", participation=0.5,
+                   lr=0.01)
+    # uploads only ever come from participants ...
+    assert not (res.upload_masks & ~res.participation_masks).any()
+    # ... every round draws exactly ceil(0.5 * M) of them ...
+    np.testing.assert_array_equal(
+        res.participation_masks.sum(axis=1),
+        np.full(20, int(np.ceil(0.5 * M))))
+    # ... and offline workers outwait the sync staleness cap unharmed
+    assert res.uploads < 20 * M
+
+
+def test_participation_freezes_offline_avp_periods():
+    """An offline worker's avp period must not adapt to a gradient it
+    never computed (rule state frozen while offline). Huge c makes the
+    RHS unclearable, so every ACTIVE worker's period grows each round —
+    any growth on the offline worker would be adaptation to a gradient
+    the sim charged zero compute for."""
+    params, batches = _problem(iters=6)
+    rule = CommRule(kind="avp", c=1e9, d_max=4, max_delay=50,
+                    period_min=1, period_max=8)
+    eng = CADAEngine(logreg_loss, FusedAMSGrad(lr=0.01), rule, M)
+    st = eng.init(params)
+    offline = 1
+    part = jnp.asarray([w != offline for w in range(M)])
+    step = jax.jit(eng.step)
+    for i in range(6):
+        st, _ = step(st, jax.tree.map(lambda x: x[i], batches), part)
+    periods = np.asarray(st.comm.extras["period"])
+    assert periods[offline] == rule.period_min          # frozen at init
+    assert (np.delete(periods, offline) > rule.period_min).all()
+
+
+def test_async_rejects_partial_participation():
+    with pytest.raises(ValueError, match="barrier"):
+        SimConfig(network=network_profile("zero", 2), mode="async",
+                  participation=0.5)
+
+
+def test_async_tau_one_forces_upload_every_iteration():
+    """τ_max=1 must reproduce max_delay=1: the post-upload counter
+    restarts at 1, so every gate is capped."""
+    params, batches = _problem(iters=10)
+    rule = CommRule(kind="cada2", c=1e9, d_max=4, max_delay=50)
+    res = simulate(logreg_loss, rule, params, batches, n_workers=M,
+                   network="zero", mode="async", async_tau=1, lr=0.01)
+    # huge c → the rule itself never fires; every upload is the cap's.
+    # gates = local iterations; in-flight uploads at shutdown may leave
+    # at most one gap per worker
+    gates = len(res.losses)
+    assert res.uploads >= gates - M
+    assert res.uploads == pytest.approx(gates, abs=M)
+
+
+def test_participation_model_is_deterministic():
+    pm = ParticipationModel(8, 0.4, seed=3)
+    m1, m2 = pm.mask(5), pm.mask(5)
+    np.testing.assert_array_equal(m1, m2)
+    assert pm.mask(6).sum() == pm.k_active == 4  # ceil(0.4 * 8)
+    assert any((pm.mask(k) != m1).any() for k in range(6, 16))
+
+
+# ----------------------------------------------------------- async mode
+
+def test_async_converges_and_respects_staleness_cap():
+    m, tau = 4, 6
+    params, batches = _problem(m=m, iters=80, n=1200, batch=32)
+    rule = CommRule(kind="cada2", c=0.6, d_max=10, max_delay=100)
+    res = simulate(logreg_loss, rule, params, batches, n_workers=m,
+                   network="zero", mode="async", async_tau=tau, lr=0.01)
+    assert res.steps == 80                      # hit the version target
+    assert res.uploads >= res.steps             # one upload per version
+    # staleness observed AT the gate: the cap plus at most one iteration's
+    # worth of other-worker server updates
+    assert res.max_staleness <= tau + 2 * m
+    # converged: the loss came down from log(2)
+    order = np.argsort(res.loss_times)
+    tail = res.losses[order][-12:]
+    assert tail.mean() < 0.3, tail
+    # wall-clock bookkeeping is self-consistent
+    assert res.wall_s > 0 and (res.utilization <= 1.0 + 1e-9).all()
+
+
+def test_async_replays_exactly():
+    params, batches = _problem(m=3, iters=30)
+    rule = CommRule(kind="laq", c=0.6, d_max=10, max_delay=20)
+    runs = [simulate(logreg_loss, rule, params, batches, n_workers=3,
+                     network="hetero", mode="async", async_tau=8, lr=0.01)
+            for _ in range(2)]
+    np.testing.assert_array_equal(runs[0].losses, runs[1].losses)
+    np.testing.assert_array_equal(runs[0].loss_times, runs[1].loss_times)
+    assert runs[0].wall_s == runs[1].wall_s
+    assert runs[0].uploads == runs[1].uploads
+
+
+def test_async_keeps_workers_busy_under_stragglers():
+    """The point of the async mode: a straggler collapses barrier-mode
+    utilization but not async utilization."""
+    m = 4
+    params, batches = _problem(m=m, iters=40, n=1200, batch=32)
+    rule = CommRule(kind="cada2", c=0.6, d_max=10, max_delay=50)
+    prof = NetworkProfile(
+        name="strag",
+        compute=ComputeModel.make(m, eval_s=1e-3,
+                                  slowdown=[1.0] * (m - 1) + [8.0]),
+        link=LinkModel.make(m))
+    r_bar = simulate(logreg_loss, rule, params, batches, n_workers=m,
+                     network=prof, mode="barrier", lr=0.01)
+    r_asy = simulate(logreg_loss, rule, params, batches, n_workers=m,
+                     network=prof, mode="async", async_tau=10, lr=0.01)
+    assert float(r_asy.utilization[:-1].mean()) \
+        > 2 * float(r_bar.utilization[:-1].mean())
+
+
+@pytest.mark.parametrize("kind", RULES)
+def test_async_runs_every_registered_rule(kind):
+    """Every strategy's flat hooks survive the one-row async slicing
+    (shared extras pass through whole, per-worker extras slice/merge)."""
+    params, batches = _problem(iters=12)
+    rule = CommRule(kind=kind, c=0.6, d_max=4, max_delay=6)
+    res = simulate(logreg_loss, rule, params, batches, n_workers=M,
+                   network="zero", mode="async", async_tau=5, lr=0.01)
+    assert res.steps == 12
+    assert np.isfinite(res.losses).all()
+    assert res.uploads >= res.steps
+
+
+# --------------------------------------------------- clock / event units
+
+def test_event_queue_orders_by_time_then_fifo():
+    q = EventQueue()
+    q.push(2.0, "b")
+    q.push(1.0, "a1")
+    q.push(1.0, "a2")
+    q.push(0.5, "first", worker=7, tag="x")
+    kinds = [q.pop() for _ in range(4)]
+    assert [e.kind for e in kinds] == ["first", "a1", "a2", "b"]
+    assert kinds[0].worker == 7 and kinds[0].payload == {"tag": "x"}
+    assert not q
+
+
+def test_link_model_prices_latency_plus_bytes():
+    link = LinkModel.make(2, latency_s=0.01, bandwidth=1e3,
+                          down_bandwidth=1e4)
+    assert link.up_time(0, 500) == pytest.approx(0.01 + 0.5)
+    assert link.down_time(0, 500) == pytest.approx(0.01 + 0.05)
+    assert link.up_time(1, 0) == 0.0            # nothing to send
+    free = LinkModel.make(1)                    # inf bandwidth, 0 latency
+    assert free.up_time(0, 1e9) == 0.0
+
+
+def test_compute_model_kinds():
+    det = ComputeModel.make(2, eval_s=[1e-3, 2e-3])
+    assert det.iter_time(0, 0, 0.0, 2) == pytest.approx(2e-3)
+    assert det.iter_time(1, 5, 0.0, 1) == pytest.approx(2e-3)
+
+    logn = ComputeModel.make(3, eval_s=1e-3, kind="lognormal", sigma=0.5,
+                             seed=1)
+    a = logn.eval_time(1, 4, 0, 0.0)
+    assert a == logn.eval_time(1, 4, 0, 0.0)    # keyed draws replay
+    assert a != logn.eval_time(1, 5, 0, 0.0)    # ... but vary by iter
+    draws = [logn.eval_time(0, i, 0, 0.0) for i in range(400)]
+    assert np.mean(draws) == pytest.approx(1e-3, rel=0.2)  # mean-preserving
+
+    tr = ComputeModel.make(1, kind="trace", traces=[[1.0, 2.0]])
+    seen = {tr.eval_time(0, i, 0, 0.0) for i in range(4)}
+    assert seen == {1.0, 2.0}                   # cycles the trace
+
+    windowed = ComputeModel.make(1, eval_s=1e-3,
+                                 transient=[(0, 1.0, 2.0, 5.0)])
+    assert windowed.eval_time(0, 0, 0, 0.5) == pytest.approx(1e-3)
+    assert windowed.eval_time(0, 0, 0, 1.5) == pytest.approx(5e-3)
+    assert windowed.eval_time(0, 0, 0, 2.5) == pytest.approx(1e-3)
+
+
+def test_network_profiles_construct_and_validate():
+    for name in ("zero", "lan", "wan", "hetero"):
+        p = network_profile(name, 4)
+        assert p.link.m == p.compute.m == 4
+    with pytest.raises(ValueError):
+        network_profile("dialup", 4)
+    with pytest.raises(ValueError):
+        SimConfig(network=network_profile("zero", 2), mode="warp")
+
+
+def test_summarize_reports_time_to_target():
+    params, batches = _problem(iters=30, m=2)
+    rule = CommRule(kind="always", c=0.6, d_max=10, max_delay=100)
+    res = simulate(logreg_loss, rule, params, batches, n_workers=2,
+                   network="lan", mode="barrier", lr=0.01)
+    row = summarize(res, target_loss=0.5)
+    assert row["time_to_target_s"] is not None
+    assert 0 < row["time_to_target_s"] <= round(res.wall_s, 6)
+    assert row["mbytes_up"] > 0 and row["utilization_mean"] <= 1.0
+    # unreachable target → None, not a crash
+    assert summarize(res, target_loss=1e-9)["time_to_target_s"] is None
+
+
+def test_async_requires_fused_optimizer():
+    from repro.optim.adam import adam
+    cfg = SimConfig(network=network_profile("zero", 2), mode="async")
+    with pytest.raises(ValueError, match="fused"):
+        SimRuntime(logreg_loss, CommRule(kind="always"), 2, cfg,
+                   optimizer=adam(lr=0.01))
