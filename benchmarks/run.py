@@ -40,14 +40,67 @@ def _warn_if_regressed(name: str, new_sps: float, old: dict | None) -> None:
               f"baseline in {BENCH_PATH})", file=sys.stderr)
 
 
+def _comm_state_bytes(comm) -> tuple[int, int]:
+    """(total comm-state bytes, eval-point-extras bytes) of an engine's
+    flat comm state — the ring-vs-dense memory story per arm."""
+    import jax
+    if comm is None:
+        return 0, 0
+    total = sum(int(l.size * l.dtype.itemsize)
+                for l in jax.tree.leaves(comm))
+    extras = sum(int(l.size * l.dtype.itemsize)
+                 for l in jax.tree.leaves(comm.extras))
+    return total, extras
+
+
+def _second_eval_frac(eng, st, batches, step_s: float) -> float:
+    """Fraction of a measured engine step spent in the rule's SECOND
+    gradient evaluation: (jitted two-point eval − jitted fresh-only eval)
+    per call, over the arm's measured seconds per step. 0.0 for
+    single-eval rules."""
+    import jax
+
+    from repro.core import flat as F
+
+    if eng.strategy.grad_evals_per_iter < 2 or step_s <= 0:
+        return 0.0
+    b0 = jax.tree.map(lambda x: x[0], batches)
+    layout, extras = eng._layout, st.comm.extras
+    f2 = jax.jit(lambda p, b: F.eval_two_point(
+        eng.strategy, layout, extras, p, b, eng.m, vgrad=eng._vgrad,
+        vgrad_per=eng._vgrad_per, fuse_evals=eng._fuse_evals,
+        group_evals=eng._group_evals))
+    f1 = jax.jit(lambda p, b: eng._vgrad(p, b))
+    ts = {}
+    for name, f in (("two", f2), ("one", f1)):
+        jax.block_until_ready(f(st.params, b0))
+        best = float("inf")
+        for _ in range(5):
+            t0 = time.time()
+            for _ in range(50):
+                out = f(st.params, b0)
+            jax.block_until_ready(out)
+            best = min(best, (time.time() - t0) / 50)
+        ts[name] = best
+    return round(min(1.0, max(0.0, ts["two"] - ts["one"]) / step_s), 4)
+
+
 def bench_cada(iters: int = 300, lm_steps: int = 30) -> dict:
     """Headline perf numbers, tracked across PRs in ``BENCH_cada.json``:
 
       * engine throughput + communication saved, logreg-CADA2 vs always
         (distributed Adam), matched hyper-parameters, on the fused
-        flat-plane hot path with donated state buffers;
+        flat-plane hot path with donated state buffers. The cada2 arm
+        runs the DEFAULT eval dispatch (stale-iterate ring + stacked
+        ``fuse_evals`` two-point eval); ``cada2_unfused`` pins the
+        two-call dispatch so the stacked win stays measured;
       * ``gating_overhead_frac`` = 1 − cada2/always steps/sec — what the
         adaptive rule COSTS per iteration (its savings are the uploads);
+      * per arm: ``second_eval_frac`` (measured share of a step spent in
+        the second gradient evaluation) and worker-state bytes (total
+        comm state + the eval-point extras — the ring-vs-dense story);
+      * an interleaved M-sweep micro-arm (M=10/256/2048) showing the
+        ring's memory and steps/sec scaling (``m_sweep``);
       * trainer steps/sec on the LM path (ROADMAP's named next metric).
 
     Warns on stderr when any steps/sec regresses >10% vs the committed
@@ -74,16 +127,22 @@ def bench_cada(iters: int = 300, lm_steps: int = 30) -> dict:
     params = logreg_init(None, 22, 2)
     out = {"iters": iters, "workers": m}
 
-    # compile both arms first, then INTERLEAVE the timed runs (best-of-N):
+    # compile all arms first, then INTERLEAVE the timed runs (best-of-N):
     # the gating_overhead_frac is a ratio, and sequential phases would
     # fold machine drift into it on shared boxes.
+    variants = {
+        "always": dict(kind="always"),
+        "cada2": dict(kind="cada2"),
+        "cada2_unfused": dict(kind="cada2", fuse_evals=False),
+    }
     arms = {}
     batches = jax.vmap(sample)(
         jax.random.split(jax.random.PRNGKey(1), iters))
-    for kind in ("always", "cada2"):
+    for name, spec in variants.items():
         eng = CADAEngine(logreg_loss, FusedAMSGrad(lr=0.01),
-                         CommRule(kind=kind, c=0.6, d_max=10,
-                                  max_delay=100), m)
+                         CommRule(kind=spec["kind"], c=0.6, d_max=10,
+                                  max_delay=100), m,
+                         fuse_evals=spec.get("fuse_evals"))
         st = eng.init(params)
         compiled = jax.jit(eng.run, donate_argnums=(0,)).lower(
             st, batches).compile()
@@ -94,31 +153,40 @@ def bench_cada(iters: int = 300, lm_steps: int = 30) -> dict:
         st1, mets = compiled(jax.tree.map(lambda x: x.copy(), st),
                              batches)           # steady-state warmup
         jax.block_until_ready(st1.params)
-        arms[kind] = {"compiled": compiled, "st": st, "mets": mets,
-                      "aliased": aliased, "dt": float("inf")}
+        arms[name] = {"compiled": compiled, "st": st, "mets": mets,
+                      "eng": eng, "aliased": aliased, "dt": float("inf")}
     for _ in range(5):
-        for kind, arm in arms.items():
+        for name, arm in arms.items():
             fresh = jax.tree.map(lambda x: x.copy(), arm["st"])
             t0 = time.time()
             st2, arm["mets"] = arm["compiled"](fresh, batches)
             jax.block_until_ready(st2.params)
             arm["dt"] = min(arm["dt"], time.time() - t0)
-    for kind, arm in arms.items():
+    for name, arm in arms.items():
         mets = arm["mets"]
-        out[kind] = {
+        state_b, eval_b = _comm_state_bytes(arm["st"].comm)
+        out[name] = {
             "steps_per_sec": round(iters / arm["dt"], 1),
             "final_loss": float(np.asarray(mets["loss"])[-20:].mean()),
             "uploads": int(np.asarray(mets["uploads"]).sum()),
             "mbytes_up": float(np.asarray(mets["bytes_up"]).sum() / 1e6),
             "donation_aliases": arm["aliased"],
+            "worker_state_bytes": state_b,
+            "eval_point_bytes": eval_b,
+            "second_eval_frac": _second_eval_frac(
+                arm["eng"], arm["st"], batches, arm["dt"] / iters),
         }
-        _warn_if_regressed(f"engine-{kind}", out[kind]["steps_per_sec"],
-                           (prev or {}).get(kind))
+        _warn_if_regressed(f"engine-{name}", out[name]["steps_per_sec"],
+                           (prev or {}).get(name))
     out["uploads_saved_frac"] = round(
         1.0 - out["cada2"]["uploads"] / out["always"]["uploads"], 3)
     out["gating_overhead_frac"] = round(
         1.0 - out["cada2"]["steps_per_sec"]
         / out["always"]["steps_per_sec"], 4)
+    out["gating_overhead_frac_unfused"] = round(
+        1.0 - out["cada2_unfused"]["steps_per_sec"]
+        / out["always"]["steps_per_sec"], 4)
+    out["m_sweep"] = _bench_m_sweep()
 
     lm = bench_trainer_lm(lm_steps)
     out.update(lm)
@@ -137,6 +205,63 @@ def bench_cada(iters: int = 300, lm_steps: int = 30) -> dict:
           f"fallback {out['sharded_perleaf_ref']['steps_per_sec']}) "
           f"-> {BENCH_PATH}", file=sys.stderr)
     return out
+
+
+def _bench_m_sweep(ms=(10, 256, 2048), iters=(300, 100, 15)) -> dict:
+    """The federated-magnitude micro-arm: cada2 (default eval dispatch) at
+    M = 10 / 256 / 2048 on logreg, arms compiled first then INTERLEAVED
+    best-of-3 — per M: steps/sec, the ring's eval-point bytes, and the
+    dense O(M·n) plane it replaced. The ring holds R = min(M, D)+1 rows,
+    so eval-point state saturates at (D+1)·n while the dense equivalent
+    grows with M."""
+    import jax
+    import numpy as np
+
+    from repro.core.engine import CADAEngine, make_sampler
+    from repro.core.rules import CommRule
+    from repro.data.partition import pad_to_matrix, uniform_partition
+    from repro.data.synthetic import ijcnn1_like
+    from repro.models.small import logreg_init, logreg_loss
+    from repro.optim.fused import FusedAMSGrad
+
+    d = 100
+    rule = CommRule(kind="cada2", c=0.6, d_max=10, max_delay=d)
+    params = logreg_init(None, 22, 2)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    arms = {}
+    for m, its in zip(ms, iters):
+        ds = ijcnn1_like(n=max(4000, 2 * m))
+        mtx = pad_to_matrix(uniform_partition(ds.n, m, seed=0))
+        sample = make_sampler(ds.x, ds.y, mtx, 8)
+        batches = jax.vmap(sample)(
+            jax.random.split(jax.random.PRNGKey(1), its))
+        eng = CADAEngine(logreg_loss, FusedAMSGrad(lr=0.01), rule, m)
+        st = eng.init(params)
+        compiled = jax.jit(eng.run, donate_argnums=(0,)).lower(
+            st, batches).compile()
+        st1, _ = compiled(jax.tree.map(lambda x: x.copy(), st), batches)
+        jax.block_until_ready(st1.params)
+        arms[m] = {"compiled": compiled, "st": st, "batches": batches,
+                   "iters": its, "dt": float("inf")}
+    for _ in range(3):
+        for m, arm in arms.items():
+            fresh = jax.tree.map(lambda x: x.copy(), arm["st"])
+            t0 = time.time()
+            st2, _ = arm["compiled"](fresh, arm["batches"])
+            jax.block_until_ready(st2.params)
+            arm["dt"] = min(arm["dt"], time.time() - t0)
+    sweep = {}
+    for m, arm in arms.items():
+        _, eval_b = _comm_state_bytes(arm["st"].comm)
+        sweep[str(m)] = {
+            "workers": m,
+            "iters": arm["iters"],
+            "steps_per_sec": round(arm["iters"] / arm["dt"], 1),
+            "ring_rows": min(m, d) + 1,
+            "eval_point_bytes": eval_b,
+            "dense_equiv_bytes": m * n_params * 4,
+        }
+    return sweep
 
 
 def bench_trainer_lm(steps: int = 30) -> dict:
@@ -243,7 +368,7 @@ def bench_sim(iters: int = 300) -> dict:
     # describe the same scenario
     from benchmarks.ablations import M as m, _mlp_problem, network_rules
     from repro.models.small import mlp_loss
-    from repro.sim import simulate, summarize
+    from repro.sim import network_profile, simulate, summarize
 
     target = 0.05
     sample, params = _mlp_problem()
@@ -252,7 +377,15 @@ def bench_sim(iters: int = 300) -> dict:
         jax.random.split(jax.random.PRNGKey(1), iters))
     rules = network_rules()
 
+    # the fused second-eval discount (ComputeModel.second_eval_factor):
+    # cada2's stacked two-point eval was measured (BENCH_cada,
+    # second_eval_frac / gating_overhead) at roughly HALF the cost of a
+    # full second pass, so the ``cada2/fused-eval`` arm prices eval_idx≥1
+    # at 0.5 — wall-clock stops double-charging the optimization while
+    # the plain ``cada2`` row keeps the paper's flat 2-evals pricing.
+    fused_factor = 0.5
     out = {"iters": iters, "workers": m, "target_loss": target,
+           "second_eval_factor_fused": fused_factor,
            "profiles": {}}
     for profile in ("zero", "wan"):
         prows = {}
@@ -267,6 +400,15 @@ def bench_sim(iters: int = 300) -> dict:
                        n_workers=m, network=profile, mode="async",
                        async_tau=20, lr=0.01)
         prows["laq/async"] = summarize(res, target)
+        # cada2 with the second eval priced at the measured stacked cost
+        # (same trajectory as the plain cada2 row — only compute pricing
+        # differs, so the delta is pure second-eval wall-clock)
+        prof_fused = network_profile(profile, m,
+                                     second_eval_factor=fused_factor)
+        res = simulate(loss_fn, rules["cada2"], params, batches,
+                       n_workers=m, network=prof_fused, mode="barrier",
+                       lr=0.01)
+        prows["cada2/fused-eval"] = summarize(res, target)
         times = {k: v["time_to_target_s"] for k, v in prows.items()
                  if v["time_to_target_s"] is not None}
         winner = min(times, key=times.get) if times else None

@@ -101,6 +101,11 @@ def restore(path: str, like: Any,
     into a target plane with a DIFFERENT padded length by keeping the true
     ``n`` entries and re-cutting the zero tail (shard-count changes only
     ever move the padding). Any other mismatch raises, naming the plane.
+    The stale-iterate ring extras (cada2's (R,)+param-shaped ``ring``
+    rows, (M,) ``slot``, (R,) ``ring_version``) are param/index-shaped,
+    not flat planes — they take the exact-shape path and round-trip
+    verbatim under any state-shard count (pinned in
+    tests/test_stale_ring.py).
     """
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)

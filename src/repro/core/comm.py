@@ -157,6 +157,14 @@ class CommStrategy:
     #: entry to a single worker row when it gates one worker at a time, and
     #: passes these through whole (e.g. CADA1's snapshot θ̃).
     async_shared_extras: tuple = ()
+    #: flat-extras keys that belong to the stale-iterate RING family
+    #: (:meth:`second_eval_indexed`): neither shared nor per-worker-sliced.
+    #: The async runtime SKIPS these on slice/merge and instead synthesizes
+    #: a one-row ring per gate from the worker's own stale iterate via
+    #: :meth:`async_indexed_row` — the host event loop tracks each worker's
+    #: θ^{k−τ_m} exactly, so the bounded-slot ring (which assumes the sync
+    #: engine's staleness cap) is never consulted asynchronously.
+    async_indexed_extras: tuple = ()
 
     def __init__(self, rule: CommRule):
         self.rule = rule
@@ -256,9 +264,45 @@ class CommStrategy:
 
     def second_eval_per_worker(self, extras: dict):
         """(M,)-leading params PYTREE of per-worker evaluation points
-        (CADA2's stale iterates θ^{k−τ_m}), or None."""
+        (CADA2's stale iterates θ^{k−τ_m}), or None.
+
+        LEGACY dense form: a registered rule that needs per-worker points
+        should prefer :meth:`second_eval_indexed` (the stale-iterate ring —
+        O(R·n) instead of O(M·n) eval-point state); this hook remains for
+        external strategies that carry a dense (M,)-leading plane."""
         del extras
         return None
+
+    def second_eval_indexed(self, extras: dict):
+        """The INDEXED second-evaluation family: ``(ring, slot)`` where
+        ``ring`` is an (R,)-leading params pytree of DISTINCT evaluation
+        points and ``slot`` is the (M,) int32 row index of each worker's
+        point — or None when the rule has no second evaluation.
+
+        ``slot=None`` means R == 1 and every worker shares row 0 (the
+        degenerate ring: CADA1's snapshot) — the eval dispatch then keeps
+        the collapsed broadcast-θ form XLA fuses best. The default adapts
+        :meth:`second_eval_shared` into that degenerate ring, so every
+        shared-point rule is ring-indexed for free with identical numerics.
+
+        The staleness cap bounds R: at most ``min(M, max_delay) + 1``
+        distinct global iterates can appear among M stale copies (see
+        :class:`CADA2Strategy`), which is what drops CADA2's eval-point
+        state O(M·n) → O(D·n) and the second eval's weight traffic M× → R×
+        (``flat.grouped_second_plane``).
+        """
+        shared = self.second_eval_shared(extras)
+        if shared is None:
+            return None
+        return jax.tree.map(lambda x: x[None], shared), None
+
+    def async_indexed_row(self, stale_params) -> dict:
+        """Synthesize the one-row ``async_indexed_extras`` entries for a
+        single async gate call from the worker's own stale iterate
+        ``stale_params`` (the exact θ the worker last uploaded against,
+        tracked host-side by the event loop)."""
+        del stale_params
+        return {}
 
     def flat_lhs(self, ctx, extras: dict):
         """Rule LHS on the flat plane: ((M,) lhs, cache)."""
@@ -450,19 +494,47 @@ class CADA2Strategy(CommStrategy):
                     upload, broadcast_to_workers(ctx.params, ctx.m),
                     extras["worker_params"])}
 
-    # ---- flat plane: the stale iterates θ^{k−τ_m} stay an (M,)-leading
-    # pytree (they feed vgrad_per); only the LHS norm math is flat.
+    # ---- flat plane: the STALE-ITERATE RING. The staleness cap means at
+    # most min(M, D)+1 distinct global iterates can ever appear among the M
+    # stale copies θ^{k−τ_m} (an un-capped worker has τ ≤ D−1 when it
+    # skips, so keepers reference ≤ min(M−1, D−1) distinct iterates and the
+    # uploaders add one more) — so instead of the dense (M,)-leading
+    # ``worker_params`` pytree (O(M·n) eval-point state, the reference
+    # ``init_extras`` above keeps it as the oracle) the flat plane stores:
+    #
+    #   * ``ring``         — (R,)-leading params pytree of distinct iterates
+    #   * ``slot``         — (M,) int32: each worker's ring row
+    #   * ``ring_version`` — (R,) int32: 1 + the step each row was written
+    #                        (0 = the shared init row), the eviction order
+    #
+    # ``ring[slot]`` reproduces the dense plane BIT-EXACTLY (pinned by
+    # tests/test_stale_ring.py), so masks/staleness/params cannot move.
+    def ring_rows(self, m: int) -> int:
+        """R = min(M, max_delay) + 1 — the occupancy bound above."""
+        return min(m, self.rule.max_delay) + 1
+
     def init_flat_extras(self, layout, params, params_flat, m, grad_dtype):
         del layout, params_flat, grad_dtype
-        return {"worker_params": broadcast_to_workers(params, m)}
+        rr = self.ring_rows(m)
+        return {
+            "ring": jax.tree.map(
+                lambda p: jnp.broadcast_to(p[None], (rr,) + p.shape), params),
+            "slot": jnp.zeros((m,), jnp.int32),
+            "ring_version": jnp.zeros((rr,), jnp.int32),
+        }
 
     def flat_extras_specs(self, param_spec, worker_param_spec, waxis, P,
                           col_axes=()):
-        del col_axes  # θ^{k−τ_m} stays a pytree with the param specs
-        return {"worker_params": worker_param_spec}
+        del worker_param_spec, waxis, col_axes
+        # ring rows shard like params (leading R axis replicated — R is
+        # small); the index vectors ride with the other (M,) scalars
+        return {"ring": jax.tree.map(lambda s: P(None, *s), param_spec,
+                                     is_leaf=lambda x: isinstance(x, P)),
+                "slot": P(None),
+                "ring_version": P(None)}
 
-    def second_eval_per_worker(self, extras):
-        return extras["worker_params"]
+    def second_eval_indexed(self, extras):
+        return extras["ring"], extras["slot"]
 
     def flat_lhs(self, ctx, extras):
         return kops.batched_diff_sq_norm(ctx.fresh, ctx.second,
@@ -470,7 +542,46 @@ class CADA2Strategy(CommStrategy):
                                          shard=ctx.shard), None
 
     def flat_post_upload(self, extras, cache, upload, ctx):
-        return self.post_upload(extras, cache, upload, ctx)
+        ring, slot = extras["ring"], extras["slot"]
+        version = extras["ring_version"]
+        rr = version.shape[0]
+        # Refcount the rows still held by NON-uploading workers; write θ^k
+        # into the oldest unreferenced row. Full participation always has
+        # one free (see the bound above). Under partial participation an
+        # offline worker's ancient row can be evicted — but the version
+        # ordering guarantees the evicted row is ≥ D versions old, so that
+        # worker's next upload is already staleness-cap-forced and the
+        # garbage LHS it reads never decides anything (masks stay exact;
+        # only the unpinned mean_lhs metric can move).
+        keep = jnp.where(upload, 0, 1).astype(jnp.int32)
+        refs = jnp.zeros((rr,), jnp.int32).at[slot].add(keep)
+        s = jnp.argmin(version + jnp.where(refs > 0, jnp.int32(2 ** 30), 0))
+
+        def write(rv):
+            rg, ver = rv
+            rg = jax.tree.map(
+                lambda row, p: row.at[s].set(p.astype(row.dtype)),
+                rg, ctx.params)
+            return rg, ver.at[s].set(ctx.step.astype(jnp.int32) + 1)
+
+        ring, version = jax.lax.cond(jnp.any(upload), write, lambda rv: rv,
+                                     (ring, version))
+        return {**extras,
+                "ring": ring,
+                "slot": jnp.where(upload, s, slot),
+                "ring_version": version}
+
+    # ---- async (repro.sim): the ring's occupancy bound assumes the sync
+    # engine's round-global staleness cap; free-running workers break it.
+    # The event loop instead tracks each worker's exact stale iterate
+    # host-side (a Python reference — GC keeps at most τ-bounded distinct
+    # server pytrees alive) and the gate sees a one-row ring.
+    async_indexed_extras = ("ring", "slot", "ring_version")
+
+    def async_indexed_row(self, stale_params):
+        return {"ring": jax.tree.map(lambda x: x[None], stale_params),
+                "slot": jnp.zeros((1,), jnp.int32),
+                "ring_version": jnp.zeros((1,), jnp.int32)}
 
 
 @register

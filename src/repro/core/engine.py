@@ -72,10 +72,25 @@ class CADAEngine:
       fused: run the flat-buffer hot path (default) or the per-leaf pytree
         reference implementation.
       fuse_evals: stack the rule's second gradient evaluation onto the
-        fresh one in a single 2M-row vmapped call. Identical numerics
-        (vmap rows are independent); dispatch-count win on accelerators,
-        but on CPU backends it forfeits XLA's collapse of the broadcast-θ
-        fresh eval into one large matmul — hence default off there.
+        fresh one in a single vmapped call with a broadcast 2-way eval
+        axis — the batch is NOT copied (no ``concatenate([x, x])``), the
+        stacked axis broadcasts it. Default ON: re-measured after the
+        broadcast-axis rewrite (logreg m=10, the BENCH_cada problem) the
+        stacked form cut cada2's gating overhead from ~38% to ~16% of a
+        step ON CPU too — the old doubled-batch form lost ~10-15% there,
+        which is why the default used to be TPU-only. Upload masks,
+        staleness, and params stay bit-exact vs the two-call dispatch and
+        the per-leaf reference on every pinned parity gate
+        (tests/test_flat_plane.py, test_parity_engine_trainer.py,
+        test_stale_ring.py, single-device and forced-8-device mesh);
+        ``fuse_evals=False`` restores the two-call dispatch.
+      group_evals: evaluate the second gradient with ≤R broadcast-point
+        evaluations grouped by stale-iterate ring slot instead of
+        gathering M per-worker rows (flat plane, indexed rules only).
+        Weight traffic M× → R×, arithmetic × occupancy — a win only when
+        the eval is weight-bandwidth-bound and R ≪ M; see
+        ``flat.grouped_second_plane``. Opt-in (float-level differences vs
+        the per-row vmap are possible).
       interpret: kernel-mode override for the flat ops (see kernels/ops.py:
         None = auto, True = Pallas interpret, False = compiled Pallas).
     """
@@ -83,7 +98,7 @@ class CADAEngine:
     def __init__(self, loss_fn: Callable, optimizer: Optimizer | None = None,
                  rule: CommRule | None = None, n_workers: int = 1, *,
                  fused: bool | None = None, fuse_evals: bool | None = None,
-                 interpret=None):
+                 group_evals: bool = False, interpret=None):
         self.loss_fn = loss_fn
         self.optimizer = (FusedAMSGrad(lr=1e-3) if optimizer is None
                           else optimizer)
@@ -91,8 +106,8 @@ class CADAEngine:
         self.strategy = strategy_for(self.rule)
         self.m = n_workers
         self.fused = True if fused is None else fused
-        self._fuse_evals = (jax.default_backend() == "tpu"
-                            if fuse_evals is None else fuse_evals)
+        self._fuse_evals = (True if fuse_evals is None else fuse_evals)
+        self._group_evals = group_evals
         self._interpret = interpret
         self._fused_opt = isinstance(self.optimizer, FusedAMSGrad)
         self._layout: F.FlatLayout | None = None
@@ -169,6 +184,7 @@ class CADAEngine:
             self.strategy, layout, state.comm, state.params,
             state.params_flat, batch, k, vgrad=self._vgrad,
             vgrad_per=self._vgrad_per, fuse_evals=self._fuse_evals,
+            group_evals=self._group_evals,
             interpret=self._interpret, participation=participation)
 
         nabla = F.nabla_f32(out.comm)

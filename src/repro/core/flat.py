@@ -369,12 +369,133 @@ def flat_comm_state_specs(strategy, param_spec, worker_param_spec,
     )
 
 
+# ------------------------------------------------------------ two-point eval
+
+def stacked_two_point_eval(layout: FlatLayout, params, pts, batch, m: int,
+                           vgrad_per):
+    """Fresh + second gradients from ONE vmapped call, WITHOUT copying the
+    batch: the 2-way eval axis is a broadcast vmap level (in_axes=None for
+    the batch), not a doubled (2M,)-leading concatenation — the old form
+    materialized every batch leaf twice (``jnp.concatenate([x, x])``) just
+    to reuse the flat M-axis vmap. Returns (losses, fresh, second) with the
+    planes packed. Values are identical per row (vmap rows are
+    independent); the dispatch/pass count is what halves."""
+    stacked = jax.tree.map(
+        lambda p, w: jnp.stack(
+            [jnp.broadcast_to(p[None], (m,) + p.shape), w.astype(p.dtype)]),
+        params, pts)
+    losses2, grads2 = jax.vmap(vgrad_per, in_axes=(0, None))(stacked, batch)
+    fresh = layout.pack_worker(jax.tree.map(lambda g: g[0], grads2))
+    second = layout.pack_worker(jax.tree.map(lambda g: g[1], grads2))
+    return losses2[0], fresh, second
+
+
+def grouped_second_plane(layout: FlatLayout, ring, slot, batch, m: int,
+                         vgrad) -> jnp.ndarray:
+    """The grouped second evaluation: one broadcast-point ``vgrad`` per
+    OCCUPIED ring row (a fixed-R masked ``lax.scan``), scattered into the
+    (M, n_flat) second plane by each worker's slot. Every worker still
+    sees its OWN sample ξ_m^k — only the evaluation point is shared — so
+    the plane feeds ``kops.batched_diff_sq_norm`` without any re-gather.
+
+    The weight traffic drops M× → R× (each occupied row fetches θ once for
+    all its workers); the arithmetic INFLATES to occupancy × M row-evals,
+    so this wins exactly when the eval is weight-bandwidth-bound (large n,
+    small per-worker batch, R ≪ M — the federated LM regime) and loses
+    when it is compute-bound (CPU logreg). Hence opt-in (``group_evals``).
+    """
+    rr = jax.tree.leaves(ring)[0].shape[0]
+
+    def body(acc, r):
+        def eval_row(a):
+            row = jax.tree.map(lambda x: x[r], ring)
+            _, g = vgrad(row, batch)
+            return jnp.where((slot == r)[:, None], layout.pack_worker(g), a)
+
+        return jax.lax.cond(jnp.any(slot == r), eval_row, lambda a: a,
+                            acc), None
+
+    acc0 = jnp.zeros((m, layout.n_flat), jnp.float32)
+    plane, _ = jax.lax.scan(body, acc0, jnp.arange(rr))
+    return plane
+
+
+def eval_two_point(strategy, layout: FlatLayout, extras: dict, params,
+                   batch, m: int, *, vgrad, vgrad_per=None,
+                   fuse_evals: bool = False, group_evals: bool = False):
+    """The ONE home of the two-point eval dispatch, shared by
+    :func:`flat_comm_round` and the async gate (sim/runtime.py). Returns
+    ``(losses, fresh, second)`` packed planes (``second`` is None for
+    single-eval rules).
+
+    Dispatch order: the strategy's INDEXED family first
+    (``second_eval_indexed`` — the stale-iterate ring). ``slot=None``
+    degenerates to the shared broadcast point (CADA1's snapshot, exactly
+    the old collapsed form). A real slot index picks one of three
+    bit-compatible evaluation shapes:
+
+      * default        — gather ``ring[slot]`` (R → M rows) and
+        ``vgrad_per``: BIT-IDENTICAL to the old dense plane (same row
+        values, same call);
+      * ``fuse_evals`` — gather, then stack fresh+second into one vmapped
+        call (:func:`stacked_two_point_eval`) — identical values, half the
+        dispatches;
+      * ``group_evals`` — NO gather: ≤R broadcast-point evals
+        (:func:`grouped_second_plane`) — the M× → R× weight-traffic form
+        (same math per worker; the broadcast-θ eval may differ from the
+        per-row vmap by float ulps, so it is opt-in).
+
+    The legacy dense ``second_eval_per_worker`` hook is honored last, for
+    external strategies without a ring.
+    """
+    indexed = strategy.second_eval_indexed(extras)
+    if indexed is not None:
+        ring, slot = indexed
+        if slot is None:  # degenerate ring: one shared point
+            shared_pt = jax.tree.map(lambda x: jnp.squeeze(x, 0), ring)
+            losses, fresh_tree = vgrad(params, batch)
+            _, second_tree = vgrad(shared_pt, batch)
+            return (losses, layout.pack_worker(fresh_tree),
+                    layout.pack_worker(second_tree))
+        if group_evals:
+            losses, fresh_tree = vgrad(params, batch)
+            return (losses, layout.pack_worker(fresh_tree),
+                    grouped_second_plane(layout, ring, slot, batch, m,
+                                         vgrad))
+        pts = jax.tree.map(lambda x: x[slot], ring)
+        if fuse_evals:
+            return stacked_two_point_eval(layout, params, pts, batch, m,
+                                          vgrad_per)
+        losses, fresh_tree = vgrad(params, batch)
+        _, second_tree = vgrad_per(pts, batch)
+        return (losses, layout.pack_worker(fresh_tree),
+                layout.pack_worker(second_tree))
+
+    shared_pt = strategy.second_eval_shared(extras)
+    perw_pts = strategy.second_eval_per_worker(extras)
+    if perw_pts is not None and fuse_evals:
+        return stacked_two_point_eval(layout, params, perw_pts, batch, m,
+                                      vgrad_per)
+    losses, fresh_tree = vgrad(params, batch)
+    fresh = layout.pack_worker(fresh_tree)
+    if shared_pt is not None:
+        _, second_tree = vgrad(shared_pt, batch)
+        second = layout.pack_worker(second_tree)
+    elif perw_pts is not None:
+        _, second_tree = vgrad_per(perw_pts, batch)
+        second = layout.pack_worker(second_tree)
+    else:
+        second = None
+    return losses, fresh, second
+
+
 # ------------------------------------------------------------- shared round
 
 def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
                     params, params_flat, batch, k, *, vgrad,
                     vgrad_per: Callable | None = None,
                     fuse_evals: bool = True,
+                    group_evals: bool = False,
                     interpret=None, shard=None,
                     participation=None) -> FlatCommRoundResult:
     """One communication round of Algorithm 1 (lines 4-15) on flat buffers.
@@ -383,11 +504,14 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
     parity test pins this); the per-iteration cost is what changes:
 
       * rules with a second gradient evaluation (CADA1's snapshot, CADA2's
-        stale iterates) get BOTH evaluations from ONE ``vgrad_per`` call
-        over a stacked (2M,)-leading tree when ``fuse_evals`` (vmap keeps
-        rows independent, so the values are unchanged — but half the
-        dispatches); set ``fuse_evals=False`` when ``vgrad``/``vgrad_per``
-        are pod-manual shard_maps whose in-specs pin the M-leading axis;
+        stale-iterate ring) dispatch through :func:`eval_two_point`:
+        ``fuse_evals`` stacks both evaluations onto one vmapped call via a
+        broadcast 2-way eval axis (identical values — half the dispatches;
+        set False when ``vgrad``/``vgrad_per`` are pod-manual shard_maps
+        whose in-specs pin the M-leading axis), ``group_evals`` runs ≤R
+        broadcast-point evaluations over the ring instead of gathering M
+        rows (the M× → R× weight-traffic form — opt-in, see
+        :func:`grouped_second_plane`);
       * the delta / mask-merge / eq. (3) aggregation are whole-plane ops;
       * the LHS norms ride the batched one-pass kernel (kernels/ops.py).
 
@@ -415,30 +539,10 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
     extras = strategy.flat_pre_step(comm.extras, params, params_flat, k)
 
     # Lines 6/8: fresh gradients at θ^k, plus the rule's second evaluation
-    # (shared point θ̃ keeps the collapsed broadcast form; per-worker
-    # points ride vgrad_per, optionally stacked onto the fresh call).
-    shared_pt = strategy.second_eval_shared(extras)
-    perw_pts = strategy.second_eval_per_worker(extras)
-    if perw_pts is not None and fuse_evals:
-        stacked = jax.tree.map(
-            lambda p, w: jnp.concatenate(
-                [jnp.broadcast_to(p[None], (m,) + p.shape), w]),
-            params, perw_pts)
-        batch2 = jax.tree.map(lambda x: jnp.concatenate([x, x]), batch)
-        losses2, grads2 = vgrad_per(stacked, batch2)
-        g2 = layout.pack_worker(grads2)
-        losses, fresh, second = losses2[:m], g2[:m], g2[m:]
-    else:
-        losses, fresh_tree = vgrad(params, batch)
-        fresh = layout.pack_worker(fresh_tree)
-        if shared_pt is not None:
-            _, second_tree = vgrad(shared_pt, batch)
-            second = layout.pack_worker(second_tree)
-        elif perw_pts is not None:
-            _, second_tree = vgrad_per(perw_pts, batch)
-            second = layout.pack_worker(second_tree)
-        else:
-            second = None
+    # (ring-indexed / shared / legacy dense — see eval_two_point).
+    losses, fresh, second = eval_two_point(
+        strategy, layout, extras, params, batch, m, vgrad=vgrad,
+        vgrad_per=vgrad_per, fuse_evals=fuse_evals, group_evals=group_evals)
 
     ctx = FlatCommContext(layout=layout, params=params,
                           params_flat=params_flat, batch=batch, fresh=fresh,

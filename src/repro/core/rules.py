@@ -15,6 +15,21 @@ lives in first-class strategy objects in :mod:`repro.core.comm`; the
     every D iterations:  ||δ̃_m^k − δ̃_m^{k−τ}||² ≤ RHS.
   * ``cada2``  (eq. 10) — same-sample two-iterate difference:
     ||∇ℓ(θ^k;ξ_m^k) − ∇ℓ(θ^{k−τ_m};ξ_m^k)||² ≤ RHS.
+    The flat plane stores the stale iterates θ^{k−τ_m} as a STALE-ITERATE
+    RING, not per-worker copies: staleness ≤ ``max_delay`` = D bounds the
+    number of distinct global iterates among the M stale points at D+1,
+    so R = min(M, D)+1 ring rows plus an (M,) slot index represent them
+    exactly — O(D·n) eval-point state instead of O(M·n), bit-exact vs the
+    dense plane (the pytree reference keeps the dense form as the
+    oracle). The second evaluation then runs STACKED onto the fresh eval
+    by default (``fuse_evals``: one vmapped call, the 2-way eval axis
+    broadcasts the batch instead of copying it — measured ~38% → ~16%
+    cada2 gating overhead on the CPU logreg bench, bit-exact on every
+    pinned parity gate), or GROUPED (``group_evals``: ≤R broadcast-point
+    evals, weight traffic R× instead of M× — opt-in; wins only when the
+    eval is weight-bandwidth-bound and R ≪ M, loses at bench scale where
+    R > M), or as the plain gathered per-worker vmap
+    (``fuse_evals=False``), the reference form.
   * ``lag``    (eq. 5)  — naive stochastic LAG (different samples — shown
     ineffective in §2.1; reproduced as a baseline).
   * ``always``          — threshold never satisfied ⇒ distributed Adam.

@@ -89,6 +89,10 @@ class TrainHParams:
     #   (measured 1.9e3 s/step on llama3-405b — §Perf).
     shard_cada_state: bool = False  # shard nabla/stale trees over "data"
     #                                 even when params don't FSDP (§Perf)
+    group_evals: bool = False       # second eval as ≤R broadcast-point
+    #   evaluations grouped by stale-iterate ring slot (indexed rules on
+    #   the flat plane). Weight traffic M× → R×, arithmetic × occupancy —
+    #   opt in when the eval is weight-bandwidth-bound and R ≪ M.
 
     @property
     def cada_jnp_dtype(self):
@@ -472,14 +476,14 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
     use_flat = hp.fused
     if use_flat:
         layout = F.layout_of(abstract_params(cfg), shards=shards)
-        # the stacked 2M-row fused evaluation (identical numerics — vmap
-        # row independence) applies only on the vmap route (the pod-manual
-        # shard_map pins the M-leading axis in its in-specs) and only on
-        # accelerators: CPU backends win more from XLA collapsing the
-        # broadcast-θ fresh eval into one large matmul. Matches the
-        # engine's default so the parity contract stays bit-exact.
-        fuse_evals = (vgrad_factory is None
-                      and jax.default_backend() == "tpu")
+        # the stacked two-point evaluation (fresh + second as a broadcast
+        # 2-way eval axis, batch NOT copied — flat.stacked_two_point_eval)
+        # applies only on the vmap route: the pod-manual shard_map pins
+        # the M-leading axis in its in-specs. Since the broadcast-axis
+        # rewrite it wins on CPU as well (see CADAEngine's fuse_evals
+        # note), so it is on wherever it applies — matching the engine's
+        # default keeps the parity contract bit-exact.
+        fuse_evals = vgrad_factory is None
 
         def fused_update(pflat, h, vhat, grad_flat):
             """Fused AMSGrad/CADA server update on the packed plane —
@@ -536,7 +540,7 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
             out = F.flat_comm_round(
                 strategy, layout, state.comm, state.params, pflat, batch,
                 k, vgrad=vgrad, vgrad_per=vgrad_per, fuse_evals=fuse_evals,
-                shard=flat_shard)
+                group_evals=hp.group_evals, shard=flat_shard)
             params, h, vhat, dsq = fused_update(
                 pflat, state.h, state.vhat, F.nabla_f32(out.comm))
             comm = F.record_progress(out.comm, dsq, k)

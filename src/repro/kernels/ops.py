@@ -127,6 +127,12 @@ def batched_diff_sq_norm(a, b, *, interpret=None, shard=None):
     """(M,) per-worker ||a_m − b_m||² over (M, n) planes — the CADA rule
     LHS for all M workers in one pass (fp32 accumulate).
 
+    ``b`` is whatever second-gradient plane the eval dispatch produced —
+    gathered per-worker rows, the stacked fused eval's second half, or
+    the GROUPED plane scattered by stale-ring slot
+    (``flat.grouped_second_plane``) — all land here as a dense (M, n)
+    operand, so the LHS needs no re-gather and no grouping awareness.
+
     ``shard`` (static FlatSharding, optional): shard-local form — manual
     over the worker axis (each device sweeps only its own rows) and the
     plane's column axes, finishing the per-row partials with one psum over

@@ -10,7 +10,9 @@ seconds:
     snapshot gradient, CADA2's stale-iterate gradient) are charged per
     ``strategy.grad_evals_per_iter`` — the runtime asks for ``n_evals``
     draws per iteration, so the second evaluation costs real simulated
-    time, exactly as §2.2 counts it.
+    time, exactly as §2.2 counts it (discountable via
+    ``second_eval_factor`` when the fused/grouped second-eval forms make
+    it cheaper than a full extra pass).
   * :class:`LinkModel` — per-worker latency + bandwidth. Transfer time is
     ``latency + nbytes / bandwidth``; the byte counts come from each
     strategy's ``bytes_per_upload`` accounting, so quantized (laq/cinn)
@@ -59,6 +61,16 @@ class ComputeModel:
         (mean-preserving, heavy right tail — the classic straggler shape);
       * ``trace`` — ``traces[m][j]`` is worker m's j-th eval duration,
         cycled when the trace is shorter than the run.
+
+    ``second_eval_factor`` scales every evaluation after the first of an
+    iteration (``eval_idx >= 1``). The default 1.0 is the paper's flat
+    ``grad_evals_per_iter = 2`` charge for cada1/cada2; the optimized
+    second-eval forms are cheaper than a full extra pass — the stacked
+    ``fuse_evals`` eval shares dispatch/activation traffic with the fresh
+    one, and the grouped ring eval fetches R ≪ M weight copies — so
+    simulated wall-clock (``BENCH_sim.json``) can reflect the optimization
+    (e.g. 0.5 ≈ "the second eval costs half a pass") instead of
+    double-charging it.
     """
     m: int
     eval_s: tuple
@@ -68,11 +80,13 @@ class ComputeModel:
     slowdown: tuple = ()            # per-worker permanent factors (M,)
     transient: tuple = ()           # (worker, t_start, t_end, factor) rows
     seed: int = 0
+    second_eval_factor: float = 1.0
 
     @classmethod
     def make(cls, m: int, eval_s=1e-3, kind: str = "deterministic",
              sigma: float = 0.0, traces=None, slowdown=None,
-             transient=(), seed: int = 0) -> "ComputeModel":
+             transient=(), seed: int = 0,
+             second_eval_factor: float = 1.0) -> "ComputeModel":
         if kind not in ("deterministic", "lognormal", "trace"):
             raise ValueError(f"unknown compute kind {kind!r}")
         if kind == "trace" and not traces:
@@ -88,6 +102,7 @@ class ComputeModel:
                                        m)),
             transient=tuple(tuple(row) for row in transient),
             seed=seed,
+            second_eval_factor=float(second_eval_factor),
         )
 
     def _factor(self, worker: int, now: float) -> float:
@@ -111,6 +126,8 @@ class ComputeModel:
                     (self.seed, worker, local_iter, eval_idx))
                 base *= math.exp(rng.normal(-0.5 * self.sigma ** 2,
                                             self.sigma))
+        if eval_idx >= 1:
+            base *= self.second_eval_factor
         return base * self._factor(worker, now)
 
     def iter_time(self, worker: int, local_iter: int, now: float,
@@ -174,7 +191,8 @@ PROFILES = ("zero", "lan", "wan", "hetero")
 
 
 def network_profile(name: str, m: int, *, eval_s: float = 1e-3,
-                    seed: int = 0) -> NetworkProfile:
+                    seed: int = 0,
+                    second_eval_factor: float = 1.0) -> NetworkProfile:
     """The scenario presets (`--network` on the launcher, swept by
     ``benchmarks.ablations.sweep_network``):
 
@@ -196,18 +214,23 @@ def network_profile(name: str, m: int, *, eval_s: float = 1e-3,
         Grouping (PAPERS.md).
 
     ``eval_s`` rescales the compute grain (a real LM step is not a logreg
-    step); all link numbers are absolute.
+    step); all link numbers are absolute. ``second_eval_factor`` is
+    forwarded to :class:`ComputeModel` (see there — the fused/grouped
+    second-eval discount).
     """
+    sef = second_eval_factor
     if name == "zero":
         return NetworkProfile(
             name=name,
-            compute=ComputeModel.make(m, eval_s=eval_s, seed=seed),
+            compute=ComputeModel.make(m, eval_s=eval_s, seed=seed,
+                                      second_eval_factor=sef),
             link=LinkModel.make(m, latency_s=0.0, bandwidth=math.inf),
         )
     if name == "lan":
         return NetworkProfile(
             name=name,
-            compute=ComputeModel.make(m, eval_s=eval_s, seed=seed),
+            compute=ComputeModel.make(m, eval_s=eval_s, seed=seed,
+                                      second_eval_factor=sef),
             link=LinkModel.make(m, latency_s=1e-4, bandwidth=1e10),
         )
     if name == "wan":
@@ -217,7 +240,8 @@ def network_profile(name: str, m: int, *, eval_s: float = 1e-3,
         # sparse) buys wall-clock directly, on top of skipped rounds
         return NetworkProfile(
             name=name,
-            compute=ComputeModel.make(m, eval_s=eval_s, seed=seed),
+            compute=ComputeModel.make(m, eval_s=eval_s, seed=seed,
+                                      second_eval_factor=sef),
             link=LinkModel.make(m, latency_s=2e-2, bandwidth=1.25e5,
                                 down_bandwidth=1.25e6),
         )
@@ -230,7 +254,8 @@ def network_profile(name: str, m: int, *, eval_s: float = 1e-3,
             name=name,
             compute=ComputeModel.make(m, eval_s=spread * eval_s,
                                       kind="lognormal", sigma=0.3,
-                                      slowdown=slowdown, seed=seed),
+                                      slowdown=slowdown, seed=seed,
+                                      second_eval_factor=sef),
             link=LinkModel.make(m, latency_s=1e-3, bandwidth=bw),
         )
     raise ValueError(f"unknown network profile {name!r}; "

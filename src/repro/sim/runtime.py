@@ -200,15 +200,34 @@ class SimRuntime:
             participation_masks=pmasks, metrics=mets)
 
     # -------------------------------------------------------------- async
-    def _slice_extras(self, extras: dict, w: int) -> dict:
-        shared = self.engine.strategy.async_shared_extras
-        return {key: (val if key in shared
-                      else jax.tree.map(lambda x: x[w:w + 1], val))
-                for key, val in extras.items()}
+    def _slice_extras(self, extras: dict, w: int, stale_point=None) -> dict:
+        """Worker w's one-row view of the flat extras.
+
+        Three families: ``async_shared_extras`` pass through whole (CADA1's
+        snapshot), ``async_indexed_extras`` (the stale-iterate RING) are
+        REPLACED by a synthetic one-row ring built from ``stale_point`` —
+        the worker's own θ^{k−τ_m}, tracked host-side by ``_run_async``
+        (the bounded-slot server ring assumes the sync schedule and cannot
+        represent per-worker async staleness) — and everything else is
+        sliced on its leading (M,) axis.
+        """
+        strat = self.engine.strategy
+        shared, indexed = strat.async_shared_extras, strat.async_indexed_extras
+        row = {key: (val if key in shared
+                     else jax.tree.map(lambda x: x[w:w + 1], val))
+               for key, val in extras.items() if key not in indexed}
+        if indexed:
+            row.update(strat.async_indexed_row(stale_point))
+        return row
 
     def _merge_extras(self, extras: dict, row: dict, w: int) -> dict:
-        shared = self.engine.strategy.async_shared_extras
-        return {key: (val if key in shared
+        """Write worker w's gate-updated extras row back. Shared extras
+        pass through; INDEXED (ring) keys are skipped — the server-side
+        ring is dead state in async mode (each gate sees a fresh synthetic
+        row; the real stale points live in ``_run_async``'s host list)."""
+        strat = self.engine.strategy
+        shared, indexed = strat.async_shared_extras, strat.async_indexed_extras
+        return {key: (val if key in shared or key in indexed
                       else jax.tree.map(
                           lambda full, r: full.at[w].set(r[0]), val,
                           row[key]))
@@ -224,18 +243,14 @@ class SimRuntime:
 
         def gate(wparams, wflat, batch1, wg_row, stale1, diff_hist,
                  extras_row):
-            losses, fresh_tree = eng._vgrad(wparams, batch1)
-            fresh = layout.pack_worker(fresh_tree)
-            shared_pt = strategy.second_eval_shared(extras_row)
-            perw_pts = strategy.second_eval_per_worker(extras_row)
-            if shared_pt is not None:
-                _, second_tree = eng._vgrad(shared_pt, batch1)
-                second = layout.pack_worker(second_tree)
-            elif perw_pts is not None:
-                _, second_tree = eng._vgrad_per(perw_pts, batch1)
-                second = layout.pack_worker(second_tree)
-            else:
-                second = None
+            # the shared eval dispatch (ring-indexed / shared / legacy
+            # dense); on the gate's one-row view the ring gather degrades
+            # to exactly the old dense per-worker evaluation, so async
+            # numerics are untouched by the ring.
+            losses, fresh, second = F.eval_two_point(
+                strategy, layout, extras_row, wparams, batch1, 1,
+                vgrad=eng._vgrad, vgrad_per=eng._vgrad_per,
+                fuse_evals=False, group_evals=False)
             comm_row = F.FlatCommState(
                 nabla=jnp.zeros_like(wg_row[0]), worker_grads=wg_row,
                 staleness=stale1, diff_hist=diff_hist, extras=extras_row)
@@ -313,6 +328,10 @@ class SimRuntime:
         # per-worker copies of θ (everyone starts at the init point, free)
         wparams = [srv_params] * self.m
         wflat = [theta] * self.m
+        # per-worker stale evaluation point θ^{k−τ_m} for ring-indexed
+        # rules (cada2): host-side Python refs ALIASING server pytrees —
+        # O(distinct iterates) device memory, exactly the ring's bound
+        stale_eval = [srv_params] * self.m
         procs = [WorkerProc(w, since_upload=tau, upload_version=-tau)
                  for w in range(self.m)]
 
@@ -345,7 +364,7 @@ class SimRuntime:
                     wparams[w], wflat[w], batch1,
                     worker_grads[w:w + 1],
                     jnp.full((1,), stale, jnp.int32), diff_hist,
-                    self._slice_extras(extras, w))
+                    self._slice_extras(extras, w, stale_eval[w]))
                 worker_grads = worker_grads.at[w].set(wg_row)
                 extras = self._merge_extras(extras, extras_row, w)
                 loss_t.append(t)
@@ -359,6 +378,9 @@ class SimRuntime:
                     # local iteration, as max_delay=1 does per round
                     p.since_upload = 1
                     p.uploads += 1
+                    # the worker's stale point becomes the iterate it just
+                    # evaluated (post_upload's θ̂_m ← θ^k, async form)
+                    stale_eval[w] = wparams[w]
                     p.bytes_up += up_bytes
                     q.push(t + link.up_time(w, up_bytes), UPLOAD_ARRIVE, w,
                            wire=wire)

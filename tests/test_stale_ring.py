@@ -1,0 +1,377 @@
+"""The stale-iterate ring (cada2's flat eval-point state) and the grouped /
+stacked second-evaluation forms.
+
+The contract under test: staleness ≤ max_delay = D bounds the number of
+DISTINCT global iterates among the M stale copies θ^{k−τ_m} at D+1, so the
+flat plane's R = min(M, D)+1 ring rows + (M,) slot index represent the
+dense (M,)-leading ``worker_params`` pytree EXACTLY. The dense plane is
+reconstructed here as a test-local strategy subclass (the pre-ring hooks,
+verbatim) and pinned against the ring across seeds and D ∈ {1, 5, 50} on
+the engine, the trainer, and the async sim runtime — upload masks,
+staleness, and parameters bit-exact. Property tests check the occupancy
+bound and that ``ring[slot[m]]`` reproduces each worker's exact θ^{k−τ_m}
+at every iteration; the large-M smoke (the CI leg's regression trap
+against re-densifying) checks eval-point state stays O(D·n) at M=2048.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm
+from repro.core.comm import broadcast_to_workers
+from repro.core.engine import CADAEngine, make_sampler
+from repro.core.rules import CommRule
+from repro.data.partition import pad_to_matrix, uniform_partition
+from repro.data.synthetic import ijcnn1_like
+from repro.models.small import logreg_init, logreg_loss, mlp_init, mlp_loss
+from repro.optim.fused import FusedAMSGrad
+from repro.sim import SimConfig, SimRuntime, network_profile, simulate
+
+M = 4
+STEPS = 12
+
+
+class DenseCADA2(comm.CADA2Strategy):
+    """The PRE-RING dense flat plane, restored verbatim as the oracle:
+    stale iterates as an (M,)-leading ``worker_params`` pytree, the second
+    eval via the legacy ``second_eval_per_worker`` hook."""
+
+    def init_flat_extras(self, layout, params, params_flat, m, grad_dtype):
+        del layout, params_flat, grad_dtype
+        return {"worker_params": broadcast_to_workers(params, m)}
+
+    def flat_extras_specs(self, param_spec, worker_param_spec, waxis, P,
+                          col_axes=()):
+        del param_spec, waxis, col_axes
+        return {"worker_params": worker_param_spec}
+
+    def second_eval_indexed(self, extras):
+        return None
+
+    def second_eval_per_worker(self, extras):
+        return extras["worker_params"]
+
+    def flat_post_upload(self, extras, cache, upload, ctx):
+        return self.post_upload(extras, cache, upload, ctx)
+
+    async_indexed_extras = ()
+
+
+class SharedCADA1(comm.CADA1Strategy):
+    """CADA1 forced onto the LEGACY shared-point eval path (indexed hook
+    disabled) — the pre-ring dispatch, for the degenerate-ring parity."""
+
+    def second_eval_indexed(self, extras):
+        return None
+
+
+def _problem(m=M, steps=STEPS, seed=2, n=400, batch=16):
+    ds = ijcnn1_like(n=n)
+    mtx = pad_to_matrix(uniform_partition(ds.n, m, seed=0))
+    sample = make_sampler(ds.x, ds.y, mtx, batch)
+    params = logreg_init(None, 22, 2)
+    batches = jax.vmap(sample)(
+        jax.random.split(jax.random.PRNGKey(seed), steps))
+    return params, batches
+
+
+def _run(rule, params, batches, strategy=None, **kw):
+    eng = CADAEngine(logreg_loss, FusedAMSGrad(lr=0.05), rule, M, **kw)
+    if strategy is not None:
+        eng.strategy = strategy(rule)
+    st, mets = jax.jit(eng.run)(eng.init(params), batches)
+    return st, mets
+
+
+def _assert_bit_exact(sa, ma, sb, mb, what):
+    np.testing.assert_array_equal(
+        np.asarray(ma["upload_mask"]), np.asarray(mb["upload_mask"]),
+        err_msg=f"{what}: upload masks diverged")
+    np.testing.assert_array_equal(
+        np.asarray(ma["staleness"]), np.asarray(mb["staleness"]),
+        err_msg=f"{what}: staleness diverged")
+    for a, b in zip(jax.tree.leaves(sa.params), jax.tree.leaves(sb.params)):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            err_msg=f"{what}: params diverged")
+
+
+# ------------------------------------------------- ring vs dense (engine)
+
+@pytest.mark.parametrize("seed", (2, 7))
+@pytest.mark.parametrize("max_delay", (1, 5, 50))
+def test_ring_matches_dense_plane_engine(max_delay, seed):
+    """The acceptance gate: the ring-indexed cada2 flat plane is
+    BIT-EXACT (masks, staleness, params) against the pre-ring dense
+    ``worker_params`` plane, across seeds and D ∈ {1, 5, 50} — D=1 forces
+    an upload every round (maximal ring churn), D=50 > steps never
+    cap-forces (slots pin to row 0 until rule-driven uploads)."""
+    rule = CommRule(kind="cada2", c=5.0, d_max=4, max_delay=max_delay)
+    params, batches = _problem(seed=seed)
+    st_r, m_r = _run(rule, params, batches)
+    st_d, m_d = _run(rule, params, batches, strategy=DenseCADA2)
+    assert "ring" in st_r.comm.extras and "worker_params" in st_d.comm.extras
+    _assert_bit_exact(st_r, m_r, st_d, m_d, f"cada2 D={max_delay} s={seed}")
+
+
+def test_ring_mask_is_mixed_meta():
+    """Meta-check: the D=5 parity run above exercises BOTH branches."""
+    rule = CommRule(kind="cada2", c=5.0, d_max=4, max_delay=5)
+    params, batches = _problem()
+    _, mets = _run(rule, params, batches)
+    total = int(np.asarray(mets["uploads"]).sum())
+    assert 0 < total < STEPS * M, total
+
+
+def test_cada1_degenerate_ring_matches_legacy_shared():
+    """CADA1's snapshot rides the DEGENERATE ring (R=1, slot=None) via the
+    base ``second_eval_indexed`` adapter — bit-exact vs the legacy
+    shared-point dispatch it replaced."""
+    rule = CommRule(kind="cada1", c=5.0, d_max=4, max_delay=6)
+    params, batches = _problem()
+    st_r, m_r = _run(rule, params, batches)
+    st_s, m_s = _run(rule, params, batches, strategy=SharedCADA1)
+    _assert_bit_exact(st_r, m_r, st_s, m_s, "cada1 degenerate ring")
+
+
+# ------------------------------------------------- ring properties
+
+def test_ring_occupancy_and_gather_reproduction():
+    """Per-iteration properties of the ring invariant:
+
+      * occupancy — the number of DISTINCT slots referenced never exceeds
+        min(M, D)+1 (the bound that makes R rows sufficient);
+      * gather reproduction — ``ring[slot[m]]`` is bit-exactly worker m's
+        θ^{k−τ_m}: the iterate current when it last uploaded (θ^0 before
+        any upload), tracked independently host-side from the masks.
+    """
+    d = 5
+    rule = CommRule(kind="cada2", c=5.0, d_max=4, max_delay=d)
+    params, batches = _problem(steps=STEPS)
+    eng = CADAEngine(logreg_loss, FusedAMSGrad(lr=0.05), rule, M)
+    st = eng.init(params)
+    step = jax.jit(eng.step)
+    expected = [params] * M
+    for i in range(STEPS):
+        before = st.params
+        st, mets = step(st, jax.tree.map(lambda x: x[i], batches))
+        mask = np.asarray(mets["upload_mask"])
+        for w in range(M):
+            if mask[w]:
+                expected[w] = before
+        slot = np.asarray(st.comm.extras["slot"])
+        ring = st.comm.extras["ring"]
+        assert len(np.unique(slot)) <= min(M, d) + 1
+        for w in range(M):
+            got = jax.tree.map(lambda x: x[slot[w]], ring)
+            for a, b in zip(jax.tree.leaves(got),
+                            jax.tree.leaves(expected[w])):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"worker {w} stale point wrong at iter {i}")
+
+
+def test_ring_rows_formula():
+    for m, d, want in ((4, 5, 5), (4, 50, 5), (2048, 8, 9), (1, 1, 2)):
+        strat = comm.strategy_for(
+            CommRule(kind="cada2", max_delay=d))
+        assert strat.ring_rows(m) == want
+
+
+# ------------------------------------- grouped / stacked eval forms
+
+def test_grouped_second_eval_matches_gathered():
+    """``group_evals``: ≤R broadcast-point evals scattered by slot — each
+    worker keeps its own sample, masks and staleness bit-exact vs the
+    gathered per-worker vmap; params numerically identical."""
+    rule = CommRule(kind="cada2", c=5.0, d_max=4, max_delay=5)
+    params, batches = _problem()
+    st_g, m_g = _run(rule, params, batches, group_evals=True)
+    st_r, m_r = _run(rule, params, batches)
+    np.testing.assert_array_equal(np.asarray(m_g["upload_mask"]),
+                                  np.asarray(m_r["upload_mask"]))
+    np.testing.assert_array_equal(np.asarray(m_g["staleness"]),
+                                  np.asarray(m_r["staleness"]))
+    for a, b in zip(jax.tree.leaves(st_g.params),
+                    jax.tree.leaves(st_r.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("strategy", (None, DenseCADA2),
+                         ids=("ring", "legacy-dense"))
+def test_stacked_fused_eval_close_to_unfused(strategy):
+    """``fuse_evals`` (the broadcast 2-way eval axis, batch NOT copied —
+    the default) on both the ring-gather route and the legacy dense
+    per-worker route: numerically equivalent to the two-call dispatch.
+    Masks are pinned exact; params get allclose headroom because vmap
+    nesting forms are allowed to differ by ulps on other backends (the
+    strict bit-exact pins against the reference plane live in the parity
+    gates, which run this default)."""
+    rule = CommRule(kind="cada2", c=5.0, d_max=4, max_delay=5)
+    params, batches = _problem()
+    st_f, m_f = _run(rule, params, batches, strategy=strategy,
+                     fuse_evals=True)
+    st_u, m_u = _run(rule, params, batches, strategy=strategy,
+                     fuse_evals=False)
+    np.testing.assert_array_equal(np.asarray(m_f["upload_mask"]),
+                                  np.asarray(m_u["upload_mask"]))
+    for a, b in zip(jax.tree.leaves(st_f.params),
+                    jax.tree.leaves(st_u.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-6)
+
+
+# ------------------------------------------------- trainer leg
+
+def test_ring_matches_dense_plane_trainer(monkeypatch):
+    """The pod trainer consumes the same flat hooks: ring vs dense
+    bit-exact on the LM smoke config (dense arm via a registry patch)."""
+    import repro.configs as C
+    from repro.distributed.trainer import (TrainHParams, init_train_state,
+                                           make_train_step, worker_split)
+    cfg = C.get_smoke_config("stablelm-1.6b")
+    m, steps = 2, 6
+    rule = CommRule(kind="cada2", c=20.0, d_max=4, max_delay=10)
+    batches = [worker_split(
+        {"tokens": jax.random.randint(jax.random.PRNGKey(100 + i),
+                                      (4, 33), 0, cfg.vocab)}, m)
+        for i in range(steps)]
+
+    def arm():
+        hp = TrainHParams(rule=rule, lr=1e-3)
+        step = jax.jit(make_train_step(cfg, hp, m))
+        st = init_train_state(cfg, hp, m, jax.random.PRNGKey(0))
+        mets = []
+        for b in batches:
+            st, mm = step(st, b)
+            mets.append(mm)
+        return st, mets
+
+    st_r, m_r = arm()
+    assert "ring" in st_r.comm.extras
+    monkeypatch.setitem(comm.STRATEGIES, "cada2", DenseCADA2)
+    st_d, m_d = arm()
+    assert "worker_params" in st_d.comm.extras
+    for i, (a, b) in enumerate(zip(m_r, m_d)):
+        np.testing.assert_array_equal(
+            np.asarray(a["upload_mask"]), np.asarray(b["upload_mask"]),
+            err_msg=f"trainer masks diverged at iteration {i}")
+        np.testing.assert_array_equal(
+            np.asarray(a["staleness"]), np.asarray(b["staleness"]))
+    for a, b in zip(jax.tree.leaves(st_r.params),
+                    jax.tree.leaves(st_d.params)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# ------------------------------------------------- sim async leg
+
+def test_ring_matches_dense_plane_async_sim():
+    """The async event loop tracks each worker's exact stale point
+    host-side and hands the gate a synthetic one-row ring — losses,
+    uploads, and final params bit-exact vs the dense per-worker slicing
+    the pre-ring runtime did."""
+    rule = CommRule(kind="cada2", c=20.0, d_max=4, max_delay=10)
+    params, batches = _problem(m=3, steps=8)
+    res_r = simulate(logreg_loss, rule, params, batches, n_workers=3,
+                     network="zero", mode="async", async_tau=5, lr=0.01)
+    cfg = SimConfig(network=network_profile("zero", 3), mode="async",
+                    async_tau=5)
+    rt = SimRuntime(logreg_loss, rule, 3, cfg, lr=0.01)
+    rt.engine.strategy = DenseCADA2(rule)
+    res_d = rt.run(params, batches)
+    assert res_r.uploads == res_d.uploads
+    np.testing.assert_array_equal(res_r.losses, res_d.losses)
+    for a, b in zip(jax.tree.leaves(res_r.final_params),
+                    jax.tree.leaves(res_d.final_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------- checkpoint round-trip
+
+def test_ring_checkpoint_reshard_roundtrip(tmp_path):
+    """Ring + slot + version survive a checkpoint reshard across state
+    shard counts: the (M, n_flat) planes re-cut their padding while the
+    ring extras (param/index-shaped, not flat planes) take the exact-shape
+    path verbatim."""
+    import repro.checkpoint.io as ckpt
+    import repro.configs as C
+    from repro.distributed.trainer import (TrainHParams, flat_layout,
+                                           init_train_state,
+                                           make_train_step, worker_split)
+    cfg = C.get_smoke_config("stablelm-1.6b")
+    hp = TrainHParams(rule=CommRule(kind="cada2", c=0.5, d_max=4,
+                                    max_delay=10), lr=1e-3)
+    m = 2
+    lay2 = flat_layout(cfg, shards=2)
+    shards_src = next(s for s in (4, 8, 16, 32, 64, 128)
+                      if flat_layout(cfg, shards=s).n_flat != lay2.n_flat)
+    lay4 = flat_layout(cfg, shards=shards_src)
+    step4 = jax.jit(make_train_step(cfg, hp, m, shards=shards_src))
+    st4 = init_train_state(cfg, hp, m, jax.random.PRNGKey(0),
+                           shards=shards_src)
+    batch = worker_split(
+        {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 33), 0,
+                                      cfg.vocab)}, m)
+    st4, _ = step4(st4, batch)
+
+    ckpt.save(str(tmp_path / "s4"), st4._asdict(), step=1, flat_meta=lay4)
+    st2_like = jax.tree.map(
+        jnp.zeros_like,
+        init_train_state(cfg, hp, m, jax.random.PRNGKey(7),
+                         shards=2)._asdict())
+    restored, step_no = ckpt.restore(str(tmp_path / "s4"), st2_like)
+    assert step_no == 1
+    src = st4._asdict()["comm"].extras
+    dst = restored["comm"].extras
+    assert set(dst) == {"ring", "slot", "ring_version"}
+    for key in ("ring", "slot", "ring_version"):
+        for a, b in zip(jax.tree.leaves(dst[key]),
+                        jax.tree.leaves(src[key])):
+            assert a.shape == b.shape
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+    # the worker plane really resharded (padding re-cut)
+    assert restored["comm"].worker_grads.shape == (m, lay2.n_flat)
+
+
+# ------------------------------------------------- large-M smoke (CI leg)
+
+def test_large_m_engine_smoke_state_is_ring_bounded():
+    """The federated-scale smoke and re-densification trap: M=2048 workers
+    on a tiny MLP, cada2. Eval-point state must be O(D·n) — the ring holds
+    R = D+1 rows and NO extras leaf except the (M,) slot index leads with
+    M — and a few fused steps must run."""
+    m, d = 2048, 8
+    rule = CommRule(kind="cada2", c=5.0, d_max=4, max_delay=d)
+    ds = ijcnn1_like(n=4096)
+    mtx = pad_to_matrix(uniform_partition(ds.n, m, seed=0))
+    sample = make_sampler(ds.x, ds.y, mtx, 2)
+    params = mlp_init(jax.random.PRNGKey(0), 22, 16, 2)
+    eng = CADAEngine(mlp_loss, FusedAMSGrad(lr=0.05), rule, m)
+    st = eng.init(params)
+
+    extras = st.comm.extras
+    assert set(extras) == {"ring", "slot", "ring_version"}
+    rr = min(m, d) + 1
+    n_params = sum(int(np.prod(p.shape))
+                   for p in jax.tree.leaves(params))
+    ring_bytes = sum(int(l.size * l.dtype.itemsize)
+                     for l in jax.tree.leaves(extras["ring"]))
+    assert ring_bytes == rr * n_params * 4        # O(D·n), NOT O(M·n)
+    assert extras["slot"].shape == (m,)
+    assert extras["ring_version"].shape == (rr,)
+    for key in ("ring", "ring_version"):
+        for leaf in jax.tree.leaves(extras[key]):
+            assert leaf.shape[0] == rr            # nothing M-leading
+    # dense-equivalent state would be m * n_params * 4 — 227x larger here
+    assert ring_bytes * 64 < m * n_params * 4
+
+    batches = jax.vmap(sample)(jax.random.split(jax.random.PRNGKey(3), 3))
+    st, mets = jax.jit(eng.run)(st, batches)
+    assert np.isfinite(np.asarray(mets["loss"])).all()
+    assert int(np.asarray(mets["uploads"]).sum()) > 0

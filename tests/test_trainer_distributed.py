@@ -100,10 +100,14 @@ def test_state_specs_structure():
     lead = jax.tree.leaves(specs.comm.worker_grads,
                            is_leaf=lambda x: isinstance(x, P))[0]
     assert lead[0] == "data"
-    # the strategy owns its extra slices: CADA2 stores per-worker params
-    wp = jax.tree.leaves(specs.comm.extras["worker_params"],
-                         is_leaf=lambda x: isinstance(x, P))[0]
-    assert wp[0] == "data"
+    # the strategy owns its extra slices: CADA2 stores the stale-iterate
+    # ring (R rows shard like params — replicated leading axis) plus the
+    # per-worker slot index and the row versions (both replicated)
+    assert set(specs.comm.extras) == {"ring", "slot", "ring_version"}
+    ring = jax.tree.leaves(specs.comm.extras["ring"],
+                           is_leaf=lambda x: isinstance(x, P))[0]
+    assert ring[0] is None
+    assert specs.comm.extras["slot"] == P(None)
     # CADA1 stores a snapshot (param-spec'd) + per-worker innovations
     specs_1 = train_state_specs(CFG, mesh, TrainHParams(
         rule=CommRule(kind="cada1")))
