@@ -106,6 +106,13 @@ def restore(path: str, like: Any,
     not flat planes — they take the exact-shape path and round-trip
     verbatim under any state-shard count (pinned in
     tests/test_stale_ring.py).
+
+    The cohort plane's host :class:`repro.core.flat.WorkerPool` rides
+    this path unchanged: its ``state_dict()`` is a dict of (M, n_flat)
+    numpy planes — ordinary flat worker planes to ``_reshard_flat`` —
+    so a pool saved at one state-shard count restores into a template
+    cut for another, true entries bit-exact, padding re-cut (pinned in
+    tests/test_cohort_plane.py).
     """
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)

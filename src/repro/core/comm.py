@@ -251,6 +251,19 @@ class CommStrategy:
         del param_spec, worker_param_spec, waxis, P, col_axes
         return {}
 
+    def pooled_extras(self) -> tuple:
+        """Flat-extras keys that are O(M·n) per-worker PLANES — the entries
+        the cohort-virtualized plane (``flat.flat_cohort_round``) keeps in
+        the host-resident :class:`~repro.core.flat.WorkerPool` and streams
+        onto device C rows at a time (CADA1's ``worker_delta``, laq/topk's
+        error-feedback ``residual``). Everything else stays device-resident
+        in the cohort server state: shared pytrees (snapshots, rings) and
+        (M,)-scalar vectors (slots, periods) are O(n) / O(M), not O(M·n).
+        A pooled entry's flat hooks see a (C, n_flat) rows view; hooks that
+        touch NON-pooled (M,)-length extras must index by ``ctx.cohort``
+        when it is set (see CADA2/AVP)."""
+        return ()
+
     def flat_pre_step(self, extras: dict, params, params_flat, k) -> dict:
         del params, params_flat, k
         return extras
@@ -450,6 +463,10 @@ class CADA1Strategy(CommStrategy):
     def flat_pre_step(self, extras, params, params_flat, k):
         return self.pre_step(extras, params, k)
 
+    def pooled_extras(self):
+        # δ̃ is the one O(M·n) plane; θ̃ is shared and stays on device
+        return ("worker_delta",)
+
     def second_eval_shared(self, extras):
         return extras["snapshot"]
 
@@ -553,7 +570,20 @@ class CADA2Strategy(CommStrategy):
         # worker's next upload is already staleness-cap-forced and the
         # garbage LHS it reads never decides anything (masks stay exact;
         # only the unpinned mean_lhs metric can move).
-        keep = jnp.where(upload, 0, 1).astype(jnp.int32)
+        #
+        # Cohort rounds (ctx.cohort set): ``upload`` covers only the C
+        # sampled rows, but the refcount must span ALL M workers — an
+        # offline worker keeps its row exactly like a dense-plane
+        # non-participant (keep=1), so the two planes pick the same
+        # eviction slot and stay bit-identical.
+        if ctx.cohort is not None:
+            keep = jnp.ones_like(slot).at[ctx.cohort].set(
+                jnp.where(upload, 0, 1).astype(jnp.int32))
+            new_slot = lambda s: slot.at[ctx.cohort].set(
+                jnp.where(upload, s, slot[ctx.cohort]))
+        else:
+            keep = jnp.where(upload, 0, 1).astype(jnp.int32)
+            new_slot = lambda s: jnp.where(upload, s, slot)
         refs = jnp.zeros((rr,), jnp.int32).at[slot].add(keep)
         s = jnp.argmin(version + jnp.where(refs > 0, jnp.int32(2 ** 30), 0))
 
@@ -568,7 +598,7 @@ class CADA2Strategy(CommStrategy):
                                      (ring, version))
         return {**extras,
                 "ring": ring,
-                "slot": jnp.where(upload, s, slot),
+                "slot": new_slot(s),
                 "ring_version": version}
 
     # ---- async (repro.sim): the ring's occupancy bound assumes the sync
@@ -699,6 +729,10 @@ class ErrorFeedbackStrategy(CommStrategy):
         if not self.rule.error_feedback:
             return {}
         return {"residual": P(waxis, spec_dim(col_axes))}
+
+    def pooled_extras(self):
+        # e_m is worker-grads-sized — pooled iff it exists at all
+        return ("residual",) if self.rule.error_feedback else ()
 
     def flat_lhs(self, ctx, extras):
         delta = ctx.fresh - ctx.comm.worker_grads.astype(jnp.float32)
@@ -891,11 +925,23 @@ class AVPStrategy(CommStrategy):
         energy = kops.batched_diff_sq_norm(
             ctx.fresh, ctx.comm.worker_grads.astype(jnp.float32),
             interpret=ctx.interpret, shard=ctx.shard)
-        return self._gate(ctx.comm.staleness, extras["period"],
-                          energy), energy
+        # cohort round: the (M,) period vector is server-resident; gate
+        # the C sampled rows against their own periods
+        period = extras["period"]
+        if ctx.cohort is not None:
+            period = period[ctx.cohort]
+        return self._gate(ctx.comm.staleness, period, energy), energy
 
     def flat_post_upload(self, extras, energy, upload, ctx):
-        return self.post_upload(extras, energy, upload, ctx)
+        if ctx.cohort is None:
+            return self.post_upload(extras, energy, upload, ctx)
+        # cohort twin of the participation freeze: only the sampled rows
+        # evaluated a gradient, so only their periods adapt — identical
+        # integers to the dense plane's where(participation, ...) form
+        p_c = self._adapt(extras["period"][ctx.cohort], energy,
+                          ctx.comm.diff_hist)
+        return {**extras,
+                "period": extras["period"].at[ctx.cohort].set(p_c)}
 
 
 # ----------------------------------------------------------- shared round

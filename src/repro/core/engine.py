@@ -59,6 +59,16 @@ class EngineState(NamedTuple):
     params_flat: Any = None      # θ^k packed fp32 (fused plane only)
 
 
+class CohortEngineState(NamedTuple):
+    """Device-resident engine state under the cohort-virtualized plane
+    (the O(M·n) per-worker planes live in the host WorkerPool)."""
+    step: jnp.ndarray
+    params: Any
+    opt_state: Any
+    server: Any                  # flat.CohortServerState
+    params_flat: jnp.ndarray
+
+
 class CADAEngine:
     """Server + M workers running Algorithm 1 (or a per-iteration baseline).
 
@@ -93,12 +103,18 @@ class CADAEngine:
         the per-row vmap are possible).
       interpret: kernel-mode override for the flat ops (see kernels/ops.py:
         None = auto, True = Pallas interpret, False = compiled Pallas).
+      resum_every: cohort-plane drift guard — every K cohort rounds,
+        recompute ∇̄ from the host pool (fp64 accumulate) instead of
+        trusting the incremental aggregate. 0 (default) = off; the
+        incremental form is exact in real arithmetic and bit-pinned vs the
+        dense plane, so the guard is belt-and-braces for very long runs.
     """
 
     def __init__(self, loss_fn: Callable, optimizer: Optimizer | None = None,
                  rule: CommRule | None = None, n_workers: int = 1, *,
                  fused: bool | None = None, fuse_evals: bool | None = None,
-                 group_evals: bool = False, interpret=None):
+                 group_evals: bool = False, interpret=None,
+                 resum_every: int = 0):
         self.loss_fn = loss_fn
         self.optimizer = (FusedAMSGrad(lr=1e-3) if optimizer is None
                           else optimizer)
@@ -109,8 +125,10 @@ class CADAEngine:
         self._fuse_evals = (True if fuse_evals is None else fuse_evals)
         self._group_evals = group_evals
         self._interpret = interpret
+        self.resum_every = resum_every
         self._fused_opt = isinstance(self.optimizer, FusedAMSGrad)
         self._layout: F.FlatLayout | None = None
+        self._cohort_step = None
         self._vgrad = jax.vmap(jax.value_and_grad(loss_fn),
                                in_axes=(None, 0))
         self._vgrad_per = jax.vmap(jax.value_and_grad(loss_fn),
@@ -210,6 +228,94 @@ class CADAEngine:
         metrics = {"loss": jnp.mean(out.losses), **out.metrics}
         return new_state, metrics
 
+    # ------------------------------------------------------ cohort plane
+    def init_cohort(self, params):
+        """Cohort-virtualized state: (CohortEngineState, flat.WorkerPool).
+
+        Device state is O(C·n) per round + O(n) server buffers + O(M)
+        scalar vectors; the O(M·n) per-worker planes live in the returned
+        host pool. Requires the fused plane and the fused AMSGrad server
+        optimizer (the only combination the hot path compiles).
+        """
+        if not (self.fused and self._fused_opt):
+            raise ValueError("the cohort plane requires fused=True and the "
+                             "FusedAMSGrad server optimizer")
+        layout = F.layout_of(params)
+        self._layout = layout
+        # own the param buffers: the cohort step donates its state, and
+        # the caller's arrays must survive the first round
+        params = jax.tree.map(jnp.array, params)
+        params_flat = layout.pack(params)
+        grad_dtype = (layout.dtypes[0] if len(set(layout.dtypes)) == 1
+                      else jnp.float32)
+        server, pool = F.init_cohort_state(
+            self.strategy, layout, params, self.m, grad_dtype=grad_dtype,
+            params_flat=params_flat)
+        state = CohortEngineState(
+            step=jnp.zeros([], jnp.int32), params=params,
+            opt_state=self.optimizer.init_flat(layout.n_flat),
+            server=server, params_flat=params_flat)
+        return state, pool
+
+    def _build_cohort_step(self):
+        layout = self._layout
+
+        def step(state, rows, batch, cohort):
+            k = state.step
+            out = F.flat_cohort_round(
+                self.strategy, layout, state.server, rows, state.params,
+                state.params_flat, batch, k, cohort, m_total=self.m,
+                vgrad=self._vgrad, vgrad_per=self._vgrad_per,
+                fuse_evals=self._fuse_evals, interpret=self._interpret)
+            theta, opt_state, dsq = self.optimizer.apply_flat(
+                state.params_flat, state.opt_state,
+                out.server.nabla.astype(jnp.float32),
+                interpret=self._interpret)
+            theta = layout.cast_roundtrip(theta)
+            server = F.record_progress(out.server, dsq, k)
+            new_state = CohortEngineState(
+                step=k + 1, params=layout.unpack(theta),
+                opt_state=opt_state, server=server, params_flat=theta)
+            metrics = {"loss": jnp.mean(out.losses), **out.metrics}
+            return new_state, out.rows, metrics
+
+        # the gathered rows and the previous state are both dead after the
+        # round — donate them, so the device never holds two copies of the
+        # cohort plane (the "streamed through" discipline)
+        return jax.jit(step, donate_argnums=(0, 1))
+
+    def step_cohort(self, state: CohortEngineState, pool, batch, cohort):
+        """One cohort round: gather the C sampled rows from the host pool,
+        run the jitted round + fused server update, scatter the rows back.
+        ``batch`` holds ONLY the cohort rows ((C, b, ...) leaves); ``cohort``
+        is sorted ascending (the gather enforces it)."""
+        cohort = np.sort(np.asarray(cohort).astype(np.int32))
+        rows = pool.gather(cohort)
+        if self._cohort_step is None:
+            self._cohort_step = self._build_cohort_step()
+        state, new_rows, metrics = self._cohort_step(
+            state, rows, batch, jnp.asarray(cohort))
+        pool.scatter(cohort, new_rows)
+        return state, metrics
+
+    def run_cohort(self, state: CohortEngineState, pool, batches, cohorts):
+        """Python-loop driver over per-round (batch, cohort) pairs —
+        the cohort plane's gather/scatter is host-side, so there is no
+        scan. Applies the ``resum_every`` drift guard. Returns
+        (state, list-of-metrics)."""
+        mets = []
+        for i in range(len(cohorts)):
+            batch = jax.tree.map(lambda b: b[i], batches) \
+                if not isinstance(batches, (list, tuple)) else batches[i]
+            state, m = self.step_cohort(state, pool, batch, cohorts[i])
+            if self.resum_every and (i + 1) % self.resum_every == 0:
+                nabla = jnp.asarray(pool.resum_nabla()).astype(
+                    state.server.nabla.dtype)
+                state = state._replace(
+                    server=state.server._replace(nabla=nabla))
+            mets.append(m)
+        return state, mets
+
     # --------------------------------------------------------------- run
     def run(self, state: EngineState, batches,
             participation=None) -> tuple[EngineState, dict]:
@@ -235,6 +341,27 @@ def _as_protocol(fused: FusedAMSGrad) -> Optimizer:
     return as_optimizer(fused)
 
 
+def sample_cohorts(m: int, c: int, steps: int, seed: int = 0) -> np.ndarray:
+    """(steps, C) int32 SORTED cohort ids, one independent draw per round,
+    seeded per (seed, round) exactly like ``sim.events.ParticipationModel``
+    so a cohort schedule and a participation-mask schedule with the same
+    seed describe the same runs."""
+    out = np.empty((steps, c), np.int32)
+    for k in range(steps):
+        rng = np.random.default_rng((seed, k))
+        out[k] = np.sort(rng.choice(m, c, replace=False))
+    return out
+
+
+def cohorts_to_participation(cohorts: np.ndarray, m: int) -> np.ndarray:
+    """(steps, M) bool participation masks equivalent to a (steps, C)
+    cohort schedule — the dense-plane oracle's input for cohort parity."""
+    steps = cohorts.shape[0]
+    masks = np.zeros((steps, m), bool)
+    masks[np.arange(steps)[:, None], cohorts] = True
+    return masks
+
+
 def make_sampler(x: np.ndarray, y: np.ndarray, shard_index: np.ndarray,
                  batch_size: int):
     """Per-worker minibatch sampler over a (M, n_pad) shard-index matrix.
@@ -250,6 +377,30 @@ def make_sampler(x: np.ndarray, y: np.ndarray, shard_index: np.ndarray,
     def sample(rng):
         pos = jax.random.randint(rng, (m, batch_size), 0, n_pad)
         flat = jnp.take_along_axis(idx, pos, axis=1)      # (M, b) global ids
+        return xd[flat], yd[flat]
+
+    return sample
+
+
+def make_cohort_sampler(x: np.ndarray, y: np.ndarray,
+                        shard_index: np.ndarray, batch_size: int):
+    """Cohort twin of :func:`make_sampler`: draws batches ONLY for the C
+    sampled workers — ``sample(rng, cohort) -> (xb, yb)`` with (C, b, ...)
+    leaves. This is what makes federated M ≥ 10⁴ runs fit: batch storage
+    is O(C·b), not O(M·b). The draws are NOT row-matched to
+    :func:`make_sampler` (a (C, b) randint is a different stream than
+    slicing a (M, b) one) — cohort-vs-dense parity tests slice full
+    batches instead.
+    """
+    xd = jnp.asarray(x)
+    yd = jnp.asarray(y)
+    idx = jnp.asarray(shard_index)
+    n_pad = idx.shape[1]
+
+    def sample(rng, cohort):
+        c = cohort.shape[0]
+        pos = jax.random.randint(rng, (c, batch_size), 0, n_pad)
+        flat = jnp.take_along_axis(idx[cohort], pos, axis=1)
         return xd[flat], yd[flat]
 
     return sample

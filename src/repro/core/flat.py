@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quantize import topk_count, topk_threshold_mask
+from repro.kernels import ops as kops
 
 # Minimal flat-buffer alignment. The Pallas wrappers in kernels/ops.py
 # re-pad to whole kernel blocks on demand, so the layout itself stays lean:
@@ -324,6 +325,13 @@ class FlatCommContext(NamedTuple):
     interpret: Any            # kernel-mode override for kernels/ops.py
     shard: Any = None         # FlatSharding | None (static)
     participation: Any = None  # (M,) bool round-participation mask | None
+    # Cohort-virtualized plane (flat_cohort_round): the (C,) int32 sorted
+    # global worker ids whose rows are resident this round, or None on the
+    # dense plane. When set, ``m`` is C, every per-worker plane in
+    # ctx/extras pooled by the strategy has C rows, and full-length (M,)
+    # server-resident extras (avp periods, cada2 slots) must be indexed by
+    # it — see each strategy's flat hooks.
+    cohort: Any = None
 
 
 class FlatCommRoundResult(NamedTuple):
@@ -422,11 +430,18 @@ def grouped_second_plane(layout: FlatLayout, ring, slot, batch, m: int,
 
 def eval_two_point(strategy, layout: FlatLayout, extras: dict, params,
                    batch, m: int, *, vgrad, vgrad_per=None,
-                   fuse_evals: bool = False, group_evals: bool = False):
+                   fuse_evals: bool = False, group_evals: bool = False,
+                   cohort=None):
     """The ONE home of the two-point eval dispatch, shared by
-    :func:`flat_comm_round` and the async gate (sim/runtime.py). Returns
-    ``(losses, fresh, second)`` packed planes (``second`` is None for
-    single-eval rules).
+    :func:`flat_comm_round`, :func:`flat_cohort_round` and the async gate
+    (sim/runtime.py). Returns ``(losses, fresh, second)`` packed planes
+    (``second`` is None for single-eval rules).
+
+    ``cohort`` ((C,) int32 global worker ids, or None): cohort-virtualized
+    round. ``m`` is then C, ``batch`` holds only the cohort rows, and the
+    indexed family's full-length (M,) slot vector is sliced to the cohort
+    before the gather — rings and shared points stay server-resident at
+    full M semantics while only C rows are ever evaluated.
 
     Dispatch order: the strategy's INDEXED family first
     (``second_eval_indexed`` — the stale-iterate ring). ``slot=None``
@@ -451,6 +466,8 @@ def eval_two_point(strategy, layout: FlatLayout, extras: dict, params,
     indexed = strategy.second_eval_indexed(extras)
     if indexed is not None:
         ring, slot = indexed
+        if cohort is not None and slot is not None:
+            slot = slot[cohort]
         if slot is None:  # degenerate ring: one shared point
             shared_pt = jax.tree.map(lambda x: jnp.squeeze(x, 0), ring)
             losses, fresh_tree = vgrad(params, batch)
@@ -580,8 +597,12 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
         # below IS the gated collective, and an unpinned intermediate lets
         # GSPMD gather the full plane before reducing it.
         wire = shard.constrain_worker(wire)
+    # Order-fixed row accumulation (kops.eq3_row_mean): masked zero rows
+    # are exact no-ops, so this dense masked mean is BIT-IDENTICAL to the
+    # cohort plane's C-row sum below (flat_cohort_round) — the parity the
+    # cohort tests pin.
     nabla = (comm.nabla.astype(jnp.float32)
-             + jnp.mean(wire.astype(jnp.float32), axis=0)
+             + kops.eq3_row_mean(wire, m, shard=shard)
              ).astype(comm.nabla.dtype)
     if shard is not None:
         nabla = shard.constrain_server(nabla)
@@ -614,6 +635,259 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
                              extras=extras)
     return FlatCommRoundResult(losses=losses, comm=new_comm, upload=upload,
                                metrics=metrics)
+
+
+# ------------------------------------------------------- cohort-virtualized
+#
+# At federated scale (M ≥ 10⁴) the dense (M, n_flat) worker planes stop
+# fitting on device — and eq. (3) only ever needs the AGGREGATE of the
+# uploaded innovations, while each worker's stale-gradient row is touched
+# exactly on the rounds that worker is sampled. The cohort plane exploits
+# that: per round only the C sampled workers' rows exist on device,
+# gathered from a host-resident numpy pool and scattered back after the
+# round, while the server keeps only the (n_flat,) aggregate, the (M,)
+# staleness/slot/period vectors, the RHS ring and shared extras (CADA1's
+# snapshot, CADA2's stale-iterate ring). Device worker-plane bytes and
+# per-round eval compute are O(C·n); the O(M·n) planes live on host.
+#
+# Semantics: a cohort round is EXACTLY the dense plane run with
+# ``participation`` = the cohort's indicator mask — offline workers age
+# (+1 staleness), upload nothing, keep their rows and periods, and keep
+# their ring slots referenced. The order-fixed eq. (3) accumulation
+# (kops.eq3_row_mean) makes the parity BIT-exact in fp32, masked dense
+# mean vs C-row cohort sum; tests/test_cohort_plane.py pins it for all
+# registered rules.
+
+
+class WorkerPool:
+    """Host-resident per-worker state pool backing the cohort plane.
+
+    Numpy-backed (M, n_flat) planes — ``worker_grads`` plus whatever
+    per-worker planes the strategy pools (``strategy.pooled_extras()``:
+    CADA1's ``worker_delta``, laq/topk's error-feedback ``residual``).
+    ``gather`` streams the C sampled rows onto device (ascending worker
+    order — the order the parity depends on); ``scatter`` writes the
+    round's updated rows back. Planes keep their storage dtype (bf16
+    planes round-trip bit-exactly via ml_dtypes' numpy bfloat16).
+    """
+
+    def __init__(self, planes: dict):
+        # own the storage: np views of jax arrays arrive read-only, and
+        # scatter writes in place
+        self.planes = {name: (v if isinstance(v, np.ndarray)
+                              and v.flags.writeable else np.array(v))
+                       for name, v in planes.items()}
+        shapes = {v.shape for v in self.planes.values()}
+        if len(shapes) != 1:
+            raise ValueError(f"pool planes disagree on shape: {shapes}")
+
+    @property
+    def m(self) -> int:
+        return next(iter(self.planes.values())).shape[0]
+
+    @property
+    def n_flat(self) -> int:
+        return next(iter(self.planes.values())).shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        """Host bytes held by the pool (the O(M·n) side of the split)."""
+        return int(sum(v.nbytes for v in self.planes.values()))
+
+    def device_row_bytes(self, c: int) -> int:
+        """Device bytes a C-row gather materializes (the O(C·n) side)."""
+        return int(sum(v.dtype.itemsize * c * v.shape[1]
+                       for v in self.planes.values()))
+
+    def gather(self, cohort) -> dict:
+        """Cohort rows -> device: {name: (C, n_flat) jnp array}."""
+        idx = np.asarray(cohort)
+        return {name: jnp.asarray(plane[idx])
+                for name, plane in self.planes.items()}
+
+    def scatter(self, cohort, rows: dict) -> None:
+        """Write the round's updated (C, n_flat) rows back into the pool."""
+        idx = np.asarray(cohort)
+        for name, vals in rows.items():
+            plane = self.planes[name]
+            plane[idx] = np.asarray(vals).astype(plane.dtype, copy=False)
+
+    def resum_nabla(self) -> np.ndarray:
+        """Drift guard: recompute ∇̄ = mean_m(worker_grads) from the pool.
+
+        The incremental aggregate satisfies ∇̄ ≡ mean(worker_grads)
+        exactly in real arithmetic; in fp32 each round adds rounding noise.
+        This host-side re-sum (fp64 accumulate, fp32 result) restores the
+        invariant — config-off by default (``resum_every`` on the engine),
+        cheap (one host pass over the pool, no device traffic).
+        """
+        wg = self.planes["worker_grads"].astype(np.float64)
+        return (wg.sum(axis=0) / wg.shape[0]).astype(np.float32)
+
+    # ---- checkpoint (the planes ride checkpoint.io as ordinary leaves;
+    # (M, n_flat) planes reshard through ``_reshard_flat`` like any other
+    # flat worker plane)
+    def state_dict(self) -> dict:
+        return dict(self.planes)
+
+    def load_state_dict(self, d: dict) -> None:
+        for name in self.planes:
+            arr = np.asarray(d[name])
+            if arr.shape != self.planes[name].shape:
+                raise ValueError(
+                    f"pool plane {name!r}: shape {arr.shape} != "
+                    f"{self.planes[name].shape}")
+            arr = arr.astype(self.planes[name].dtype, copy=False)
+            if not arr.flags.writeable:
+                arr = np.array(arr)
+            self.planes[name] = arr
+
+
+class CohortServerState(NamedTuple):
+    """Device-resident server state under the cohort plane: everything
+    that is NOT an O(M·n) per-worker plane. ``extras`` holds the shared /
+    indexed strategy extras (snapshot, ring, (M,) slot/period vectors);
+    the pooled planes live in the :class:`WorkerPool`.
+    ``record_progress`` works on this state unchanged."""
+    nabla: jnp.ndarray        # (n_flat,) storage dtype
+    staleness: jnp.ndarray    # (M,) int32
+    diff_hist: jnp.ndarray    # (d_max,) fp32 RHS ring buffer
+    extras: dict              # non-pooled strategy extras
+
+
+class FlatCohortRoundResult(NamedTuple):
+    losses: jnp.ndarray       # (C,)
+    server: CohortServerState  # diff_hist NOT yet updated (record_progress)
+    rows: dict                # updated pooled rows -> WorkerPool.scatter
+    upload: jnp.ndarray       # (C,) bool
+    metrics: dict
+
+
+def init_cohort_state(strategy, layout: FlatLayout, params, m: int,
+                      grad_dtype=jnp.float32, params_flat=None):
+    """Fresh cohort-plane state: (CohortServerState, WorkerPool).
+
+    Field-for-field the split of :func:`init_flat_comm_state`'s state:
+    pooled per-worker planes land in the numpy pool, everything else on
+    device. τ_m starts at D so every worker force-uploads on its first
+    sampled round.
+    """
+    r = strategy.rule
+    if params_flat is None:
+        params_flat = layout.pack(params)
+    full_extras = strategy.init_flat_extras(layout, params, params_flat, m,
+                                            grad_dtype)
+    pooled = strategy.pooled_extras()
+    planes = {"worker_grads": np.zeros((m, layout.n_flat),
+                                       np.dtype(grad_dtype))}
+    server_extras = {}
+    for name, val in full_extras.items():
+        if name in pooled:
+            planes[name] = np.asarray(val)
+        else:
+            server_extras[name] = val
+    server = CohortServerState(
+        nabla=jnp.zeros((layout.n_flat,), grad_dtype),
+        staleness=jnp.full((m,), r.max_delay, jnp.int32),
+        diff_hist=jnp.zeros((r.d_max,), jnp.float32),
+        extras=server_extras)
+    return server, WorkerPool(planes)
+
+
+def flat_cohort_round(strategy, layout: FlatLayout,
+                      server: CohortServerState, rows: dict, params,
+                      params_flat, batch, k, cohort, *, m_total: int,
+                      vgrad, vgrad_per: Callable | None = None,
+                      fuse_evals: bool = True,
+                      interpret=None) -> FlatCohortRoundResult:
+    """One Algorithm-1 round on the cohort-virtualized plane.
+
+    ``rows`` is the WorkerPool gather for ``cohort`` ((C,) int32 SORTED
+    ascending global worker ids); ``batch`` holds only the cohort rows
+    ((C, b, ...) leaves). Bit-exact against :func:`flat_comm_round` run
+    with ``participation`` = the cohort indicator on the dense plane:
+
+      * per-row quantities (grads, LHS norms, wires) never mix rows, so
+        the C evaluated rows carry the dense run's exact bits;
+      * the eq. (3) aggregate is the order-fixed C-row sum / m_total —
+        bit-identical to the dense masked mean (see ``kops.eq3_row_mean``),
+        with NO full-plane re-sum anywhere;
+      * offline workers age exactly like dense non-participants: staleness
+        +1, rows/periods untouched, ring slots still refcounted (the
+        cohort-aware strategy hooks handle the (M,)-resident extras).
+    """
+    r = strategy.rule
+    c = rows["worker_grads"].shape[0]
+    pooled = strategy.pooled_extras()
+    merged = {**server.extras, **{name: rows[name] for name in pooled}}
+    stale_c = server.staleness[cohort]
+    comm_row = FlatCommState(
+        nabla=server.nabla, worker_grads=rows["worker_grads"],
+        staleness=stale_c, diff_hist=server.diff_hist, extras=merged)
+
+    extras = strategy.flat_pre_step(merged, params, params_flat, k)
+    losses, fresh, second = eval_two_point(
+        strategy, layout, extras, params, batch, c, vgrad=vgrad,
+        vgrad_per=vgrad_per, fuse_evals=fuse_evals, cohort=cohort)
+
+    ctx = FlatCommContext(layout=layout, params=params,
+                          params_flat=params_flat, batch=batch, fresh=fresh,
+                          second=second,
+                          comm=comm_row._replace(extras=extras),
+                          step=k, m=c, interpret=interpret, shard=None,
+                          participation=None, cohort=cohort)
+
+    lhs, cache = strategy.flat_lhs(ctx, extras)
+    rhs = r.rhs(server.diff_hist)
+    upload = (lhs > rhs) | (stale_c >= r.max_delay)
+
+    wg32 = rows["worker_grads"].astype(jnp.float32)
+    delta = strategy.flat_wire_delta(ctx, extras, cache, fresh - wg32)
+    sparse = strategy.flat_sparse_wire(ctx, extras, cache, delta)
+    if sparse is not None:
+        vals, idx = sparse
+        vals = jnp.where(upload[:, None], vals, 0.0).astype(
+            rows["worker_grads"].dtype)
+        wire = sparse_rows_to_dense(idx, vals, layout.n_flat)
+    else:
+        wire = jnp.where(upload[:, None], delta, 0.0).astype(
+            rows["worker_grads"].dtype)
+    # ∇̄ += Σ_cohort δ_m / M — the incremental aggregate; the (M-C)
+    # offline rows would contribute exact zeros, so the dense masked mean
+    # is reproduced bit-for-bit without ever materializing it.
+    nabla = (server.nabla.astype(jnp.float32)
+             + kops.eq3_row_mean(wire, m_total)).astype(server.nabla.dtype)
+    worker_grads = (wg32 + wire.astype(jnp.float32)
+                    ).astype(rows["worker_grads"].dtype)
+
+    staleness = (server.staleness + 1).at[cohort].set(
+        jnp.where(upload, 1, stale_c + 1))
+    extras = strategy.flat_post_upload(extras, cache, upload, ctx)
+    new_rows = {"worker_grads": worker_grads,
+                **{name: extras[name] for name in pooled}}
+    server_extras = {name: v for name, v in extras.items()
+                     if name not in pooled}
+
+    uploads = jnp.sum(upload.astype(jnp.int32))
+    metrics = {
+        "uploads": uploads,
+        "skip_rate": 1.0 - uploads.astype(jnp.float32) / c,
+        "upload_mask": upload,
+        "staleness": staleness[cohort],
+        "rhs": rhs,
+        "mean_lhs": jnp.mean(jnp.where(jnp.isfinite(lhs), lhs, 0.0)),
+        "max_staleness": jnp.max(staleness),
+        "grad_evals": jnp.asarray(c, jnp.int32)
+        * strategy.grad_evals_per_iter,
+        "bytes_up": (uploads.astype(jnp.float32)
+                     * strategy.bytes_per_upload(layout.n)),
+    }
+    new_server = CohortServerState(nabla=nabla, staleness=staleness,
+                                   diff_hist=server.diff_hist,
+                                   extras=server_extras)
+    return FlatCohortRoundResult(losses=losses, server=new_server,
+                                 rows=new_rows, upload=upload,
+                                 metrics=metrics)
 
 
 def record_progress(comm: FlatCommState, dtheta_sq, k) -> FlatCommState:

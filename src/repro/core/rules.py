@@ -81,6 +81,33 @@ rules' ``bytes_per_upload`` accounting is what the sim's link model
 prices, so the compressed-upload family's savings become wall-clock
 savings under expensive links (``--runtime sim --network wan``); see
 ``src/repro/sim/README.md``.
+
+The WORKER-PLANE axis is orthogonal to both: every rule also runs
+cohort-virtualized (``engine.init_cohort`` / ``sim`` ``cohort_size=``),
+where per round only the C sampled workers' rows exist on device and the
+O(M·n) per-worker planes live in a host ``flat.WorkerPool``. What each
+rule keeps per worker decides what gets pooled
+(``comm.Strategy.pooled_extras``):
+
+  * ``cada1`` — the snapshot innovation δ̃_m is a per-worker n-vector →
+    POOLED (gathered/scattered with the gradient row); the snapshot θ̃
+    itself is one shared n-vector and stays on device.
+  * ``cada2`` — the stale-iterate ring is R shared iterates + an (M,)
+    slot index, all server-side; nothing per-worker beyond the gradient
+    row. The ring's slot refcounting updates through a cohort scatter
+    over the full (M,) slot vector.
+  * ``laq`` / ``topk`` — the error-feedback residual e_m is a per-worker
+    n-vector → POOLED iff ``error_feedback`` (the memory-free variants
+    pool only the gradient row).
+  * ``avp`` — per-worker periods p_m are one (M,) integer vector →
+    stays on device (O(M) scalars, not O(M·n) planes), updated at
+    cohort indices.
+  * ``lag`` / ``always`` / ``cinn`` — the gradient row only.
+
+Staleness is always an (M,) device vector (non-sampled workers age by
+one per round). Every cohort round is bit-exact to the dense plane run
+with the cohort's indicator mask as participation
+(``tests/test_cohort_plane.py``, all 8 rules).
 """
 from __future__ import annotations
 

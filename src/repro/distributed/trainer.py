@@ -47,6 +47,7 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import flat as F
@@ -401,29 +402,11 @@ def make_pod_vgrads(cfg: ModelConfig, hp: TrainHParams, mesh):
     return make
 
 
-def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
-                    wconstrain=None, vgrad_factory=None,
-                    micro_constrain=None, shards: int = 1,
-                    flat_shard=None):
-    """Pure (state, batch) -> (state, metrics) hierarchical-CADA step.
-
-    ``batch`` leaves carry an (M,)-leading worker axis. Shard with
-    ``train_state_specs`` / ``train_batch_specs`` and wrap in jax.jit.
-    ``wconstrain`` (optional) pins per-worker gradient trees via
-    with_sharding_constraint; ``vgrad_factory`` (optional, from
-    ``make_pod_vgrads``) replaces the worker vmap with a pod-manual
-    shard_map; ``micro_constrain`` (optional) re-pins the data-axis
-    sharding after the microbatch reshape — without it GSPMD partially
-    replicates the per-pod batch (measured 4× flop inflation — §Perf).
-    ``shards`` / ``flat_shard`` (a ``sharding.FlatSharding``) describe the
-    flat state plane's sharding: the layout pads to ``shards`` equal
-    slices and the fused kernels + LHS norms run shard-local with psum'd
-    scalars. Mesh-free callers leave both at their defaults (unsharded
-    plane, plain whole-plane ops).
-    """
-    strategy = strategy_for(hp.rule)
-    if wconstrain is None:
-        wconstrain = lambda t: t  # noqa: E731
+def make_worker_grad(cfg: ModelConfig, hp: TrainHParams,
+                     micro_constrain=None):
+    """One worker's mean LM gradient, with microbatch accumulation —
+    shared by the dense mesh step and the federated cohort step, so the
+    two planes compute identical per-worker gradients."""
     if micro_constrain is None:
         micro_constrain = lambda mb: mb  # noqa: E731
 
@@ -431,7 +414,6 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
         return lm_loss(cfg, params, wbatch)[0]
 
     def worker_grad(params, wbatch):
-        """One worker's mean gradient, with microbatch accumulation."""
         bm = jax.tree.leaves(wbatch)[0].shape[0]
         nm = min(hp.microbatches, bm)
         while bm % nm:  # largest feasible count <= requested (static)
@@ -458,6 +440,35 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
             lambda p: jnp.zeros(p.shape, jnp.float32), params)
         (loss_s, g_s), _ = jax.lax.scan(acc, (0.0, zeros), mb)
         return loss_s / nm, jax.tree.map(lambda g: g / nm, g_s)
+
+    return worker_grad
+
+
+def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
+                    wconstrain=None, vgrad_factory=None,
+                    micro_constrain=None, shards: int = 1,
+                    flat_shard=None):
+    """Pure (state, batch) -> (state, metrics) hierarchical-CADA step.
+
+    ``batch`` leaves carry an (M,)-leading worker axis. Shard with
+    ``train_state_specs`` / ``train_batch_specs`` and wrap in jax.jit.
+    ``wconstrain`` (optional) pins per-worker gradient trees via
+    with_sharding_constraint; ``vgrad_factory`` (optional, from
+    ``make_pod_vgrads``) replaces the worker vmap with a pod-manual
+    shard_map; ``micro_constrain`` (optional) re-pins the data-axis
+    sharding after the microbatch reshape — without it GSPMD partially
+    replicates the per-pod batch (measured 4× flop inflation — §Perf).
+    ``shards`` / ``flat_shard`` (a ``sharding.FlatSharding``) describe the
+    flat state plane's sharding: the layout pads to ``shards`` equal
+    slices and the fused kernels + LHS norms run shard-local with psum'd
+    scalars. Mesh-free callers leave both at their defaults (unsharded
+    plane, plain whole-plane ops).
+    """
+    strategy = strategy_for(hp.rule)
+    if wconstrain is None:
+        wconstrain = lambda t: t  # noqa: E731
+
+    worker_grad = make_worker_grad(cfg, hp, micro_constrain)
 
     if vgrad_factory is not None:
         vgrad_raw, vgrad_per_raw = vgrad_factory(worker_grad)
@@ -566,6 +577,96 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
         return new_state, metrics
 
     return step
+
+
+# ------------------------------------------------------- federated cohort
+
+class CohortTrainState(NamedTuple):
+    """Trainer state on the cohort-virtualized plane: the (M, n_flat)
+    per-worker planes live in a host :class:`repro.core.flat.WorkerPool`;
+    this holds only O(n) server planes + O(M) scalar vectors."""
+    step: jnp.ndarray
+    params: Any
+    h: jnp.ndarray           # (n_flat,) first moment
+    vhat: jnp.ndarray        # (n_flat,) running max second moment
+    server: Any              # flat.CohortServerState
+    params_flat: jnp.ndarray
+
+
+def init_cohort_train_state(cfg: ModelConfig, hp: TrainHParams, m: int,
+                            rng):
+    """(CohortTrainState, WorkerPool) for M federated workers — device
+    memory O(n), host pool O(M·n). Requires the fused plane (the cohort
+    round is a flat-plane op; there is no per-leaf cohort oracle at the
+    trainer layer — core/flat.py's dense plane is the parity oracle)."""
+    if not hp.fused:
+        raise ValueError("the cohort plane requires fused=True")
+    params = init_params(cfg, rng)
+    layout = F.layout_of(params)
+    params_flat = layout.pack(params)
+    strategy = strategy_for(hp.rule)
+    server, pool = F.init_cohort_state(
+        strategy, layout, params, m, grad_dtype=hp.cada_jnp_dtype,
+        params_flat=params_flat)
+    state = CohortTrainState(
+        step=jnp.zeros([], jnp.int32), params=params,
+        h=jnp.zeros((layout.n_flat,), hp.moments_jnp_dtype),
+        vhat=jnp.zeros((layout.n_flat,), hp.moments_jnp_dtype),
+        server=server, params_flat=params_flat)
+    return state, pool
+
+
+def make_cohort_train_step(cfg: ModelConfig, hp: TrainHParams, m: int):
+    """Mesh-free federated LM step: (state, pool, batch, cohort) ->
+    (state, metrics).
+
+    Per round only the C sampled workers' rows move: gather from the host
+    pool, one :func:`repro.core.flat.flat_comm_round`-equivalent cohort
+    round (bit-exact to the dense plane with the cohort's participation
+    mask), the fused AMSGrad server update, scatter back. ``batch`` holds
+    ONLY cohort rows ((C, b, ...) leaves — at federated M a dense
+    (M, b, ·) batch is itself the memory wall). The jitted step donates
+    state and rows, so the device never holds two cohort planes.
+    Gradients come from the same ``make_worker_grad`` as the mesh step
+    (microbatch accumulation included)."""
+    if not hp.fused:
+        raise ValueError("the cohort plane requires fused=True")
+    strategy = strategy_for(hp.rule)
+    layout = F.layout_of(abstract_params(cfg))
+    worker_grad = make_worker_grad(cfg, hp)
+    vgrad = jax.vmap(worker_grad, in_axes=(None, 0))
+    vgrad_per = jax.vmap(worker_grad, in_axes=(0, 0))
+
+    def step(state: CohortTrainState, rows, batch, cohort):
+        k = state.step
+        out = F.flat_cohort_round(
+            strategy, layout, state.server, rows, state.params,
+            state.params_flat, batch, k, cohort, m_total=m,
+            vgrad=vgrad, vgrad_per=vgrad_per, fuse_evals=True)
+        theta, h, vhat, dsq = kops.fused_amsgrad_flat(
+            state.params_flat, state.h, state.vhat,
+            out.server.nabla.astype(jnp.float32), hp.lr,
+            b1=hp.b1, b2=hp.b2, eps=hp.eps)
+        theta = layout.cast_roundtrip(theta)
+        server = F.record_progress(out.server, dsq, k)
+        new_state = CohortTrainState(
+            step=k + 1, params=layout.unpack(theta), h=h, vhat=vhat,
+            server=server, params_flat=theta)
+        metrics = {"loss": jnp.mean(out.losses), "dtheta_sq": dsq,
+                   **out.metrics}
+        return new_state, out.rows, metrics
+
+    jitted = jax.jit(step, donate_argnums=(0, 1))
+
+    def train_step(state: CohortTrainState, pool, batch, cohort):
+        cohort = np.sort(np.asarray(cohort).astype(np.int32))
+        rows = pool.gather(cohort)
+        state, new_rows, metrics = jitted(state, rows, batch,
+                                          jnp.asarray(cohort))
+        pool.scatter(cohort, new_rows)
+        return state, metrics
+
+    return train_step
 
 
 def jit_train_step(cfg: ModelConfig, mesh, hp: TrainHParams):

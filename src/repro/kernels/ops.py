@@ -122,10 +122,49 @@ def diff_sq_norm_flat(a, b, *, interpret=None):
     return _cu.diff_sq_norm_flat(ap, bp, interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("m_total", "shard"))
+def eq3_row_mean(plane, m_total, *, shard=None):
+    """Eq. (3) server aggregate increment: Σ_rows(plane) / m_total.
+
+    The row reduction is an ORDER-FIXED sequential accumulation over
+    rows in DESCENDING row order (``fori_loop``), not XLA's tree
+    reduction.  A fixed sequential order makes the result invariant to
+    dropping all-zero rows: a masked dense ``(M, n)`` wire plane and the
+    gathered ``(C, n)`` cohort plane holding only its nonzero rows (in
+    ascending worker order) produce BIT-IDENTICAL fp32 aggregates, which
+    is what lets the cohort-virtualized worker plane stay a drop-in for
+    the dense plane.  (+0.0 addends are exact no-ops:
+    the accumulator starts at +0.0 and IEEE-754 addition can only reach
+    −0.0 from two −0.0 operands, so skipping zero rows never changes a
+    bit.)  Pass ``m_total`` = the FULL worker count M even when ``plane``
+    has only C cohort rows.
+
+    ``shard``: under a sharded worker axis a cross-device sequential
+    order is not expressible — fall back to the tree reduction (the
+    sharded trainer plane is never the cohort parity oracle).
+    """
+    plane = plane.astype(jnp.float32)
+    if shard is not None:
+        return jnp.sum(plane, axis=0) / m_total
+
+    rows = plane.shape[0]
+
+    def body(i, acc):
+        return acc + plane[rows - 1 - i]
+
+    zero = jnp.zeros(plane.shape[1:], jnp.float32)
+    return jax.lax.fori_loop(0, rows, body, zero) / m_total
+
+
 @partial(jax.jit, static_argnames=("interpret", "shard"))
 def batched_diff_sq_norm(a, b, *, interpret=None, shard=None):
     """(M,) per-worker ||a_m − b_m||² over (M, n) planes — the CADA rule
     LHS for all M workers in one pass (fp32 accumulate).
+
+    The leading axis is polymorphic: a cohort-sized ``(C, n)`` plane (only
+    the sampled workers' rows resident on device) takes the same kernel —
+    per-row reductions never mix rows, so cohort rows are bit-identical
+    to the same rows of the dense ``(M, n)`` pass.
 
     ``b`` is whatever second-gradient plane the eval dispatch produced —
     gathered per-worker rows, the stacked fused eval's second half, or

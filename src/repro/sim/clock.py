@@ -140,6 +140,9 @@ class ComputeModel:
         return t
 
 
+_BYTES_PER_MBIT = 1e6 / 8.0
+
+
 @dataclass(frozen=True)
 class LinkModel:
     """Per-worker link: transfer time = latency + bytes / bandwidth.
@@ -148,35 +151,71 @@ class LinkModel:
     bandwidth — the ``zero`` profile) makes transfers free. Uplink and
     downlink are symmetric unless ``down_bandwidth`` is given (WAN links
     are usually asymmetric; the broadcast direction is the fat one).
+
+    ``trace`` makes the bandwidth TIME-VARYING: per-worker series of
+    ``(t_seconds, up_mbit_s[, down_mbit_s])`` rows (Mbit/s, the unit
+    network traces ship in; two-column rows mean a symmetric link).
+    Between points the bandwidth is linearly interpolated; before the
+    first and after the last point it HOLDS the edge value (``np.interp``
+    semantics). When fewer traces than workers are given they cycle
+    (``worker % len(trace)``), like :class:`ComputeModel` traces. A
+    transfer is priced at the bandwidth in effect at its START time
+    (``now``) — the piecewise-constant-per-transfer approximation; the
+    event-driven runtimes pass their current simulated clock.
     """
     m: int
     latency_s: tuple
     bandwidth: tuple
     down_bandwidth: tuple
+    trace: tuple = ()       # per-worker ((t,...), (up_Bps,...), (down_Bps,...))
 
     @classmethod
     def make(cls, m: int, latency_s=0.0, bandwidth=math.inf,
-             down_bandwidth=None) -> "LinkModel":
+             down_bandwidth=None, trace=None) -> "LinkModel":
         return cls(
             m=m,
             latency_s=tuple(_per_worker(latency_s, m)),
             bandwidth=tuple(_per_worker(bandwidth, m)),
             down_bandwidth=tuple(_per_worker(
                 bandwidth if down_bandwidth is None else down_bandwidth, m)),
+            trace=tuple(cls._norm_trace(tr) for tr in (trace or ())),
         )
+
+    @staticmethod
+    def _norm_trace(tr):
+        rows = np.asarray(tr, np.float64)
+        if rows.ndim != 2 or rows.shape[1] not in (2, 3) or not rows.size:
+            raise ValueError(
+                "a bandwidth trace is (t_seconds, up_mbit_s[, down_mbit_s]) "
+                f"rows, got shape {rows.shape}")
+        if np.any(np.diff(rows[:, 0]) < 0):
+            raise ValueError("bandwidth trace times must be non-decreasing")
+        up = rows[:, 1] * _BYTES_PER_MBIT
+        down = (rows[:, 2] * _BYTES_PER_MBIT if rows.shape[1] == 3 else up)
+        if np.any(up <= 0) or np.any(down <= 0):
+            raise ValueError("bandwidth trace rates must be positive")
+        return (tuple(rows[:, 0]), tuple(up), tuple(down))
+
+    def _bw(self, worker: int, now: float, down: bool) -> float:
+        if self.trace:
+            t, up, dn = self.trace[worker % len(self.trace)]
+            return float(np.interp(now, t, dn if down else up))
+        return (self.down_bandwidth if down else self.bandwidth)[worker]
 
     def _xfer(self, latency: float, bw: float, nbytes: float) -> float:
         if nbytes <= 0:
             return 0.0
         return latency + (0.0 if math.isinf(bw) else nbytes / bw)
 
-    def up_time(self, worker: int, nbytes: float) -> float:
-        return self._xfer(self.latency_s[worker], self.bandwidth[worker],
-                          nbytes)
-
-    def down_time(self, worker: int, nbytes: float) -> float:
+    def up_time(self, worker: int, nbytes: float,
+                now: float = 0.0) -> float:
         return self._xfer(self.latency_s[worker],
-                          self.down_bandwidth[worker], nbytes)
+                          self._bw(worker, now, down=False), nbytes)
+
+    def down_time(self, worker: int, nbytes: float,
+                  now: float = 0.0) -> float:
+        return self._xfer(self.latency_s[worker],
+                          self._bw(worker, now, down=True), nbytes)
 
 
 @dataclass(frozen=True)
@@ -191,8 +230,8 @@ PROFILES = ("zero", "lan", "wan", "hetero")
 
 
 def network_profile(name: str, m: int, *, eval_s: float = 1e-3,
-                    seed: int = 0,
-                    second_eval_factor: float = 1.0) -> NetworkProfile:
+                    seed: int = 0, second_eval_factor: float = 1.0,
+                    trace=None) -> NetworkProfile:
     """The scenario presets (`--network` on the launcher, swept by
     ``benchmarks.ablations.sweep_network``):
 
@@ -216,9 +255,19 @@ def network_profile(name: str, m: int, *, eval_s: float = 1e-3,
     ``eval_s`` rescales the compute grain (a real LM step is not a logreg
     step); all link numbers are absolute. ``second_eval_factor`` is
     forwarded to :class:`ComputeModel` (see there — the fused/grouped
-    second-eval discount).
+    second-eval discount). ``trace`` overlays TIME-VARYING bandwidth on
+    any preset: per-worker ``(t_seconds, up_mbit_s[, down_mbit_s])`` row
+    series (see :class:`LinkModel`) replace the preset's static rates
+    while keeping its latency — e.g. ``wan`` latency with a measured
+    diurnal uplink trace.
     """
     sef = second_eval_factor
+    if trace is not None:
+        prof = network_profile(name, m, eval_s=eval_s, seed=seed,
+                               second_eval_factor=sef)
+        link = LinkModel.make(m, latency_s=prof.link.latency_s,
+                              trace=trace)
+        return NetworkProfile(name=name, compute=prof.compute, link=link)
     if name == "zero":
         return NetworkProfile(
             name=name,

@@ -26,7 +26,16 @@ Two runtimes lift the engine's lock-step rounds onto simulated time:
 The link models price bytes via each strategy's ``bytes_per_upload``, so
 compressed wires (laq 8-bit, topk sparse) are *faster*, not just cheaper
 in rounds; the downlink broadcast of θ is charged dense (``4n`` bytes by
-default) every download.
+default) every download. Transfers are priced at the bandwidth in effect
+at their start time (``now=`` on the link calls), so trace-driven
+time-varying links (``LinkModel.trace``) shape both runtimes.
+
+Federated scale rides the cohort-virtualized worker plane:
+``cohort_size > 0`` (barrier) samples C workers per round through the
+host :class:`repro.core.flat.WorkerPool` — device worker-plane state is
+O(C·n), so M = 10⁴ workers runs where the dense (M, n_flat) plane cannot
+— and ``host_pool=True`` (async) streams single worker rows from the
+same pool instead of holding the (M, n_flat) plane on device.
 """
 from __future__ import annotations
 
@@ -38,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import flat as F
-from repro.core.engine import CADAEngine
+from repro.core.engine import CADAEngine, sample_cohorts
 from repro.core.rules import CommRule
 from repro.optim.fused import FusedAMSGrad
 from repro.sim.clock import NetworkProfile, network_profile
@@ -63,6 +72,15 @@ class SimConfig:
     #                               effective M× learning rate (Adam steps
     #                               are ~lr-sized whatever ∇'s magnitude)
     #                               and visibly oscillates
+    cohort_size: int = 0          # barrier mode: > 0 runs the FEDERATED
+    #                               cohort plane — C sampled workers per
+    #                               round through the host WorkerPool,
+    #                               O(C·n) device state, rounds priced
+    #                               over cohort members only
+    host_pool: bool = False       # async mode: per-worker rows (grads +
+    #                               pooled extras) live in a numpy
+    #                               WorkerPool instead of an (M, n_flat)
+    #                               device plane
     seed: int = 0
 
     def __post_init__(self):
@@ -71,6 +89,18 @@ class SimConfig:
                              f"got {self.mode!r}")
         if self.async_tau < 0:
             raise ValueError("async_tau must be >= 0")
+        if self.cohort_size < 0:
+            raise ValueError("cohort_size must be >= 0")
+        if self.cohort_size and self.mode != "barrier":
+            raise ValueError("cohort_size is a barrier-mode knob (async "
+                             "workers free-run; use host_pool to bound "
+                             "async device state instead)")
+        if self.host_pool and self.mode != "async":
+            raise ValueError("host_pool is an async-mode knob (barrier "
+                             "federated runs get the pool via cohort_size)")
+        if self.cohort_size and self.participation != 1.0:
+            raise ValueError("cohort_size and participation are two ways "
+                             "to sample the same thing — set one")
         if self.mode == "async" and self.participation != 1.0:
             raise ValueError(
                 "participation sampling is a barrier-mode knob (async "
@@ -132,12 +162,21 @@ class SimRuntime:
                 else float(self.cfg.download_bytes))
         return up, down
 
-    def run(self, params, batches) -> SimResult:
+    def run(self, params, batches, rounds: int | None = None) -> SimResult:
         """Simulate over pre-sampled batches with leading axis
         (steps, M, ...). Barrier mode runs exactly ``steps`` rounds; async
         mode runs until the server has applied ``steps`` updates (batches
-        are cycled per worker as needed)."""
+        are cycled per worker as needed).
+
+        Federated cohort mode (``cohort_size > 0``) additionally accepts a
+        CALLABLE ``batches``: ``batches(round_idx, cohort) -> (C, b, ...)``
+        leaves — at M = 10⁴ a dense (steps, M, b, ·) batch plane is the
+        memory wall, so the sampler materializes one cohort's rows at a
+        time. ``rounds`` is required with a callable (arrays carry their
+        own step count)."""
         if self.cfg.mode == "barrier":
+            if self.cfg.cohort_size:
+                return self._run_barrier_cohort(params, batches, rounds)
             return self._run_barrier(params, batches)
         return self._run_async(params, batches)
 
@@ -175,9 +214,11 @@ class SimRuntime:
             for w in range(self.m):
                 if not pmasks[k, w]:
                     continue
-                dt_down = link.down_time(w, down_bytes)
+                dt_down = link.down_time(w, down_bytes, now=t)
                 dt_comp = compute.iter_time(w, k, t + dt_down, evals)
-                dt_up = link.up_time(w, up_bytes) if masks[k, w] else 0.0
+                dt_up = (link.up_time(w, up_bytes,
+                                      now=t + dt_down + dt_comp)
+                         if masks[k, w] else 0.0)
                 busy[w] += dt_comp
                 bytes_down += down_bytes
                 if masks[k, w]:
@@ -198,6 +239,88 @@ class SimRuntime:
             final_params=fst.params,
             upload_masks=masks, staleness=staleness,
             participation_masks=pmasks, metrics=mets)
+
+    # -------------------------------------------- barrier, federated cohort
+    def _run_barrier_cohort(self, params, batches,
+                            rounds: int | None = None) -> SimResult:
+        """Federated barrier rounds on the cohort-virtualized plane.
+
+        Per round a fresh C-worker cohort (seeded like
+        :class:`ParticipationModel`: independent per-round draws) is
+        gathered from the host :class:`repro.core.flat.WorkerPool`, runs
+        one :func:`repro.core.flat.flat_cohort_round`, and scatters back —
+        device worker-plane state is O(C·n) whatever M is. The round is
+        priced over COHORT MEMBERS ONLY (non-sampled workers are idle:
+        no download, no compute, no upload), so wall-clock reflects the
+        federated cross-device regime rather than the all-M cluster.
+        Numerically each round is bit-exact to the dense plane run with
+        the cohort's indicator mask as participation (the
+        tests/test_cohort_plane.py parity gate)."""
+        eng, cfg = self.engine, self.cfg
+        compute, link = cfg.network.compute, cfg.network.link
+        c = cfg.cohort_size
+        if c > self.m:
+            raise ValueError(f"cohort_size {c} > n_workers {self.m}")
+        if callable(batches):
+            if not rounds:
+                raise ValueError("a callable batch sampler needs rounds=")
+            steps = int(rounds)
+        else:
+            steps = jax.tree.leaves(batches)[0].shape[0]
+        cohorts = sample_cohorts(self.m, c, steps, seed=cfg.seed)
+
+        st, pool = eng.init_cohort(params)
+        n = eng._layout.n
+        up_bytes, down_bytes = self._byte_costs(n)
+        evals = eng.strategy.grad_evals_per_iter
+
+        t = 0.0
+        t_end = np.zeros(steps)
+        busy = np.zeros(self.m)
+        bytes_up = bytes_down = 0.0
+        masks = np.zeros((steps, c), bool)
+        stal = np.zeros((steps, c), np.int64)
+        losses = np.zeros(steps, np.float64)
+        grad_evals = 0
+        max_stale = 0
+        for k in range(steps):
+            cohort = cohorts[k]
+            batch = (batches(k, cohort) if callable(batches)
+                     else jax.tree.map(lambda x: x[k][cohort], batches))
+            st, mets = eng.step_cohort(st, pool, batch, cohort)
+            masks[k] = np.asarray(mets["upload_mask"])
+            stal[k] = np.asarray(mets["staleness"])
+            losses[k] = float(mets["loss"])
+            grad_evals += int(mets["grad_evals"])
+            max_stale = max(max_stale, int(mets["max_staleness"]))
+            finish = t
+            for j, w in enumerate(int(x) for x in cohort):
+                dt_down = link.down_time(w, down_bytes, now=t)
+                dt_comp = compute.iter_time(w, k, t + dt_down, evals)
+                dt_up = (link.up_time(w, up_bytes,
+                                      now=t + dt_down + dt_comp)
+                         if masks[k, j] else 0.0)
+                busy[w] += dt_comp
+                bytes_down += down_bytes
+                if masks[k, j]:
+                    bytes_up += up_bytes
+                finish = max(finish, t + dt_down + dt_comp + dt_up)
+            t = finish + cfg.server_update_s
+            t_end[k] = t
+
+        wall = float(t)
+        return SimResult(
+            mode="barrier", profile=cfg.network.name, steps=steps,
+            wall_s=wall, times=t_end, loss_times=t_end, losses=losses,
+            uploads=int(masks.sum()), grad_evals=grad_evals,
+            bytes_up=bytes_up, bytes_down=bytes_down,
+            utilization=busy / wall if wall > 0 else np.zeros(self.m),
+            max_staleness=max_stale,
+            final_params=st.params,
+            upload_masks=masks, staleness=stal,
+            metrics={"cohorts": cohorts,
+                     "host_pool_bytes": pool.nbytes,
+                     "device_worker_plane_bytes": pool.device_row_bytes(c)})
 
     # -------------------------------------------------------------- async
     def _slice_extras(self, extras: dict, w: int, stale_point=None) -> dict:
@@ -325,6 +448,20 @@ class SimRuntime:
         worker_grads, extras = st.comm.worker_grads, st.comm.extras
         k_srv = 0
 
+        # host_pool: the O(M·n) per-worker rows (grads + pooled extras)
+        # move to a numpy WorkerPool; each gate streams ONE row in/out, so
+        # async device state is O(n) + shared extras however large M gets
+        pool = None
+        pooled = ()
+        if cfg.host_pool:
+            pooled = eng.strategy.pooled_extras()
+            planes = {"worker_grads": np.asarray(worker_grads)}
+            extras = dict(extras)
+            for name in pooled:
+                planes[name] = np.asarray(extras.pop(name))
+            pool = F.WorkerPool(planes)
+            worker_grads = None
+
         # per-worker copies of θ (everyone starts at the init point, free)
         wparams = [srv_params] * self.m
         wflat = [theta] * self.m
@@ -360,12 +497,24 @@ class SimRuntime:
                     lambda x: x[p.local_iter % n_batches, w:w + 1], batches)
                 stale = p.staleness(k_srv)
                 p.max_staleness = max(p.max_staleness, stale)
+                row_view = self._slice_extras(extras, w, stale_eval[w])
+                if pool is not None:
+                    wg_in = jnp.asarray(pool.planes["worker_grads"][w:w + 1])
+                    row_view.update(
+                        {name: jnp.asarray(pool.planes[name][w:w + 1])
+                         for name in pooled})
+                else:
+                    wg_in = worker_grads[w:w + 1]
                 loss, upload, wire, wg_row, extras_row = gate(
-                    wparams[w], wflat[w], batch1,
-                    worker_grads[w:w + 1],
-                    jnp.full((1,), stale, jnp.int32), diff_hist,
-                    self._slice_extras(extras, w, stale_eval[w]))
-                worker_grads = worker_grads.at[w].set(wg_row)
+                    wparams[w], wflat[w], batch1, wg_in,
+                    jnp.full((1,), stale, jnp.int32), diff_hist, row_view)
+                if pool is not None:
+                    pool.scatter(np.asarray([w]),
+                                 {"worker_grads": wg_row[None],
+                                  **{name: extras_row[name]
+                                     for name in pooled}})
+                else:
+                    worker_grads = worker_grads.at[w].set(wg_row)
                 extras = self._merge_extras(extras, extras_row, w)
                 loss_t.append(t)
                 loss_v.append(float(loss))
@@ -382,12 +531,12 @@ class SimRuntime:
                     # evaluated (post_upload's θ̂_m ← θ^k, async form)
                     stale_eval[w] = wparams[w]
                     p.bytes_up += up_bytes
-                    q.push(t + link.up_time(w, up_bytes), UPLOAD_ARRIVE, w,
-                           wire=wire)
+                    q.push(t + link.up_time(w, up_bytes, now=t),
+                           UPLOAD_ARRIVE, w, wire=wire)
                 else:
                     p.since_upload += 1
                     p.bytes_down += down_bytes
-                    q.push(t + link.down_time(w, down_bytes),
+                    q.push(t + link.down_time(w, down_bytes, now=t),
                            DOWNLOAD_DONE, w)
 
             elif ev.kind == UPLOAD_ARRIVE:
@@ -399,7 +548,9 @@ class SimRuntime:
                 p.upload_version = k_srv
                 p.bytes_down += down_bytes
                 q.push(t + cfg.server_update_s
-                       + link.down_time(w, down_bytes), DOWNLOAD_DONE, w)
+                       + link.down_time(w, down_bytes,
+                                        now=t + cfg.server_update_s),
+                       DOWNLOAD_DONE, w)
 
             elif ev.kind == DOWNLOAD_DONE:
                 wparams[w], wflat[w] = srv_params, theta
@@ -426,15 +577,17 @@ class SimRuntime:
 def simulate(loss_fn, rule: CommRule, params, batches, *,
              n_workers: int, network: str | NetworkProfile = "zero",
              mode: str = "barrier", async_tau: int = 0,
-             participation: float = 1.0, lr: float = 0.01,
-             eval_s: float = 1e-3, seed: int = 0,
+             participation: float = 1.0, cohort_size: int = 0,
+             host_pool: bool = False, rounds: int | None = None,
+             lr: float = 0.01, eval_s: float = 1e-3, seed: int = 0,
              optimizer=None, interpret=None) -> SimResult:
     """One-call front door: build the profile + config + runtime and run."""
     if isinstance(network, str):
         network = network_profile(network, n_workers, eval_s=eval_s,
                                   seed=seed)
     cfg = SimConfig(network=network, mode=mode, async_tau=async_tau,
-                    participation=participation, seed=seed)
+                    participation=participation, cohort_size=cohort_size,
+                    host_pool=host_pool, seed=seed)
     rt = SimRuntime(loss_fn, rule, n_workers, cfg, lr=lr,
                     optimizer=optimizer, interpret=interpret)
-    return rt.run(params, batches)
+    return rt.run(params, batches, rounds=rounds)

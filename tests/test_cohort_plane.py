@@ -1,0 +1,331 @@
+"""The cohort-virtualized worker plane (core/flat.py::flat_cohort_round).
+
+The contract under test: a cohort round — only the C sampled workers'
+rows on device, gathered from the host WorkerPool, computed as a
+(C, n_flat) plane, scattered back, with the server holding only the
+INCREMENTAL eq. (3) aggregate — is BIT-EXACT against the dense plane run
+with ``participation`` = the cohort indicator mask, for every registered
+rule. The order-fixed row accumulation (``kops.eq3_row_mean``) is what
+makes the aggregate exact: masked zero rows are IEEE-754 no-ops, so the
+dense masked mean and the C-row cohort sum agree bit-for-bit in fp32.
+
+Also here: the pool gather/scatter round-trip property (bf16 planes and
+error-feedback residuals included), the ``resum_every`` drift guard, the
+pool checkpoint reshard round-trip, and the M=10⁴ federated smoke the CI
+``federated-smoke`` leg runs under the 6 GiB cap.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm, flat as F
+from repro.core.engine import (CADAEngine, cohorts_to_participation,
+                               make_cohort_sampler, make_sampler,
+                               sample_cohorts)
+from repro.core.rules import RULES, CommRule
+from repro.data.partition import pad_to_matrix, uniform_partition
+from repro.data.synthetic import ijcnn1_like
+from repro.models.small import logreg_init, logreg_loss, mlp_init, mlp_loss
+from repro.optim.fused import FusedAMSGrad
+
+M = 8
+C = 3
+STEPS = 24
+
+ARMS = RULES + ("topk_sparse",)
+
+
+def _rule(kind):
+    if kind == "topk_sparse":
+        return CommRule(kind="topk", c=5.0, d_max=4, max_delay=6,
+                        topk_frac=0.5, sparse_wire=True)
+    kw = dict(kind=kind, c=5.0, d_max=4, max_delay=6)
+    if kind == "topk":
+        kw["topk_frac"] = 0.5
+    if kind == "avp":
+        kw.update(period_min=1, period_max=4)
+    return CommRule(**kw)
+
+
+def _problem(m=M, steps=STEPS, seed=2, n=400, batch=8):
+    ds = ijcnn1_like(n=n)
+    mtx = pad_to_matrix(uniform_partition(ds.n, m, seed=0))
+    sample = make_sampler(ds.x, ds.y, mtx, batch)
+    params = logreg_init(None, 22, 2)
+    batches = jax.vmap(sample)(
+        jax.random.split(jax.random.PRNGKey(seed), steps))
+    return params, batches
+
+
+def _dense_run(rule, params, batches, pmasks, m=M):
+    eng = CADAEngine(logreg_loss, FusedAMSGrad(lr=0.05), rule, m)
+    st, mets = jax.jit(eng.run)(eng.init(params), batches,
+                                jnp.asarray(pmasks))
+    return st, mets
+
+
+def _cohort_run(rule, params, batches, cohorts, m=M, resum_every=0):
+    eng = CADAEngine(logreg_loss, FusedAMSGrad(lr=0.05), rule, m,
+                     resum_every=resum_every)
+    st, pool = eng.init_cohort(params)
+    cohort_batches = [jax.tree.map(lambda x: x[i][cohorts[i]], batches)
+                      for i in range(cohorts.shape[0])]
+    st, mets = eng.run_cohort(st, pool, cohort_batches, cohorts)
+    return st, pool, mets, eng
+
+
+def _assert_cohort_parity(st_c, pool, mets_c, st_d, mets_d, cohorts, rule,
+                          what):
+    dm = np.asarray(mets_d["upload_mask"])            # (steps, M)
+    for i, mm in enumerate(mets_c):
+        np.testing.assert_array_equal(
+            np.asarray(mm["upload_mask"]), dm[i, cohorts[i]],
+            err_msg=f"{what}: round {i} masks diverged")
+        off = np.ones(dm.shape[1], bool)
+        off[cohorts[i]] = False
+        assert not dm[i, off].any(), \
+            f"{what}: dense oracle uploaded outside the cohort at round {i}"
+    np.testing.assert_array_equal(
+        np.asarray(st_c.server.staleness), np.asarray(st_d.comm.staleness),
+        err_msg=f"{what}: staleness diverged")
+    # satellite: the INCREMENTAL aggregate is bit-exact fp32 vs the
+    # dense-plane masked mean, accumulated over every round
+    np.testing.assert_array_equal(
+        np.asarray(st_c.server.nabla), np.asarray(st_d.comm.nabla),
+        err_msg=f"{what}: incremental nabla diverged from dense masked mean")
+    np.testing.assert_array_equal(
+        pool.planes["worker_grads"], np.asarray(st_d.comm.worker_grads),
+        err_msg=f"{what}: pooled worker_grads diverged")
+    np.testing.assert_array_equal(
+        np.asarray(st_c.server.diff_hist), np.asarray(st_d.comm.diff_hist),
+        err_msg=f"{what}: diff_hist diverged")
+    for a, b in zip(jax.tree.leaves(st_c.params),
+                    jax.tree.leaves(st_d.params)):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            err_msg=f"{what}: params diverged")
+    # pooled planes vs the dense extras; server extras vs the dense extras
+    strat = comm.strategy_for(rule)
+    pooled = strat.pooled_extras()
+    for name in pooled:
+        np.testing.assert_array_equal(
+            pool.planes[name], np.asarray(st_d.comm.extras[name]),
+            err_msg=f"{what}: pooled extras[{name}] diverged")
+    for name, val in st_c.server.extras.items():
+        for a, b in zip(jax.tree.leaves(val),
+                        jax.tree.leaves(st_d.comm.extras[name])):
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                err_msg=f"{what}: server extras[{name}] diverged")
+
+
+# -------------------------------------------- cohort vs dense (all rules)
+
+@pytest.mark.parametrize("kind", ARMS)
+def test_cohort_matches_dense_all_rules(kind):
+    """The acceptance gate: cohort plane vs dense plane + participation,
+    bit-exact masks/staleness/params/nabla/worker_grads/extras, for every
+    registered rule (+ the true-sparse topk wire)."""
+    rule = _rule(kind)
+    params, batches = _problem()
+    cohorts = sample_cohorts(M, C, STEPS, seed=5)
+    pmasks = cohorts_to_participation(cohorts, M)
+    st_d, m_d = _dense_run(rule, params, batches, pmasks)
+    st_c, pool, m_c, _ = _cohort_run(rule, params, batches, cohorts)
+    _assert_cohort_parity(st_c, pool, m_c, st_d, m_d, cohorts, rule,
+                          f"cohort {kind}")
+
+
+def test_cohort_masks_are_mixed_meta():
+    """Meta-check: the cada2 parity run exercises both upload branches."""
+    rule = _rule("cada2")
+    params, batches = _problem()
+    cohorts = sample_cohorts(M, C, STEPS, seed=5)
+    _, _, mets, _ = _cohort_run(rule, params, batches, cohorts)
+    total = int(sum(np.asarray(m["uploads"]) for m in mets))
+    assert 0 < total < STEPS * C, total
+
+
+# ------------------------------------- incremental ∇̄ property (200 rounds)
+
+@pytest.mark.parametrize("kind", RULES)
+def test_incremental_nabla_bit_exact_200_rounds(kind):
+    """Satellite: ∇̄ += Σ_cohort δ_m / M accumulated over 200 partial-
+    participation rounds lands bit-exactly on the dense plane's masked
+    mean — no drift guard needed for exactness, only for fp headroom."""
+    steps = 200
+    rule = _rule(kind)
+    params, batches = _problem(steps=steps, n=240, batch=4)
+    cohorts = sample_cohorts(M, C, steps, seed=11)
+    pmasks = cohorts_to_participation(cohorts, M)
+    st_d, _ = _dense_run(rule, params, batches, pmasks)
+    st_c, pool, _, _ = _cohort_run(rule, params, batches, cohorts)
+    np.testing.assert_array_equal(
+        np.asarray(st_c.server.nabla), np.asarray(st_d.comm.nabla),
+        err_msg=f"{kind}: incremental nabla drifted within 200 rounds")
+    np.testing.assert_array_equal(
+        pool.planes["worker_grads"], np.asarray(st_d.comm.worker_grads))
+    for a, b in zip(jax.tree.leaves(st_c.params),
+                    jax.tree.leaves(st_d.params)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# -------------------------------------------------- pool round-trip property
+
+@pytest.mark.parametrize("dtype", (np.float32, jnp.bfloat16),
+                         ids=("f32", "bf16"))
+def test_pool_gather_scatter_roundtrip(dtype):
+    """pool → (C, n_flat) → pool is bit-exact, residual planes and bf16
+    storage included; non-cohort rows are never touched."""
+    rng = np.random.default_rng(0)
+    m, n_flat = 32, 48
+    dt = np.dtype(dtype)
+    planes = {
+        "worker_grads": rng.normal(size=(m, n_flat)).astype(dt),
+        "residual": rng.normal(size=(m, n_flat)).astype(dt),
+    }
+    pool = F.WorkerPool({k: v.copy() for k, v in planes.items()})
+    cohort = np.sort(rng.choice(m, 7, replace=False)).astype(np.int32)
+
+    rows = pool.gather(cohort)
+    for name in planes:
+        assert rows[name].shape == (7, n_flat)
+        np.testing.assert_array_equal(np.asarray(rows[name]),
+                                      planes[name][cohort])
+    # identity scatter: the whole pool is bit-identical
+    pool.scatter(cohort, rows)
+    for name in planes:
+        np.testing.assert_array_equal(pool.planes[name], planes[name])
+    # real update: cohort rows take the new values, others untouched
+    new_rows = {name: jnp.asarray(rng.normal(size=(7, n_flat)),
+                                  dtype=rows[name].dtype)
+                for name in planes}
+    pool.scatter(cohort, new_rows)
+    off = np.setdiff1d(np.arange(m), cohort)
+    for name in planes:
+        np.testing.assert_array_equal(pool.planes[name][cohort],
+                                      np.asarray(new_rows[name]))
+        np.testing.assert_array_equal(pool.planes[name][off],
+                                      planes[name][off])
+
+
+def test_pool_split_per_rule():
+    """Which state lands where: O(M·n) planes pool, everything else stays
+    on device — and error_feedback=False pools no residual at all."""
+    params = logreg_init(None, 22, 2)
+    lay = F.layout_of(params)
+    want_pool = {"always": set(), "lag": set(), "cada2": set(),
+                 "cinn": set(), "avp": set(),
+                 "cada1": {"worker_delta"}, "laq": {"residual"},
+                 "topk": {"residual"}}
+    for kind, extra in want_pool.items():
+        strat = comm.strategy_for(_rule(kind))
+        server, pool = F.init_cohort_state(strat, lay, params, M)
+        assert set(pool.planes) == {"worker_grads"} | extra, kind
+        for name, val in server.extras.items():
+            for leaf in jax.tree.leaves(val):
+                assert leaf.shape[:2] != (M, lay.n_flat), (kind, name)
+    strat = comm.strategy_for(CommRule(kind="laq", error_feedback=False))
+    _, pool = F.init_cohort_state(strat, lay, params, M)
+    assert set(pool.planes) == {"worker_grads"}
+
+
+# ------------------------------------------------------------- drift guard
+
+def test_drift_guard_resum():
+    """``resum_every``: after a guard round the server aggregate equals
+    the fp64 pool mean exactly (the invariant the guard restores), and
+    the unguarded incremental aggregate sits within fp32 rounding of
+    that invariant (what makes the guard a no-op in exact arithmetic —
+    the correction it applies is pure accumulated rounding noise, so a
+    trajectory-level comparison would only measure chaos)."""
+    rule = _rule("cada2")
+    params, batches = _problem(steps=20)
+    cohorts = sample_cohorts(M, C, 20, seed=3)
+    st_g, pool_g, mets_g, _ = _cohort_run(rule, params, batches, cohorts,
+                                          resum_every=5)
+    np.testing.assert_array_equal(np.asarray(st_g.server.nabla),
+                                  pool_g.resum_nabla())
+    assert np.isfinite(np.asarray([m["loss"] for m in mets_g])).all()
+    st_u, pool_u, _, _ = _cohort_run(rule, params, batches, cohorts)
+    incr = np.asarray(st_u.server.nabla, np.float64)
+    true = pool_u.resum_nabla().astype(np.float64)
+    # accumulated fp32 rounding over 20 rounds of O(1e-1) wire addends
+    # lands around 4e-8 here (deterministic seeds); 1e-6 is ~25x headroom
+    # while still catching any real aggregation bug (those are O(addend))
+    assert float(np.max(np.abs(incr - true))) < 1e-6
+
+
+# ------------------------------------------------- checkpoint round-trip
+
+def test_pool_checkpoint_reshard_roundtrip(tmp_path):
+    """The pool's (M, n_flat) numpy planes ride checkpoint/io.py as
+    ordinary flat worker planes: restoring into a template cut for a
+    different shard count re-pads the flat axis, true entries bit-exact."""
+    import repro.checkpoint.io as ckpt
+    params = logreg_init(None, 22, 2)
+    lay_src = F.layout_of(params)
+    lay_dst = F.layout_of(params, shards=16)
+    assert lay_src.n_flat != lay_dst.n_flat
+    rng = np.random.default_rng(1)
+    strat = comm.strategy_for(_rule("laq"))
+    _, pool = F.init_cohort_state(strat, lay_src, params, M)
+    for name in pool.planes:
+        pool.planes[name][:, :lay_src.n] = rng.normal(
+            size=(M, lay_src.n)).astype(np.float32)
+    ckpt.save(str(tmp_path / "pool"), {"pool": pool.state_dict()}, step=3,
+              flat_meta=lay_src)
+    template = {"pool": {name: np.zeros((M, lay_dst.n_flat), np.float32)
+                         for name in pool.planes}}
+    restored, step_no = ckpt.restore(str(tmp_path / "pool"), template)
+    assert step_no == 3
+    _, pool2 = F.init_cohort_state(strat, lay_dst, params, M)
+    pool2.load_state_dict(restored["pool"])
+    for name in pool.planes:
+        got = pool2.planes[name]
+        assert got.shape == (M, lay_dst.n_flat)
+        np.testing.assert_array_equal(got[:, :lay_src.n],
+                                      pool.planes[name][:, :lay_src.n])
+        np.testing.assert_array_equal(got[:, lay_src.n:], 0.0)
+
+
+# ------------------------------------------- federated smoke (CI leg)
+
+def test_federated_smoke_m_10k_cohort():
+    """The federated-magnitude smoke the CI ``federated-smoke`` leg runs
+    under ulimit -v 6 GiB: M=10⁴ workers, C=64 cohort, the MLP problem —
+    impossible on the dense plane under the cap (the (steps, M, b, ·)
+    batch plane alone is ~8.4 GB at 300 steps), routine on the cohort
+    plane. Device worker-plane bytes must scale with C, not M."""
+    m, c, rounds = 10_000, 64, 6
+    rule = CommRule(kind="cada2", c=0.6, d_max=10, max_delay=100)
+    ds = ijcnn1_like(n=20_000)
+    mtx = pad_to_matrix(uniform_partition(ds.n, m, seed=0))
+    sample = make_cohort_sampler(ds.x, ds.y, mtx, 32)
+    params = mlp_init(jax.random.PRNGKey(7), 22, 64, 2)
+    eng = CADAEngine(mlp_loss, FusedAMSGrad(lr=0.05), rule, m)
+    st, pool = eng.init_cohort(params)
+
+    n_flat = eng._layout.n_flat
+    # the O(C·n) vs O(M·n) split, as numbers
+    assert pool.nbytes == m * n_flat * 4                 # host side
+    assert pool.device_row_bytes(c) == c * n_flat * 4    # device side
+    assert pool.device_row_bytes(c) * (m // c) <= pool.nbytes
+    # nothing O(M·n) on device: server extras + state are ring/scalars
+    for leaf in jax.tree.leaves((st.server, st.opt_state, st.params_flat)):
+        assert not (leaf.ndim >= 2 and leaf.shape[0] == m and
+                    leaf.shape[-1] == n_flat), leaf.shape
+
+    cohorts = sample_cohorts(m, c, rounds, seed=0)
+    mets = []
+    for i in range(rounds):
+        batch = sample(jax.random.PRNGKey(200 + i), jnp.asarray(cohorts[i]))
+        st, mm = eng.step_cohort(st, pool, batch, cohorts[i])
+        mets.append(mm)
+    losses = np.asarray([m_["loss"] for m_ in mets])
+    assert np.isfinite(losses).all()
+    assert int(sum(np.asarray(m_["uploads"]) for m_ in mets)) > 0
+    # round 0 cohort force-uploads (staleness starts at the cap)
+    assert int(np.asarray(mets[0]["uploads"])) == c

@@ -363,6 +363,134 @@ def test_summarize_reports_time_to_target():
     assert summarize(res, target_loss=1e-9)["time_to_target_s"] is None
 
 
+def test_link_trace_interpolates_and_holds():
+    """Trace-driven bandwidth: (t, up_mbit_s, down_mbit_s) rows, linear
+    interpolation between points, edge hold outside, cycled per worker."""
+    link = LinkModel.make(3, latency_s=0.0,
+                          trace=[[(0.0, 8.0, 80.0), (10.0, 16.0, 160.0)]])
+    nb = 1e6                                     # send one MB
+    # 8 Mbit/s = 1e6 B/s at t=0; 12 Mbit/s midway; 16 Mbit/s held after
+    assert link.up_time(0, nb, now=0.0) == pytest.approx(1.0)
+    assert link.up_time(0, nb, now=5.0) == pytest.approx(1 / 1.5)
+    assert link.up_time(0, nb, now=99.0) == pytest.approx(0.5)
+    assert link.up_time(0, nb) == pytest.approx(1.0)   # now defaults to 0
+    # downlink reads the third column (10x fatter here)
+    assert link.down_time(0, nb, now=0.0) == pytest.approx(0.1)
+    # one trace, three workers: cycles like ComputeModel traces
+    assert link.up_time(2, nb, now=0.0) == link.up_time(0, nb, now=0.0)
+    # two-column rows mean a symmetric link
+    sym = LinkModel.make(1, trace=[[(0.0, 8.0)]])
+    assert sym.down_time(0, nb) == sym.up_time(0, nb) == pytest.approx(1.0)
+    with pytest.raises(ValueError, match="non-decreasing"):
+        LinkModel.make(1, trace=[[(1.0, 8.0), (0.0, 8.0)]])
+    with pytest.raises(ValueError, match="positive"):
+        LinkModel.make(1, trace=[[(0.0, -1.0)]])
+
+
+def test_network_profile_trace_hook():
+    """``network_profile(..., trace=)`` overlays time-varying bandwidth on
+    a preset, keeping its latency and compute model."""
+    tr = [[(0.0, 1.0), (100.0, 2.0)]]
+    prof = network_profile("wan", 2, trace=tr)
+    plain = network_profile("wan", 2)
+    assert prof.link.latency_s == plain.link.latency_s
+    assert prof.compute.eval_s == plain.compute.eval_s
+    nb = 1.25e5                                  # = 1 Mbit in bytes
+    lat = plain.link.latency_s[0]
+    assert prof.link.up_time(0, nb, now=0.0) == pytest.approx(lat + 1.0)
+    assert prof.link.up_time(0, nb, now=100.0) == pytest.approx(lat + 0.5)
+    # a diurnal trace changes what a round costs over simulated time
+    params, batches = _problem(iters=6, m=2)
+    rule = CommRule(kind="always", c=0.6, d_max=10, max_delay=100)
+    res = simulate(logreg_loss, rule, params, batches, n_workers=2,
+                   network=prof, mode="barrier", lr=0.01)
+    assert np.isfinite(res.losses).all() and res.wall_s > 0
+
+
+# ------------------------------------------------ federated cohort plane
+
+def test_cohort_sampling_matches_participation_model():
+    """``sample_cohorts`` and ``ParticipationModel`` key their draws the
+    same way ((seed, round) rng, choice without replacement), so a cohort
+    run and a participation run sample THE SAME workers each round."""
+    from repro.core.engine import cohorts_to_participation, sample_cohorts
+    m, frac, steps, seed = 8, 0.4, 10, 3
+    pm = ParticipationModel(m, frac, seed=seed)
+    cohorts = sample_cohorts(m, pm.k_active, steps, seed=seed)
+    np.testing.assert_array_equal(cohorts_to_participation(cohorts, m),
+                                  pm.masks(steps))
+
+
+def test_federated_cohort_sim_prices_cohort_only():
+    """``cohort_size``: the federated barrier mode — C-worker rounds on
+    the host-pool cohort plane, wall-clock priced over cohort members
+    only, O(C·n)/O(M·n) byte split reported in the metrics."""
+    m, c, rounds = 32, 8, 10
+    params, _ = _problem(m=2, iters=1)           # params only
+    ds = ijcnn1_like(n=600)
+    mtx = pad_to_matrix(uniform_partition(ds.n, m, seed=0))
+    from repro.core.engine import make_cohort_sampler
+    sampler = make_cohort_sampler(ds.x, ds.y, mtx, 16)
+
+    def batches(k, cohort):
+        return sampler(jax.random.PRNGKey(100 + k), jnp.asarray(cohort))
+
+    rule = CommRule(kind="cada2", c=0.6, d_max=10, max_delay=50)
+    res = simulate(logreg_loss, rule, params, batches, n_workers=m,
+                   network="lan", mode="barrier", cohort_size=c,
+                   rounds=rounds, lr=0.01)
+    assert res.steps == rounds
+    assert res.upload_masks.shape == (rounds, c)
+    assert np.isfinite(res.losses).all()
+    assert res.metrics["cohorts"].shape == (rounds, c)
+    assert res.metrics["device_worker_plane_bytes"] * (m // c) \
+        <= res.metrics["host_pool_bytes"]
+    # only cohort members download: C per round, never M
+    n = sum(x.size for x in jax.tree.leaves(params))
+    assert res.bytes_down == pytest.approx(rounds * c * 4.0 * n)
+    # round 0: every first-sampled worker force-uploads (τ starts at cap)
+    assert res.upload_masks[0].all()
+    # array batches work too (small M): same plane, pre-sliced rows
+    params2, dense_batches = _problem(m=4, iters=5)
+    res2 = simulate(logreg_loss, rule, params2, dense_batches, n_workers=4,
+                    network="zero", mode="barrier", cohort_size=2, lr=0.01)
+    assert res2.steps == 5 and res2.upload_masks.shape == (5, 2)
+
+
+@pytest.mark.parametrize("kind", ("cada1", "laq"))
+def test_async_host_pool_matches_device_plane(kind):
+    """``host_pool``: streaming each gate's row through the numpy pool is
+    bit-exact with the device (M, n_flat) plane — same losses, same
+    uploads, same clock (cada1/laq are the pooled-extras rules)."""
+    params, batches = _problem(iters=10)
+    rule = CommRule(kind=kind, c=0.6, d_max=4, max_delay=6)
+    runs = [simulate(logreg_loss, rule, params, batches, n_workers=M,
+                     network="hetero", mode="async", async_tau=5,
+                     host_pool=hp, lr=0.01)
+            for hp in (False, True)]
+    np.testing.assert_array_equal(runs[0].losses, runs[1].losses)
+    np.testing.assert_array_equal(runs[0].loss_times, runs[1].loss_times)
+    assert runs[0].uploads == runs[1].uploads
+    assert runs[0].wall_s == runs[1].wall_s
+    for a, b in zip(jax.tree.leaves(runs[0].final_params),
+                    jax.tree.leaves(runs[1].final_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cohort_and_host_pool_config_validation():
+    net = network_profile("zero", 4)
+    with pytest.raises(ValueError, match="barrier-mode"):
+        SimConfig(network=net, mode="async", cohort_size=2)
+    with pytest.raises(ValueError, match="async-mode"):
+        SimConfig(network=net, mode="barrier", host_pool=True)
+    with pytest.raises(ValueError, match="two ways"):
+        SimConfig(network=net, cohort_size=2, participation=0.5)
+    cfg = SimConfig(network=net, cohort_size=8)
+    with pytest.raises(ValueError, match="cohort_size"):
+        SimRuntime(logreg_loss, CommRule(kind="always"), 4, cfg).run(
+            logreg_init(None, 22, 2), None, rounds=3)
+
+
 def test_async_requires_fused_optimizer():
     from repro.optim.adam import adam
     cfg = SimConfig(network=network_profile("zero", 2), mode="async")

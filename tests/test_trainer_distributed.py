@@ -186,6 +186,50 @@ def test_jit_train_step_on_host_mesh():
     assert np.isfinite(float(mets["loss"]))
 
 
+# ---------------------------------------------------- federated cohort step
+
+def test_cohort_train_step_runs_lm():
+    """The mesh-free federated LM step: O(C·n) device rows streamed
+    through the host pool, finite losses, first-sampled workers
+    force-uploading, and the O(M·n) plane never on device."""
+    from repro.core.engine import sample_cohorts
+    from repro.distributed.trainer import (init_cohort_train_state,
+                                           make_cohort_train_step)
+    m, c, rounds = 16, 4, 3
+    hp = TrainHParams(rule=CommRule(kind="cada2", c=0.5, d_max=4,
+                                    max_delay=10), microbatches=2)
+    step = make_cohort_train_step(CFG, hp, m)
+    st, pool = init_cohort_train_state(CFG, hp, m, jax.random.PRNGKey(3))
+    n_flat = pool.n_flat
+    assert pool.nbytes == m * n_flat * 4
+    assert pool.device_row_bytes(c) == c * n_flat * 4
+    for leaf in jax.tree.leaves((st.server, st.h, st.vhat)):
+        assert leaf.shape != (m, n_flat)
+    cohorts = sample_cohorts(m, c, rounds, seed=0)
+    for k in range(rounds):
+        full = _batch(jax.random.PRNGKey(50 + k), b=c * 2)
+        batch = worker_split(full, c)        # (C, b_c, ...) cohort rows
+        st, mets = step(st, pool, batch, cohorts[k])
+        assert np.isfinite(float(mets["loss"]))
+        assert mets["upload_mask"].shape == (c,)
+    assert int(st.step) == rounds
+    # round 0 force-uploads its whole cohort (staleness starts at the cap)
+    assert pool.planes["worker_grads"][cohorts[0]].any()
+    untouched = np.setdiff1d(np.arange(m), cohorts.ravel())
+    if untouched.size:
+        assert not pool.planes["worker_grads"][untouched].any()
+
+
+def test_cohort_train_state_requires_fused():
+    from repro.distributed.trainer import (init_cohort_train_state,
+                                           make_cohort_train_step)
+    hp = TrainHParams(rule=CommRule(kind="cada2"), fused=False)
+    with pytest.raises(ValueError, match="fused"):
+        init_cohort_train_state(CFG, hp, 4, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="fused"):
+        make_cohort_train_step(CFG, hp, 4)
+
+
 # --------------------------------------------------- local-update baselines
 
 def test_local_update_baselines_converge():
