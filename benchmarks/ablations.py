@@ -27,7 +27,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import run_engine_algo, save_rows
-from repro.core.comm import strategy_kinds
+from repro.core.comm import STRATEGIES, strategy_kinds
 from repro.core.engine import CADAEngine, make_sampler
 from repro.core.rules import CommRule
 from repro.data.partition import pad_to_matrix, uniform_partition
@@ -147,9 +147,13 @@ def sweep_rules(iters=400) -> list[dict]:
     sample, params = _problem()
     rows = []
     for kind in strategy_kinds():
-        eng = CADAEngine(logreg_loss, adam(lr=0.01),
-                         CommRule(kind=kind, c=0.6, d_max=10,
-                                  max_delay=100), M)
+        rule = CommRule(kind=kind, c=0.6, d_max=10, max_delay=100,
+                        local_lr=0.05, server_lr=0.01)
+        # delta-payload rules prescribe their own server (sgd(1.0) /
+        # server Adam); optimizer=None lets the engine resolve it. At the
+        # default H=1 they consume the same (M, b, ·) batch stream.
+        opt = None if STRATEGIES[kind].delta_payload else adam(lr=0.01)
+        eng = CADAEngine(logreg_loss, opt, rule, M)
         st = eng.init(params)
         batches = jax.vmap(sample)(
             jax.random.split(jax.random.PRNGKey(1), iters))
@@ -246,6 +250,33 @@ def sweep_network(iters=300, profiles=("lan", "wan", "hetero"),
         print(f"  {profile:6s} cada2/async t_target="
               f"{r['time_to_target_s']} s  wall={r['sim_wall_s']:.3f}s "
               f"util={r['utilization_mean']}")
+        # the local-steps cadence on the SAME batch stream, reshaped to
+        # (rounds, H, M, b, ·): where rounds are priced at H local steps
+        # per download/upload, delta payloads buy wall-clock on expensive
+        # links and lose it on free ones (recorded; run.py's bench_sim
+        # arm asserts the WAN win)
+        h_pad = 8
+        rounds = iters // h_pad
+        lb = jax.tree.map(
+            lambda x: x[:rounds * h_pad].reshape(
+                (rounds, h_pad) + x.shape[1:]), batches)
+        for name, lrule in (
+                ("local/H8", CommRule(
+                    kind="local_momentum", c=0.6, d_max=10, max_delay=100,
+                    local_steps=h_pad, local_lr=0.05)),
+                ("local/adapt", CommRule(
+                    kind="local_momentum", c=0.6, d_max=10, max_delay=100,
+                    adapt_local_steps=True, local_steps_max=h_pad,
+                    local_lr=0.05)),
+        ):
+            res = simulate(mlp_loss, lrule, params, lb, n_workers=M,
+                           network=profile, mode="barrier", lr=0.01)
+            rows.append({"sweep": "network", "profile": profile,
+                         "rule": name, **summarize(res, target_loss)})
+            r = rows[-1]
+            print(f"  {profile:6s} {name:11s} t_target="
+                  f"{r['time_to_target_s']} s  wall={r['sim_wall_s']:.3f}s "
+                  f"up={r['mbytes_up']:.4f}MB")
     # the subsystem's raison d'être, asserted: expensive uploads (WAN) make
     # a compressed wire a WALL-CLOCK win over always-upload (checkable
     # only when the wan profile was part of this sweep)

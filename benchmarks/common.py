@@ -17,7 +17,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import CADAEngine, make_sampler
-from repro.core.local_update import LocalUpdateEngine
 from repro.core.rules import CommRule
 from repro.optim.adam import adam
 from repro.optim.sgd import sgd
@@ -67,8 +66,14 @@ def run_engine_algo(algo: str, loss_fn, params, sample, *, m: int,
             ups.append(np.cumsum(np.asarray(mets["uploads"])))
             evals.append(np.cumsum(np.asarray(mets["grad_evals"])))
         elif algo in ("local_momentum", "fedadam"):
-            eng = LocalUpdateEngine(loss_fn, n_workers=m, h_period=h_period,
-                                    algo=algo, lr=lag_lr, server_lr=lr)
+            # strategy-layer delta-payload rules (core/local_update.py);
+            # the seed LocalUpdateEngine survives only as the parity
+            # oracle (tests/test_local_steps.py pins the trajectories)
+            eng = CADAEngine(
+                loss_fn, None,  # None = the rule's prescribed server
+                CommRule(kind=algo, c=c, d_max=d_max, max_delay=max_delay,
+                         local_steps=h_period, local_lr=lag_lr,
+                         server_lr=lr), m)
             st = eng.init(params)
             rounds = iters // h_period
             batches = jax.vmap(sample)(jax.random.split(key,
@@ -77,7 +82,8 @@ def run_engine_algo(algo: str, loss_fn, params, sample, *, m: int,
                 lambda x: x.reshape((rounds, h_period) + x.shape[1:]),
                 batches)
             _, mets = jax.jit(eng.run)(st, batches)
-            losses.append(np.asarray(mets["loss"]).reshape(-1))
+            # per-round loss spread back to the per-iteration x-axis
+            losses.append(np.repeat(np.asarray(mets["loss"]), h_period))
             ups.append(np.cumsum(
                 np.repeat(np.asarray(mets["uploads"]), h_period)
                 / h_period))

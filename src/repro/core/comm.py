@@ -52,7 +52,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec
 
-from repro.core.flat import (per_worker_quantize_dequantize_flat,
+from repro.core.flat import (batch_has_local_axis, local_steps_vector,
+                             per_worker_quantize_dequantize_flat,
                              per_worker_topk_extract_flat,
                              per_worker_topk_sparsify_flat, spec_dim)
 from repro.core.quantize import (ef_correct, ef_residual,
@@ -135,6 +136,30 @@ def _f32(tree):
     return jax.tree.map(lambda x: x.astype(jnp.float32), tree)
 
 
+# ------------------------------------------------------- cadence adaptation
+
+def adapt_period(period, grow, p_min, p_max):
+    """The ONE home of integer cadence adaptation (±1, clipped to bounds).
+
+    Shared by the two cadence axes of the layer:
+
+      * avp's per-worker UPLOAD PERIODS (arXiv 2007.06134 style) — a
+        period GROWS while the innovation energy stays under the shared
+        recent-progress RHS (communication is not earning its bytes) and
+        shrinks when it clears it;
+      * the sim's per-worker LOCAL-STEP counts H for delta-payload rules
+        (adaptive periodic averaging, Jiang & Agrawal) — H GROWS while a
+        round's measured communication time exceeds its compute time
+        (amortize the link over more local work) and shrinks when compute
+        dominates.
+
+    ``period``/``grow`` may be scalars or (M,) vectors; returns int32.
+    """
+    period = jnp.asarray(period, jnp.int32)
+    nxt = jnp.where(grow, period + 1, period - 1)
+    return jnp.clip(nxt, p_min, p_max)
+
+
 # -------------------------------------------------------------- strategies
 
 class CommStrategy:
@@ -147,8 +172,22 @@ class CommStrategy:
     """
 
     kind: str = "?"
-    #: worker-side gradient evaluations per iteration (paper §2.2)
+    #: worker-side gradient evaluations per iteration (paper §2.2). For
+    #: delta-payload rules this is per LOCAL iteration — a round of h
+    #: local steps charges h evaluations.
     grad_evals_per_iter: int = 1
+    #: PAYLOAD AXIS: False ⇒ the round ships one fresh gradient per
+    #: iteration and gates it per worker (the 8 Algorithm-1 rules). True ⇒
+    #: the worker runs H local optimizer steps between rounds and ships
+    #: the accumulated MODEL DELTA θ^k − θ_m^(H) (local_momentum /
+    #: fedadam): the round substitutes :meth:`local_payload` /
+    #: :meth:`flat_local_payload` for the fresh eval, uploads always
+    #: (lhs ≡ +inf — cadence lives in H, not in skipping), and the rule
+    #: prescribes its server optimizer via :meth:`server_optimizer`.
+    #: Because worker_grads then telescopes to the last shipped payload,
+    #: ∇̄ ≡ mean_m(payload) exactly and eq. (3) becomes periodic
+    #: averaging / FedAdam.
+    delta_payload: bool = False
     #: True ⇒ the rule keeps NO innovation state (engines may drop the
     #: whole CommState and run the lean distributed-baseline path)
     stateless: bool = False
@@ -226,6 +265,27 @@ class CommStrategy:
         """
         del ctx, extras, cache
         return self.transform_delta(delta)
+
+    # ---- payload/cadence hooks (delta_payload rules only)
+    def server_optimizer(self):
+        """The server optimizer a delta-payload rule PRESCRIBES (an
+        optim protocol object), or None for gradient-payload rules (any
+        server optimizer composes). Engines use this as the default when
+        none is passed: sgd(1.0) turns the mean delta into periodic
+        model averaging; a server Adam makes it FedAdam."""
+        return None
+
+    def local_payload(self, extras: dict, params, batch, m: int, vgrad_per,
+                      h_steps):
+        """Pytree local-step payload: run each worker's local optimizer
+        from θ^k over the (H, M, b, ...) batch and return
+        ``(losses, payload, cache)`` — (M,) mean loss over the worker's
+        active steps, the (M,)-leading fp32 model-delta tree
+        θ^k − θ_m^(h), and a cache for :meth:`post_upload` (e.g. the
+        post-run local momenta). ``h_steps`` is the (M,) int32 active
+        step count (rows beyond a worker's h_w are padding and must not
+        change its state)."""
+        raise NotImplementedError
 
     # ---- flat-plane hooks (core/flat.py)
     # The hot-path twin of the pytree hooks above: gradient-shaped
@@ -346,6 +406,15 @@ class CommStrategy:
         leaves a fixed-size support (topk) can ship one."""
         del ctx, extras, cache, delta
         return None
+
+    def flat_local_payload(self, layout, extras: dict, params, params_flat,
+                           batch, m: int, vgrad_per, h_steps):
+        """Flat-plane twin of :meth:`local_payload`: returns
+        ``(losses, payload, cache)`` with the payload a packed
+        (M, n_flat) fp32 plane. ``batch`` leads with the H axis; the
+        local run is a ``lax.scan`` over it with per-worker masking at
+        ``h_steps``."""
+        raise NotImplementedError
 
     # ---- accounting
     @property
@@ -879,10 +948,11 @@ class AVPStrategy(CommStrategy):
         return jnp.full((m,), self.rule.period_min, jnp.int32)
 
     def _adapt(self, period, energy, diff_hist):
+        # shared cadence adaptation: GROW (upload less) while the
+        # innovation energy stays under the RHS, shrink when it clears it
         r = self.rule
-        return jnp.clip(
-            jnp.where(energy > r.rhs(diff_hist), period - 1, period + 1),
-            r.period_min, r.resolved_period_max)
+        return adapt_period(period, ~(energy > r.rhs(diff_hist)),
+                            r.period_min, r.resolved_period_max)
 
     def _gate(self, staleness, period, energy):
         due = staleness >= period
@@ -982,8 +1052,8 @@ def comm_state_specs(strategy: CommStrategy, param_spec, worker_param_spec,
 
 
 def comm_round(strategy: CommStrategy, comm: CommState, params, batch, k,
-               *, vgrad, vgrad_per=None,
-               participation=None) -> CommRoundResult:
+               *, vgrad, vgrad_per=None, participation=None,
+               local_steps=None) -> CommRoundResult:
     """One rule-agnostic communication round of Algorithm 1 (lines 4-15).
 
     The caller supplies the gradient evaluators and afterwards applies the
@@ -993,22 +1063,53 @@ def comm_round(strategy: CommStrategy, comm: CommState, params, batch, k,
     ``participation`` ((M,) bool or None) masks the upload decision for
     partial-participation rounds (see ``flat.flat_comm_round`` — the sim
     runtime's knob); ``None`` leaves the graph unchanged.
+
+    ``local_steps`` is the PAYLOAD/CADENCE axis — only legal for
+    delta-payload rules (``strategy.delta_payload``), whose batch leads
+    with the local-steps axis H and whose payload is the accumulated
+    local-optimizer model delta instead of one fresh gradient (see
+    ``flat.flat_comm_round`` for the full contract). For the 8
+    gradient-payload rules it must stay None and this round's graph is
+    byte-identical to the pre-axis form.
     """
     r = strategy.rule
     m = comm.staleness.shape[0]
+    if local_steps is not None and not strategy.delta_payload:
+        raise ValueError(
+            f"rule kind {r.kind!r} ships per-iteration gradients; "
+            "local_steps is only meaningful for delta-payload rules "
+            "(local_momentum, fedadam)")
 
     # Line 4 (rule-owned): e.g. CADA1 snapshot refresh every D iterations.
     extras = strategy.pre_step(comm.extras, params, k)
 
-    # Lines 6/8: fresh stochastic gradients at θ^k (all rules).
-    losses, fresh = vgrad(params, batch)
-    ctx = CommContext(params=params, batch=batch, fresh=fresh,
-                      comm=comm._replace(extras=extras), step=k, m=m,
-                      vgrad=vgrad, vgrad_per=vgrad_per,
-                      participation=participation)
+    if strategy.delta_payload:
+        # Payload/cadence branch: h_w local optimizer steps per worker,
+        # payload = θ^k − θ_m^(h) substituted for ``fresh``. worker_grads
+        # then telescopes to the last payload, so ∇̄ ≡ mean_m(payload)
+        # and the rule's server optimizer closes the periodic-averaging /
+        # FedAdam loop. Always-upload cadence (lhs ≡ +inf).
+        batch_h = (batch if batch_has_local_axis(r, local_steps)
+                   else jax.tree.map(lambda x: x[None], batch))
+        h_steps = local_steps_vector(r, m, batch_h, local_steps)
+        losses, fresh, cache = strategy.local_payload(
+            extras, params, batch_h, m, vgrad_per, h_steps)
+        ctx = CommContext(params=params, batch=batch, fresh=fresh,
+                          comm=comm._replace(extras=extras), step=k, m=m,
+                          vgrad=vgrad, vgrad_per=vgrad_per,
+                          participation=participation)
+        lhs = jnp.full((m,), jnp.inf, jnp.float32)
+    else:
+        h_steps = None
+        # Lines 6/8: fresh stochastic gradients at θ^k (all rules).
+        losses, fresh = vgrad(params, batch)
+        ctx = CommContext(params=params, batch=batch, fresh=fresh,
+                          comm=comm._replace(extras=extras), step=k, m=m,
+                          vgrad=vgrad, vgrad_per=vgrad_per,
+                          participation=participation)
 
-    # Lines 7/9: rule LHS vs the shared recent-progress RHS.
-    lhs, cache = strategy.lhs(ctx, extras)
+        # Lines 7/9: rule LHS vs the shared recent-progress RHS.
+        lhs, cache = strategy.lhs(ctx, extras)
     rhs = r.rhs(comm.diff_hist)
     # Line 10: upload if the condition is VIOLATED or staleness capped.
     upload = (lhs > rhs) | (comm.staleness >= r.max_delay)
@@ -1045,6 +1146,12 @@ def comm_round(strategy: CommStrategy, comm: CommState, params, batch, k,
     uploads = jnp.sum(upload.astype(jnp.int32))
     n_active = (jnp.asarray(m, jnp.int32) if participation is None
                 else jnp.sum(participation.astype(jnp.int32)))
+    if strategy.delta_payload:
+        # one eval per LOCAL step: Σ_active h_w
+        grad_evals = jnp.sum(h_steps if participation is None
+                             else jnp.where(participation, h_steps, 0))
+    else:
+        grad_evals = n_active * strategy.grad_evals_per_iter
     metrics = {
         "uploads": uploads,
         # fraction of ACTIVE workers that skipped (an offline worker does
@@ -1055,7 +1162,7 @@ def comm_round(strategy: CommStrategy, comm: CommState, params, batch, k,
         "rhs": rhs,
         "mean_lhs": jnp.mean(jnp.where(jnp.isfinite(lhs), lhs, 0.0)),
         "max_staleness": jnp.max(staleness),
-        "grad_evals": n_active * strategy.grad_evals_per_iter,
+        "grad_evals": grad_evals,
         "bytes_up": (uploads.astype(jnp.float32)
                      * strategy.bytes_per_upload(tree_size(params))),
     }
@@ -1077,3 +1184,11 @@ def record_progress(comm: CommState, dtheta_sq, k) -> CommState:
 def nabla_f32(comm: CommState):
     """The server-update driver ∇^k in fp32 (line 16's input)."""
     return _f32(comm.nabla)
+
+
+# The delta-payload strategies (local_momentum / fedadam) live in
+# core/local_update.py next to the seed engine they reproduce; importing
+# them here registers them so every consumer of the registry — engines,
+# launcher choices, sweeps — sees the full kind set without knowing about
+# the payload axis.
+from repro.core import local_update as _local_update  # noqa: E402,F401

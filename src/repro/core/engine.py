@@ -114,12 +114,24 @@ class CADAEngine:
                  rule: CommRule | None = None, n_workers: int = 1, *,
                  fused: bool | None = None, fuse_evals: bool | None = None,
                  group_evals: bool = False, interpret=None,
-                 resum_every: int = 0):
+                 resum_every: int = 0,
+                 allow_adaptive_local_steps: bool = False):
         self.loss_fn = loss_fn
-        self.optimizer = (FusedAMSGrad(lr=1e-3) if optimizer is None
-                          else optimizer)
         self.rule = CommRule() if rule is None else rule
         self.strategy = strategy_for(self.rule)
+        if self.rule.adapt_local_steps and not allow_adaptive_local_steps:
+            raise ValueError(
+                "adapt_local_steps adapts H against MEASURED communication "
+                "time — the bare engine has no clock. Run it through the "
+                "sim runtime (repro.sim, --runtime sim), which prices every "
+                "round and passes the adapted schedule back in.")
+        if optimizer is None:
+            # delta-payload rules PRESCRIBE their server optimizer
+            # (sgd(1.0) = periodic averaging, server Adam = FedAdam);
+            # gradient rules default to the paper's fused AMSGrad.
+            optimizer = (self.strategy.server_optimizer()
+                         or FusedAMSGrad(lr=1e-3))
+        self.optimizer = optimizer
         self.m = n_workers
         self.fused = True if fused is None else fused
         self._fuse_evals = (True if fuse_evals is None else fuse_evals)
@@ -163,22 +175,27 @@ class CADAEngine:
         )
 
     # -------------------------------------------------------------- step
-    def step(self, state: EngineState, batch,
-             participation=None) -> tuple[EngineState, dict]:
-        """One iteration of Algorithm 1. ``batch`` has leading axis M.
+    def step(self, state: EngineState, batch, participation=None,
+             local_steps=None) -> tuple[EngineState, dict]:
+        """One iteration of Algorithm 1. ``batch`` has leading axis M —
+        or (H, M, ...) for a delta-payload rule running H local steps
+        (see ``flat.batch_has_local_axis`` for the exact contract).
 
         ``participation`` ((M,) bool or None) masks uploads for
         partial-participation rounds (the sim runtime's knob); None keeps
-        the compiled graph exactly as before.
+        the compiled graph exactly as before. ``local_steps`` (None |
+        scalar | (M,)) is the per-worker local-step count of a
+        delta-payload round — the sim's adaptive schedule.
         """
         if self.fused:
-            return self._step_flat(state, batch, participation)
+            return self._step_flat(state, batch, participation, local_steps)
         k = state.step
 
         # Lines 4-15: the shared communication round.
         out = comm_round(self.strategy, state.comm, state.params, batch, k,
                          vgrad=self._vgrad, vgrad_per=self._vgrad_per,
-                         participation=participation)
+                         participation=participation,
+                         local_steps=local_steps)
 
         # Lines 16-17: server Adam update driven by ∇^k (eqs. 2a-2c).
         opt = (self.optimizer if not self._fused_opt
@@ -193,7 +210,8 @@ class CADAEngine:
         metrics = {"loss": jnp.mean(out.losses), **out.metrics}
         return new_state, metrics
 
-    def _step_flat(self, state: EngineState, batch, participation=None):
+    def _step_flat(self, state: EngineState, batch, participation=None,
+                   local_steps=None):
         """The flat-plane hot path: one packed gradient plane per round,
         single-op comm math, fused server update with ||Δθ||² for free."""
         k = state.step
@@ -203,7 +221,8 @@ class CADAEngine:
             state.params_flat, batch, k, vgrad=self._vgrad,
             vgrad_per=self._vgrad_per, fuse_evals=self._fuse_evals,
             group_evals=self._group_evals,
-            interpret=self._interpret, participation=participation)
+            interpret=self._interpret, participation=participation,
+            local_steps=local_steps)
 
         nabla = F.nabla_f32(out.comm)
         if self._fused_opt:
@@ -234,12 +253,13 @@ class CADAEngine:
 
         Device state is O(C·n) per round + O(n) server buffers + O(M)
         scalar vectors; the O(M·n) per-worker planes live in the returned
-        host pool. Requires the fused plane and the fused AMSGrad server
-        optimizer (the only combination the hot path compiles).
+        host pool. Requires the fused plane; the server optimizer is the
+        fused AMSGrad kernel or any protocol optimizer (delta-payload
+        rules prescribe protocol servers — sgd(1.0) / server Adam — and
+        run cohort-virtualized through the same round).
         """
-        if not (self.fused and self._fused_opt):
-            raise ValueError("the cohort plane requires fused=True and the "
-                             "FusedAMSGrad server optimizer")
+        if not self.fused:
+            raise ValueError("the cohort plane requires fused=True")
         layout = F.layout_of(params)
         self._layout = layout
         # own the param buffers: the cohort step donates its state, and
@@ -251,10 +271,16 @@ class CADAEngine:
         server, pool = F.init_cohort_state(
             self.strategy, layout, params, self.m, grad_dtype=grad_dtype,
             params_flat=params_flat)
+        if self._fused_opt:
+            opt_state = self.optimizer.init_flat(layout.n_flat)
+        else:
+            # own the buffers: protocol-optimizer inits are zeros trees
+            # XLA dedupes into ONE buffer, and the donating cohort step
+            # must never see the same buffer twice
+            opt_state = jax.tree.map(jnp.array, self.optimizer.init(params))
         state = CohortEngineState(
             step=jnp.zeros([], jnp.int32), params=params,
-            opt_state=self.optimizer.init_flat(layout.n_flat),
-            server=server, params_flat=params_flat)
+            opt_state=opt_state, server=server, params_flat=params_flat)
         return state, pool
 
     def _build_cohort_step(self):
@@ -267,14 +293,26 @@ class CADAEngine:
                 state.params_flat, batch, k, cohort, m_total=self.m,
                 vgrad=self._vgrad, vgrad_per=self._vgrad_per,
                 fuse_evals=self._fuse_evals, interpret=self._interpret)
-            theta, opt_state, dsq = self.optimizer.apply_flat(
-                state.params_flat, state.opt_state,
-                out.server.nabla.astype(jnp.float32),
-                interpret=self._interpret)
-            theta = layout.cast_roundtrip(theta)
+            nabla = out.server.nabla.astype(jnp.float32)
+            if self._fused_opt:
+                theta, opt_state, dsq = self.optimizer.apply_flat(
+                    state.params_flat, state.opt_state, nabla,
+                    interpret=self._interpret)
+                theta = layout.cast_roundtrip(theta)
+                params = layout.unpack(theta)
+            else:
+                # protocol server (delta-payload rules): mirror _step_flat
+                grad_tree = layout.unpack(
+                    nabla,
+                    dtypes=(np.dtype(np.float32),) * len(layout.dtypes))
+                updates, opt_state = self.optimizer.update(
+                    grad_tree, state.opt_state, state.params)
+                params = apply_updates(state.params, updates)
+                dsq = tree_sq_norm(updates)
+                theta = layout.pack(params)
             server = F.record_progress(out.server, dsq, k)
             new_state = CohortEngineState(
-                step=k + 1, params=layout.unpack(theta),
+                step=k + 1, params=params,
                 opt_state=opt_state, server=server, params_flat=theta)
             metrics = {"loss": jnp.mean(out.losses), **out.metrics}
             return new_state, out.rows, metrics
@@ -317,23 +355,40 @@ class CADAEngine:
         return state, mets
 
     # --------------------------------------------------------------- run
-    def run(self, state: EngineState, batches,
-            participation=None) -> tuple[EngineState, dict]:
-        """Scan over pre-sampled batches with leading axis (steps, M, ...).
+    def run(self, state: EngineState, batches, participation=None,
+            local_steps=None) -> tuple[EngineState, dict]:
+        """Scan over pre-sampled batches with leading axis (steps, M, ...)
+        — (steps, H, M, ...) for a delta-payload rule running H local
+        steps per round.
 
         ``participation`` ((steps, M) bool or None) feeds per-round
         partial-participation masks into the scan; None compiles the exact
         pre-existing graph (the sim's degenerate-parity anchor).
+        ``local_steps`` ((steps, M) int32 or None) is the sim's adapted
+        per-round local-step schedule for delta-payload rules.
         """
-        if participation is None:
+        if participation is None and local_steps is None:
             def body(s, b):
                 return self.step(s, b)
             return jax.lax.scan(body, state, batches)
 
-        def body_p(s, xs):
-            b, p = xs
-            return self.step(s, b, p)
-        return jax.lax.scan(body_p, state, (batches, participation))
+        if local_steps is None:
+            def body_p(s, xs):
+                b, p = xs
+                return self.step(s, b, p)
+            return jax.lax.scan(body_p, state, (batches, participation))
+
+        if participation is None:
+            def body_h(s, xs):
+                b, h = xs
+                return self.step(s, b, local_steps=h)
+            return jax.lax.scan(body_h, state, (batches, local_steps))
+
+        def body_ph(s, xs):
+            b, p, h = xs
+            return self.step(s, b, p, local_steps=h)
+        return jax.lax.scan(body_ph, state,
+                            (batches, participation, local_steps))
 
 
 def _as_protocol(fused: FusedAMSGrad) -> Optimizer:

@@ -289,6 +289,39 @@ def sparse_rows_to_dense(idx, vals, n_flat: int) -> jnp.ndarray:
     return jnp.zeros((m, n_flat), vals.dtype).at[rows, idx].add(vals)
 
 
+# ----------------------------------------------------- local-steps cadence
+
+def batch_has_local_axis(rule, local_steps) -> bool:
+    """STATIC: does a delta-payload round's batch lead with the H axis?
+
+    The payload/cadence contract: a delta-payload rule's batch is
+    (H, M, b, ...) whenever the rule runs more than one local step
+    (``rule.local_steps > 1``) or an explicit per-round schedule is passed
+    (``local_steps is not None`` — the sim's adaptive path, which pads the
+    batch to the schedule's cap). With the default H = 1 and no schedule
+    the batch keeps the plain (M, b, ...) form every gradient-payload path
+    uses — so a delta rule at H = 1 drops into any existing engine/sweep
+    unchanged.
+    """
+    return rule.local_steps > 1 or local_steps is not None
+
+
+def local_steps_vector(rule, m: int, batch_h, local_steps) -> jnp.ndarray:
+    """(M,) int32 per-worker local-step counts of one delta-payload round.
+
+    ``batch_h`` leads with the (static) local-steps axis H — its length is
+    the padding bound; ``local_steps`` (None | scalar | (M,)) selects how
+    many of those H steps each worker actually runs this round (None = all
+    H, the fixed-cadence case; the sim's adaptive schedule passes a
+    per-worker vector, clipped here into [1, H] so a stale schedule can
+    never index past the batch)."""
+    h_max = jax.tree.leaves(batch_h)[0].shape[0]
+    if local_steps is None:
+        return jnp.full((m,), h_max, jnp.int32)
+    h = jnp.asarray(local_steps, jnp.int32)
+    return jnp.clip(jnp.broadcast_to(h, (m,)), 1, h_max)
+
+
 # -------------------------------------------------------------- comm state
 
 class FlatCommState(NamedTuple):
@@ -514,7 +547,8 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
                     fuse_evals: bool = True,
                     group_evals: bool = False,
                     interpret=None, shard=None,
-                    participation=None) -> FlatCommRoundResult:
+                    participation=None,
+                    local_steps=None) -> FlatCommRoundResult:
     """One communication round of Algorithm 1 (lines 4-15) on flat buffers.
 
     Semantically identical to ``comm.comm_round`` (the fused-vs-reference
@@ -548,27 +582,70 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
     staleness keeps growing. ``None`` (the default) leaves the round's
     graph completely unchanged, which is what keeps the sim's degenerate
     zero-latency config bit-exact against the plain engine.
+
+    ``local_steps`` belongs to the PAYLOAD/CADENCE axis and is only legal
+    for delta-payload rules (``strategy.delta_payload`` — local_momentum /
+    fedadam): those ship an accumulated local-optimizer model delta
+    instead of one fresh gradient, the batch leads with the local-steps
+    axis H (see :func:`batch_has_local_axis`), and ``local_steps``
+    (None | scalar | (M,)) is how many of the H padded steps each worker
+    runs this round. For the 8 gradient-payload rules the kwarg must stay
+    None and the round's graph is byte-identical to the pre-axis form.
     """
     r = strategy.rule
     m = comm.staleness.shape[0]
+    if local_steps is not None and not strategy.delta_payload:
+        raise ValueError(
+            f"rule kind {r.kind!r} ships per-iteration gradients; "
+            "local_steps is only meaningful for delta-payload rules "
+            "(local_momentum, fedadam)")
 
     # Line 4 (rule-owned): e.g. CADA1 snapshot refresh every D iterations.
     extras = strategy.flat_pre_step(comm.extras, params, params_flat, k)
 
-    # Lines 6/8: fresh gradients at θ^k, plus the rule's second evaluation
-    # (ring-indexed / shared / legacy dense — see eval_two_point).
-    losses, fresh, second = eval_two_point(
-        strategy, layout, extras, params, batch, m, vgrad=vgrad,
-        vgrad_per=vgrad_per, fuse_evals=fuse_evals, group_evals=group_evals)
+    if strategy.delta_payload:
+        # Payload/cadence branch: the worker runs h_w local optimizer
+        # steps and ships the accumulated model delta θ^k − θ_m^(h) (fp32)
+        # in place of the fresh gradient. Substituting that payload for
+        # ``fresh`` leaves the rest of the round untouched: with the
+        # always-upload cadence below, worker_grads telescopes to the last
+        # shipped payload, so ∇̄ ≡ mean_m(payload) exactly and the rule's
+        # server optimizer (sgd(1.0) / server Adam) turns eq. (3) into
+        # periodic averaging / FedAdam.
+        batch_h = (batch if batch_has_local_axis(r, local_steps)
+                   else jax.tree.map(lambda x: x[None], batch))
+        h_steps = local_steps_vector(r, m, batch_h, local_steps)
+        losses, fresh, cache = strategy.flat_local_payload(
+            layout, extras, params, params_flat, batch_h, m, vgrad_per,
+            h_steps)
+        second = None
+        ctx = FlatCommContext(layout=layout, params=params,
+                              params_flat=params_flat, batch=batch,
+                              fresh=fresh, second=second,
+                              comm=comm._replace(extras=extras),
+                              step=k, m=m, interpret=interpret, shard=shard,
+                              participation=participation)
+        # always-upload cadence: the "skip" axis is folded into h_w
+        lhs = jnp.full((m,), jnp.inf, jnp.float32)
+    else:
+        h_steps = None
+        # Lines 6/8: fresh gradients at θ^k, plus the rule's second
+        # evaluation (ring-indexed / shared / legacy dense — see
+        # eval_two_point).
+        losses, fresh, second = eval_two_point(
+            strategy, layout, extras, params, batch, m, vgrad=vgrad,
+            vgrad_per=vgrad_per, fuse_evals=fuse_evals,
+            group_evals=group_evals)
 
-    ctx = FlatCommContext(layout=layout, params=params,
-                          params_flat=params_flat, batch=batch, fresh=fresh,
-                          second=second, comm=comm._replace(extras=extras),
-                          step=k, m=m, interpret=interpret, shard=shard,
-                          participation=participation)
+        ctx = FlatCommContext(layout=layout, params=params,
+                              params_flat=params_flat, batch=batch,
+                              fresh=fresh, second=second,
+                              comm=comm._replace(extras=extras),
+                              step=k, m=m, interpret=interpret, shard=shard,
+                              participation=participation)
 
-    # Lines 7/9: rule LHS vs the shared recent-progress RHS.
-    lhs, cache = strategy.flat_lhs(ctx, extras)
+        # Lines 7/9: rule LHS vs the shared recent-progress RHS.
+        lhs, cache = strategy.flat_lhs(ctx, extras)
     rhs = r.rhs(comm.diff_hist)
     # Line 10: upload if the condition is VIOLATED or staleness capped.
     upload = (lhs > rhs) | (comm.staleness >= r.max_delay)
@@ -616,6 +693,12 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
     # offline workers evaluate nothing — charge grad evals to participants
     n_active = (jnp.asarray(m, jnp.int32) if participation is None
                 else jnp.sum(participation.astype(jnp.int32)))
+    if strategy.delta_payload:
+        # one eval per LOCAL step: Σ_active h_w
+        grad_evals = jnp.sum(h_steps if participation is None
+                             else jnp.where(participation, h_steps, 0))
+    else:
+        grad_evals = n_active * strategy.grad_evals_per_iter
     metrics = {
         "uploads": uploads,
         # fraction of ACTIVE workers that skipped (an offline worker does
@@ -626,7 +709,7 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
         "rhs": rhs,
         "mean_lhs": jnp.mean(jnp.where(jnp.isfinite(lhs), lhs, 0.0)),
         "max_staleness": jnp.max(staleness),
-        "grad_evals": n_active * strategy.grad_evals_per_iter,
+        "grad_evals": grad_evals,
         "bytes_up": (uploads.astype(jnp.float32)
                      * strategy.bytes_per_upload(layout.n)),
     }
@@ -826,18 +909,39 @@ def flat_cohort_round(strategy, layout: FlatLayout,
         staleness=stale_c, diff_hist=server.diff_hist, extras=merged)
 
     extras = strategy.flat_pre_step(merged, params, params_flat, k)
-    losses, fresh, second = eval_two_point(
-        strategy, layout, extras, params, batch, c, vgrad=vgrad,
-        vgrad_per=vgrad_per, fuse_evals=fuse_evals, cohort=cohort)
+    if strategy.delta_payload:
+        # Payload/cadence branch on the cohort plane: the C sampled
+        # workers run their local steps (fixed H — the cohort plane does
+        # not carry the sim's adaptive schedule) and ship model deltas;
+        # see flat_comm_round. ``batch`` is (H, C, b, ...) when H > 1.
+        batch_h = (batch if batch_has_local_axis(r, None)
+                   else jax.tree.map(lambda x: x[None], batch))
+        h_steps = local_steps_vector(r, c, batch_h, None)
+        losses, fresh, cache = strategy.flat_local_payload(
+            layout, extras, params, params_flat, batch_h, c, vgrad_per,
+            h_steps)
+        second = None
+        ctx = FlatCommContext(layout=layout, params=params,
+                              params_flat=params_flat, batch=batch,
+                              fresh=fresh, second=second,
+                              comm=comm_row._replace(extras=extras),
+                              step=k, m=c, interpret=interpret, shard=None,
+                              participation=None, cohort=cohort)
+        lhs = jnp.full((c,), jnp.inf, jnp.float32)
+    else:
+        h_steps = None
+        losses, fresh, second = eval_two_point(
+            strategy, layout, extras, params, batch, c, vgrad=vgrad,
+            vgrad_per=vgrad_per, fuse_evals=fuse_evals, cohort=cohort)
 
-    ctx = FlatCommContext(layout=layout, params=params,
-                          params_flat=params_flat, batch=batch, fresh=fresh,
-                          second=second,
-                          comm=comm_row._replace(extras=extras),
-                          step=k, m=c, interpret=interpret, shard=None,
-                          participation=None, cohort=cohort)
+        ctx = FlatCommContext(layout=layout, params=params,
+                              params_flat=params_flat, batch=batch,
+                              fresh=fresh, second=second,
+                              comm=comm_row._replace(extras=extras),
+                              step=k, m=c, interpret=interpret, shard=None,
+                              participation=None, cohort=cohort)
 
-    lhs, cache = strategy.flat_lhs(ctx, extras)
+        lhs, cache = strategy.flat_lhs(ctx, extras)
     rhs = r.rhs(server.diff_hist)
     upload = (lhs > rhs) | (stale_c >= r.max_delay)
 
@@ -877,8 +981,9 @@ def flat_cohort_round(strategy, layout: FlatLayout,
         "rhs": rhs,
         "mean_lhs": jnp.mean(jnp.where(jnp.isfinite(lhs), lhs, 0.0)),
         "max_staleness": jnp.max(staleness),
-        "grad_evals": jnp.asarray(c, jnp.int32)
-        * strategy.grad_evals_per_iter,
+        "grad_evals": (jnp.sum(h_steps) if strategy.delta_payload
+                       else jnp.asarray(c, jnp.int32)
+                       * strategy.grad_evals_per_iter),
         "bytes_up": (uploads.astype(jnp.float32)
                      * strategy.bytes_per_upload(layout.n)),
     }

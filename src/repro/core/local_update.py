@@ -11,6 +11,26 @@ Both run H local iterations per communication round:
 Communication accounting matches the paper: one upload per worker per round,
 i.e. M uploads per H iterations; one gradient evaluation per worker per local
 iteration.
+
+TWO implementations live here:
+
+  * :class:`LocalMomentumStrategy` / :class:`FedAdamStrategy` — the
+    baselines REBUILT on the strategy layer as registered DELTA-PAYLOAD
+    rules (``kind="local_momentum"`` / ``"fedadam"``): the shared
+    ``comm_round`` / ``flat_comm_round`` / ``flat_cohort_round`` carry
+    them on every engine, the payload is the accumulated model delta
+    θ^k − θ_m^(H) shipped through the ordinary wire hooks (so
+    ``quantize_bits`` compression of local updates composes for free),
+    and the prescribed server optimizer (``server_optimizer()``) closes
+    the averaging / FedAdam loop. The telescoping identity makes this
+    exact: with every worker uploading every round, ``worker_grads``
+    always equals the last shipped payload, so ∇̄ ≡ mean_m(payload) and
+    the server's sgd(1.0) / Adam step IS the seed engine's round tail.
+  * :class:`LocalUpdateEngine` — the SEED standalone engine, kept as the
+    PARITY ORACLE for the strategy-layer rules (the ``fused=False``
+    precedent: tests pin the registered rules' trajectories against it
+    at the same H and seeds, then everything routes through the rule
+    layer).
 """
 from __future__ import annotations
 
@@ -19,9 +39,13 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.comm import broadcast_to_workers
+from repro.core.comm import (CommStrategy, broadcast_to_workers, register,
+                             select_rows)
+from repro.core.flat import spec_dim
+from repro.kernels import ops as kops
 from repro.optim.adam import adam
 from repro.optim.base import apply_updates
+from repro.optim.sgd import sgd
 from repro.utils.trees import tree_size
 
 
@@ -120,3 +144,215 @@ class LocalUpdateEngine:
     def run(self, state: LocalState, batches):
         """Scan over rounds: batches (rounds, H, M, b, ...)."""
         return jax.lax.scan(self.round, state, batches)
+
+
+# --------------------------------------------------- strategy-layer rules
+#
+# The same two baselines as registered delta-payload CommStrategy rules.
+# The local run is a lax.scan over the batch's H axis with PER-WORKER
+# masking at ``h_steps`` (rows beyond a worker's h_w are padding: its
+# params/momenta freeze, its losses stop counting) — that is what lets
+# the sim hand every worker its own adapted H inside one padded scan.
+
+def _masked_mean_losses(step_losses, h_steps):
+    """(H, M) per-step losses -> (M,) mean over each worker's ACTIVE steps
+    (padded rows arrive already zeroed)."""
+    return jnp.sum(step_losses, axis=0) / h_steps.astype(step_losses.dtype)
+
+
+class LocalUpdateStrategy(CommStrategy):
+    """Shared base of the delta-payload family: the local-step scan, the
+    payload θ^k − θ_m^(h), and the flat twin. Subclasses supply the local
+    optimizer step and (optionally) per-worker local state."""
+
+    delta_payload = True
+
+    # ---- the local optimizer step (pytree and flat forms)
+    def _local_step(self, wp, grads, mom):
+        """(new_wp, new_mom) from one local step; ``mom`` may be None."""
+        raise NotImplementedError
+
+    def _local_step_flat(self, wp, g, mom):
+        raise NotImplementedError
+
+    # ---- pytree payload
+    def local_payload(self, extras, params, batch, m, vgrad_per, h_steps):
+        wp0 = broadcast_to_workers(params, m)
+        mom0 = self._initial_momenta(extras, params, m)
+        h_max = jax.tree.leaves(batch)[0].shape[0]
+
+        def body(carry, inp):
+            wp, mom = carry
+            j, b_j = inp
+            losses, grads = vgrad_per(wp, b_j)
+            new_wp, new_mom = self._local_step(wp, grads, mom)
+            active = j < h_steps
+            wp = select_rows(active, new_wp, wp)
+            if mom is not None:
+                mom = select_rows(active, new_mom, mom)
+            return (wp, mom), jnp.where(active, losses, 0.0)
+
+        (wp, mom), step_losses = jax.lax.scan(
+            body, (wp0, mom0), (jnp.arange(h_max), batch))
+        payload = jax.tree.map(
+            lambda p, w: p.astype(jnp.float32) - w.astype(jnp.float32),
+            params, wp)
+        return _masked_mean_losses(step_losses, h_steps), payload, mom
+
+    def _initial_momenta(self, extras, params, m):
+        """(M,)-leading momentum tree carried into the round, or None."""
+        del extras, params, m
+        return None
+
+    # ---- flat payload
+    def flat_local_payload(self, layout, extras, params, params_flat, batch,
+                           m, vgrad_per, h_steps):
+        del params
+        wp0 = jnp.broadcast_to(params_flat[None], (m, layout.n_flat)
+                               ).astype(jnp.float32)
+        mom0 = self._initial_momenta_flat(extras)
+        h_max = jax.tree.leaves(batch)[0].shape[0]
+
+        def body(carry, inp):
+            wp, mom = carry
+            j, b_j = inp
+            losses, grads = vgrad_per(layout.unpack_worker(wp), b_j)
+            g = layout.pack_worker(grads).astype(jnp.float32)
+            new_wp, new_mom = self._local_step_flat(wp, g, mom)
+            active = (j < h_steps)
+            wp = jnp.where(active[:, None], new_wp, wp)
+            if mom is not None:
+                mom = jnp.where(active[:, None], new_mom, mom)
+            return (wp, mom), jnp.where(active, losses, 0.0)
+
+        (wp, mom), step_losses = jax.lax.scan(
+            body, (wp0, mom0), (jnp.arange(h_max), batch))
+        payload = params_flat.astype(jnp.float32)[None] - wp
+        return _masked_mean_losses(step_losses, h_steps), payload, mom
+
+    def _initial_momenta_flat(self, extras):
+        del extras
+        return None
+
+
+@register
+class LocalMomentumStrategy(LocalUpdateStrategy):
+    """Local heavy-ball SGD with periodic model averaging, as a rule.
+
+    Local step: mom ← β·mom + g; θ_m ← θ_m − lr·mom. Payload = the model
+    delta; prescribed server optimizer sgd(1.0), so the server update
+    θ ← θ − mean_m(Δ_m) ≡ mean_m(θ_m) — exactly the seed engine's
+    averaging round. Momenta are per-worker n-vectors that PERSIST across
+    rounds and are averaged across the round's uploaders after every
+    round (the seed's all-worker average, generalized to partial
+    participation: offline workers took no local steps, so they keep
+    their old momenta) — hence an O(M·n) plane, POOLED on the cohort
+    plane like laq/topk's residual.
+    """
+
+    kind = "local_momentum"
+
+    def server_optimizer(self):
+        return sgd(1.0)
+
+    def _local_step(self, wp, grads, mom):
+        r = self.rule
+        new_mom = jax.tree.map(
+            lambda mo, g: (r.local_beta * mo.astype(jnp.float32)
+                           + g.astype(jnp.float32)).astype(mo.dtype),
+            mom, grads)
+        new_wp = jax.tree.map(
+            lambda p, mo: (p.astype(jnp.float32)
+                           - r.local_lr * mo.astype(jnp.float32)
+                           ).astype(p.dtype),
+            wp, new_mom)
+        return new_wp, new_mom
+
+    def _local_step_flat(self, wp, g, mom):
+        r = self.rule
+        new_mom = r.local_beta * mom + g
+        return wp - r.local_lr * new_mom, new_mom
+
+    def _initial_momenta(self, extras, params, m):
+        del params, m
+        return extras["momenta"]
+
+    def _initial_momenta_flat(self, extras):
+        return extras["momenta"].astype(jnp.float32)
+
+    # ---- state slices
+    def init_extras(self, params, m, make_grad_zeros, bcast):
+        return {"momenta": bcast(make_grad_zeros(), m)}
+
+    def extras_specs(self, param_spec, worker_param_spec, worker_grad_spec):
+        return {"momenta": worker_grad_spec}
+
+    def init_flat_extras(self, layout, params, params_flat, m, grad_dtype):
+        return {"momenta": jnp.zeros((m, layout.n_flat), grad_dtype)}
+
+    def flat_extras_specs(self, param_spec, worker_param_spec, waxis, P,
+                          col_axes=()):
+        return {"momenta": P(waxis, spec_dim(col_axes))}
+
+    def pooled_extras(self):
+        return ("momenta",)
+
+    # ---- post-round momentum averaging over the uploaders
+    def post_upload(self, extras, cache, upload, ctx):
+        mom_run = cache  # post-local-run momenta from local_payload
+        cnt = jnp.maximum(jnp.sum(upload.astype(jnp.int32)),
+                          1).astype(jnp.float32)
+
+        def leaf(mn, mo):
+            mask = upload.reshape((-1,) + (1,) * (mn.ndim - 1))
+            avg = jnp.sum(jnp.where(mask, mn.astype(jnp.float32), 0.0),
+                          axis=0) / cnt
+            return jnp.where(mask, avg[None].astype(mo.dtype), mo)
+
+        return {**extras,
+                "momenta": jax.tree.map(leaf, mom_run, extras["momenta"])}
+
+    def flat_post_upload(self, extras, cache, upload, ctx):
+        mom_run = cache
+        cnt = jnp.maximum(jnp.sum(upload.astype(jnp.int32)),
+                          1).astype(jnp.float32)
+        masked = jnp.where(upload[:, None], mom_run, 0.0)
+        # order-fixed raw row sum (denominator 1): the dense masked plane
+        # and the cohort's C rows produce BIT-identical averages — the
+        # same argument as eq. (3)'s aggregate
+        avg = kops.eq3_row_mean(masked, 1, shard=ctx.shard) / cnt
+        mom = extras["momenta"]
+        new = jnp.where(upload[:, None], avg[None].astype(mom.dtype), mom)
+        return {**extras, "momenta": new}
+
+
+@register
+class FedAdamStrategy(LocalUpdateStrategy):
+    """FedAdam (Reddi et al., arXiv 2003.00295) as a rule: plain local
+    SGD steps, delta payload, server Adam.
+
+    The prescribed server optimizer is the seed engine's exact server:
+    Adam(lr=``server_lr``, β=(0.9, 0.999), ε=1e-3, no amsgrad, ε outside
+    the sqrt) — Reddi et al.'s recommended adaptivity τ=1e-3 (τ→0 makes
+    the normalized server step orbit instead of converge). ∇̄ ≡
+    mean_m(Δ_m) is the pseudo-gradient. No per-worker state beyond the
+    gradient row.
+    """
+
+    kind = "fedadam"
+
+    def server_optimizer(self):
+        return adam(lr=self.rule.server_lr, b1=0.9, b2=0.999, eps=1e-3,
+                    amsgrad=False, eps_inside_sqrt=False)
+
+    def _local_step(self, wp, grads, mom):
+        r = self.rule
+        new_wp = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - r.local_lr * g.astype(jnp.float32)
+                          ).astype(p.dtype),
+            wp, grads)
+        return new_wp, mom
+
+    def _local_step_flat(self, wp, g, mom):
+        return wp - self.rule.local_lr * g, mom

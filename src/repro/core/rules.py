@@ -69,6 +69,33 @@ like the paper's rules AND shrink the uploads that do happen):
     the RHS (the period becomes a floor on upload spacing instead of a
     schedule; the max-staleness cap still forces eventually).
 
+The PAYLOAD/CADENCE axis (beyond-paper — the federated baselines of the
+paper's experiments, rebuilt on the strategy layer):
+
+  * ``local_momentum`` — local SGD-with-momentum: each worker runs H =
+    ``local_steps`` local steps (lr ``local_lr``, momentum ``local_beta``)
+    between rounds and ships the accumulated MODEL DELTA θ^k − θ_m^(H);
+    every round uploads (cadence lives in H, not in skipping), the
+    prescribed server optimizer is sgd(1.0), so the server update is
+    exactly periodic model averaging. Worker momenta are per-worker
+    n-vectors, averaged across the round's uploaders after every round
+    → POOLED on the cohort plane. H=1 is per-iteration momentum SGD.
+  * ``fedadam`` — FedAdam (Reddi et al., arXiv 2003.00295): plain local
+    SGD steps (no momentum), same delta payload, with the prescribed
+    server optimizer Adam(lr=``server_lr``) driving θ from the mean
+    delta. No per-worker state beyond the gradient row.
+
+  Both compose with ``quantize_bits`` (the delta wire rides the same
+  ``wire_delta`` round-trip as the gradient rules — compressed local
+  updates for free). ``adapt_local_steps`` adapts H per worker against
+  the COMM TIME the sim's link model observes (adaptive periodic
+  averaging, Jiang & Agrawal): H grows while a round's communication
+  time exceeds its compute time, shrinks otherwise, clipped to
+  [``local_steps_min``, ``local_steps_max``] — the same ±1 adaptation
+  avp applies to upload periods (``comm.adapt_period``), driven by
+  wall-clock instead of innovation energy. Adaptation therefore REQUIRES
+  the sim runtime (``--runtime sim``); the bare engines have no clock.
+
 The RUNTIME axis is orthogonal to the rule axis: every rule above runs
 under (a) the synchronous engines (``core/engine.py`` /
 ``distributed/trainer.py`` — rounds, no clock), and (b) the discrete-event
@@ -114,6 +141,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 RULES = ("cada1", "cada2", "lag", "always", "cinn", "laq", "topk", "avp")
+#: the delta-payload family (ships local-step model deltas, not gradients)
+LOCAL_RULES = ("local_momentum", "fedadam")
 
 
 @dataclass(frozen=True)
@@ -137,6 +166,17 @@ class CommRule:
     period_max: int = 0     # avp: upper bound (0 = max_delay)
     avp_compose: bool = False  # avp: upload only when due AND the
     #                            innovation energy clears the CADA RHS
+    local_steps: int = 1    # delta-payload rules: local optimizer steps H
+    #                         per comm round (1 = per-iteration payload)
+    local_lr: float = 0.1   # delta-payload rules: local SGD learning rate
+    local_beta: float = 0.9  # local_momentum: local momentum coefficient
+    server_lr: float = 0.01  # fedadam: server Adam learning rate
+    adapt_local_steps: bool = False  # adapt H per worker from measured
+    #                                  comm vs compute time (sim runtime
+    #                                  only — the engines have no clock)
+    local_steps_min: int = 1  # adaptive-H lower bound
+    local_steps_max: int = 0  # adaptive-H upper bound (0 = max_delay,
+    #                           mirroring avp's period bound)
 
     def __post_init__(self):
         # validate against the live strategy registry (late import — comm.py
@@ -161,11 +201,39 @@ class CommRule:
             raise ValueError(
                 f"period_max ({self.resolved_period_max}) must be >= "
                 f"period_min ({self.period_min})")
+        if self.local_steps < 1:
+            raise ValueError("local_steps must be >= 1")
+        if self.local_lr <= 0:
+            raise ValueError("local_lr must be > 0")
+        if not 0.0 <= self.local_beta < 1.0:
+            raise ValueError("local_beta must be in [0, 1)")
+        if self.server_lr <= 0:
+            raise ValueError("server_lr must be > 0")
+        if self.local_steps_min < 1 or self.local_steps_max < 0:
+            raise ValueError(
+                "local_steps_min must be >= 1 and local_steps_max >= 0")
+        if self.resolved_local_steps_max < self.local_steps_min:
+            raise ValueError(
+                f"local_steps_max ({self.resolved_local_steps_max}) must "
+                f"be >= local_steps_min ({self.local_steps_min})")
+        if self.local_steps > 1 or self.adapt_local_steps:
+            from repro.core.comm import STRATEGIES
+            if not STRATEGIES[self.kind].delta_payload:
+                raise ValueError(
+                    f"kind={self.kind!r} ships per-iteration gradients; "
+                    "local_steps > 1 / adapt_local_steps need a "
+                    f"delta-payload rule ({LOCAL_RULES})")
 
     @property
     def resolved_period_max(self) -> int:
         """avp upper period bound: explicit, or the staleness cap D."""
         return self.period_max or self.max_delay
+
+    @property
+    def resolved_local_steps_max(self) -> int:
+        """Adaptive-H upper bound: explicit, or the staleness cap D
+        (the same default cap avp applies to its upload periods)."""
+        return self.local_steps_max or self.max_delay
 
     def rhs(self, diff_hist):
         """The shared recent-progress RHS, (c/d_max)·Σ_d ||θ^{k+1-d}−θ^{k-d}||².

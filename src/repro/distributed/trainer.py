@@ -233,46 +233,59 @@ def train_state_specs(cfg: ModelConfig, mesh, hp: TrainHParams
     )
 
 
-def train_batch_specs(mesh) -> dict:
+def train_batch_specs(mesh, local_steps: int = 1) -> dict:
     """Worker-split batch: leaves are (M, b_m, ...); M shards over the
     worker axis, b_m over 'data' on the multi-pod mesh (where the worker is
-    a whole pod). M-RoPE positions are (M, 3, b_m, S)."""
+    a whole pod). M-RoPE positions are (M, 3, b_m, S). With
+    ``local_steps`` H > 1 (delta-payload rules) every leaf gains a leading
+    replicated local-step axis: (H, M, b_m, ...)."""
     waxis = worker_axis_name(mesh)
     inner = DATA if waxis == POD else None
+    lead = (None,) if local_steps > 1 else ()
 
     def spec_for(key, ndim):
+        ndim -= len(lead)
         if key == "positions":
-            return P(waxis, None, inner, *(None,) * (ndim - 3))
-        return P(waxis, inner, *(None,) * (ndim - 2))
+            return P(*lead, waxis, None, inner, *(None,) * (ndim - 3))
+        return P(*lead, waxis, inner, *(None,) * (ndim - 2))
 
     return spec_for
 
 
-def worker_split(batch: dict, m: int) -> dict:
+def worker_split(batch: dict, m: int, local_steps: int = 1) -> dict:
     """Global batch -> (M, b_m, ...) per-worker leading axis (positions:
-    (3, B, S) -> (M, 3, b_m, S))."""
+    (3, B, S) -> (M, 3, b_m, S)). ``local_steps`` H > 1 (delta-payload
+    rules) carves the global batch into H per-local-step slices FIRST:
+    (H, M, b_m, ...) with b_m = B / (H · M) — one round consumes the same
+    global sample count whatever the payload cadence."""
+    hm = local_steps * m
     out = {}
     for key, leaf in batch.items():
         if key == "positions":
             three, b = leaf.shape[0], leaf.shape[1]
             rest = leaf.shape[2:]
-            out[key] = leaf.reshape((three, m, b // m) + rest).swapaxes(0, 1)
+            split = leaf.reshape((three, hm, b // hm) + rest).swapaxes(0, 1)
         else:
             b = leaf.shape[0]
-            out[key] = leaf.reshape((m, b // m) + leaf.shape[1:])
+            split = leaf.reshape((hm, b // hm) + leaf.shape[1:])
+        out[key] = (split.reshape((local_steps, m) + split.shape[1:])
+                    if local_steps > 1 else split)
     return out
 
 
-def worker_split_abstract(batch: dict, m: int) -> dict:
+def worker_split_abstract(batch: dict, m: int, local_steps: int = 1
+                          ) -> dict:
     """ShapeDtypeStruct version of ``worker_split`` (dry-run path)."""
+    lead = (local_steps,) if local_steps > 1 else ()
+    hm = local_steps * m
     out = {}
     for key, leaf in batch.items():
         if key == "positions":
             three, b = leaf.shape[0], leaf.shape[1]
-            shp = (m, three, b // m) + leaf.shape[2:]
+            shp = lead + (m, three, b // hm) + leaf.shape[2:]
         else:
             b = leaf.shape[0]
-            shp = (m, b // m) + leaf.shape[1:]
+            shp = lead + (m, b // hm) + leaf.shape[1:]
         out[key] = jax.ShapeDtypeStruct(shp, leaf.dtype)
     return out
 
@@ -544,6 +557,13 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, m: int,
 
     # ------------- rules with innovation state: the shared Algorithm-1
     # core drives the round; this function only applies the server update.
+    # Delta-payload rules (local_momentum / fedadam) ride the SAME path:
+    # the round returns the mean accumulated model delta as nabla, and the
+    # trainer's fused AMSGrad server consumes it — the "FedAMSGrad"
+    # variant (server momentum over deltas; the engine/sim planes run the
+    # rules' prescribed sgd(1.0)/Adam servers — parity oracles live
+    # there, not here). Batches then carry a leading (H,) local-step axis
+    # (``worker_split(..., local_steps=H)``).
     if use_flat:
         def step_flat(state: DistTrainState, batch):
             k = state.step
@@ -717,7 +737,11 @@ def jit_train_step(cfg: ModelConfig, mesh, hp: TrainHParams):
         shards=shards, flat_shard=flat_shard)
     sshard = jax.tree.map(lambda s: to_named(mesh, s), sspecs,
                           is_leaf=lambda x: isinstance(x, P))
-    spec_for = train_batch_specs(mesh)
+    # delta-payload rules feed (H, M, b_m, ...) batches (worker_split with
+    # local_steps) — the local-step axis is a replicated leading dim
+    spec_for = train_batch_specs(
+        mesh, hp.rule.local_steps
+        if strategy_for(hp.rule).delta_payload else 1)
 
     def batch_shardings(batch_sds):
         return {k: to_named(mesh, spec_for(k, v.ndim))

@@ -17,7 +17,7 @@ import numpy as np
 
 import repro.configs as C
 from repro.checkpoint import io as ckpt
-from repro.core.comm import strategy_kinds
+from repro.core.comm import STRATEGIES, strategy_kinds
 from repro.core.rules import CommRule
 from repro.data.synthetic import lm_tokens
 from repro.distributed.trainer import (TrainHParams, flat_state_shards,
@@ -48,7 +48,12 @@ def run_sim(cfg, rule, args) -> None:
     steps = args.steps
     toks = make_token_batches(cfg, global_batch=args.global_batch,
                               seq=args.seq, steps=steps)
-    per_step = [worker_split({"tokens": toks[i]}, m) for i in range(steps)]
+    # delta-payload rules consume (H, M, b, ·) per round; adaptive H runs
+    # against batches padded to the adaptation cap (the realized schedule
+    # masks each worker's scan to its own H_m)
+    h = _round_local_steps(rule, args)
+    per_step = [worker_split({"tokens": toks[i]}, m, local_steps=h)
+                for i in range(steps)]
     batches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
 
     mode = "async" if args.async_tau else "barrier"
@@ -65,6 +70,22 @@ def run_sim(cfg, rule, args) -> None:
           f"up {row['mbytes_up']:.3f} MB, "
           f"utilization {row['utilization_mean']:.2f}")
     print(json.dumps(row, indent=1))
+
+
+def _round_local_steps(rule: CommRule, args) -> int:
+    """Local-step axis H of one round's batch: the adaptation cap for
+    adaptive-H runs, the fixed period otherwise, 1 for gradient-payload
+    rules. Validates the global batch divides into H · M slices."""
+    if not STRATEGIES[rule.kind].delta_payload:
+        return 1
+    h = (rule.resolved_local_steps_max if rule.adapt_local_steps
+         else rule.local_steps)
+    m = args.workers or 4
+    if args.global_batch % (h * m):
+        raise SystemExit(
+            f"--global-batch {args.global_batch} must divide into "
+            f"local_steps*workers = {h}*{m} per-local-step slices")
+    return h
 
 
 def main() -> None:
@@ -115,6 +136,20 @@ def main() -> None:
     p.add_argument("--avp-compose", action="store_true",
                    help="avp rule: upload only when due AND the "
                         "innovation energy clears the CADA RHS")
+    p.add_argument("--local-steps", type=int, default=1,
+                   help="delta-payload rules (local_momentum | fedadam): "
+                        "local optimizer steps per communication round — "
+                        "the payload becomes the accumulated model delta")
+    p.add_argument("--adapt-local-steps", action="store_true",
+                   help="sim runtime only: adapt each worker's local-step "
+                        "count from observed comm vs compute time (avp's "
+                        "period rule generalized to local steps)")
+    p.add_argument("--local-steps-min", type=int, default=1,
+                   help="adaptive local steps: per-worker lower bound")
+    p.add_argument("--local-steps-max", type=int, default=0,
+                   help="adaptive local steps: upper bound (0 = max-delay)")
+    p.add_argument("--local-lr", type=float, default=0.1,
+                   help="delta-payload rules: local optimizer step size")
     p.add_argument("--state-fsdp-axes", default="",
                    help="comma list of mesh axes to ZeRO the flat "
                         "optimizer/comm state over (e.g. 'data')")
@@ -139,6 +174,11 @@ def main() -> None:
     if not cfg.embed_input:
         raise SystemExit(f"{args.arch} consumes modality embeddings; use "
                          "examples/serve_decode.py or the dry-run for it")
+    if args.adapt_local_steps and args.runtime != "sim":
+        raise SystemExit(
+            "--adapt-local-steps needs --runtime sim: the adaptation "
+            "signal is comm vs compute time from the sim's link model — "
+            "the mesh runtime has no clock to adapt from")
     rule = CommRule(kind=args.rule, c=args.c, d_max=10, max_delay=50,
                     quantize_bits=args.quantize_bits,
                     error_feedback=not args.no_error_feedback,
@@ -146,7 +186,13 @@ def main() -> None:
                     sparse_wire=args.sparse_wire,
                     period_min=args.period_min,
                     period_max=args.period_max,
-                    avp_compose=args.avp_compose)
+                    avp_compose=args.avp_compose,
+                    local_steps=args.local_steps,
+                    adapt_local_steps=args.adapt_local_steps,
+                    local_steps_min=args.local_steps_min,
+                    local_steps_max=args.local_steps_max,
+                    local_lr=args.local_lr,
+                    server_lr=args.lr)
     if args.runtime == "sim":
         run_sim(cfg, rule, args)
         return
@@ -172,19 +218,28 @@ def main() -> None:
 
     batches = make_token_batches(cfg, global_batch=args.global_batch,
                                  seq=args.seq, steps=args.steps)
+    # mesh runtime: delta-payload rules run their FIXED local-step count
+    # (adaptive H was rejected above); the global batch carves into
+    # H · M per-local-step slices
+    h = (rule.local_steps
+         if STRATEGIES[rule.kind].delta_payload else 1)
+    if args.global_batch % (h * m):
+        raise SystemExit(
+            f"--global-batch {args.global_batch} must divide into "
+            f"local_steps*workers = {h}*{m} per-local-step slices")
     with set_mesh(mesh):
         state = init_train_state(cfg, hp, m, jax.random.PRNGKey(0),
                                  shards=shards)
         if step is None:
             sds = jax.tree.map(
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
-                worker_split({"tokens": batches[0]}, m))
+                worker_split({"tokens": batches[0]}, m, local_steps=h))
             step = make(sds)
 
         t0 = time.time()
         history = []
         for i in range(args.steps):
-            batch = worker_split({"tokens": batches[i]}, m)
+            batch = worker_split({"tokens": batches[i]}, m, local_steps=h)
             state, mets = step(state, batch)
             if i % args.log_every == 0 or i == args.steps - 1:
                 # scalars only: per-worker arrays (upload_mask, staleness)

@@ -139,6 +139,22 @@ class ComputeModel:
             t += self.eval_time(worker, local_iter, e, now + t)
         return t
 
+    def round_time(self, worker: int, first_iter: int, now: float,
+                   h: int, n_evals: int) -> float:
+        """Seconds of compute for one COMM ROUND of ``h`` sequential local
+        iterations starting at local iteration index ``first_iter`` — the
+        delta-payload rules' pricing unit (a worker runs h local optimizer
+        steps between uploads). Each local iteration draws its own
+        eval times at index ``first_iter + j`` (callers space rounds by
+        the schedule's H cap so draws never collide across rounds), and
+        transient slowdown windows apply at the accumulated clock.
+        ``h=1`` is bitwise :meth:`iter_time` at ``first_iter``.
+        """
+        t = 0.0
+        for j in range(h):
+            t += self.iter_time(worker, first_iter + j, now + t, n_evals)
+        return t
+
 
 _BYTES_PER_MBIT = 1e6 / 8.0
 

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import flat as F
+from repro.core.comm import STRATEGIES, adapt_period
 from repro.core.engine import CADAEngine, sample_cohorts
 from repro.core.rules import CommRule
 from repro.optim.fused import FusedAMSGrad
@@ -148,9 +149,28 @@ class SimRuntime:
         self.cfg = config
         self.m = n_workers
         self.rule = rule
+        if STRATEGIES[rule.kind].delta_payload:
+            # delta-payload rules PRESCRIBE their server optimizer
+            # (engine resolves strategy.server_optimizer() on None) —
+            # the sim's FusedAMSGrad default would silently override it
+            if config.mode == "async":
+                raise ValueError(
+                    "async mode gates one fresh gradient per local "
+                    "iteration; delta-payload rules (local_momentum / "
+                    "fedadam — local steps between uploads) are "
+                    "barrier-only")
+            if rule.adapt_local_steps and config.cohort_size:
+                raise ValueError(
+                    "adapt_local_steps is not supported on the cohort "
+                    "plane yet — run adaptive H dense, or fixed "
+                    "local_steps cohort-virtualized")
+        elif optimizer is None:
+            optimizer = FusedAMSGrad(lr=lr)
+        # the sim IS the clock adapt_local_steps requires: allow it here
+        # (the bare-engine constructor rejects it)
         self.engine = CADAEngine(
-            loss_fn, FusedAMSGrad(lr=lr) if optimizer is None else optimizer,
-            rule, n_workers, interpret=interpret)
+            loss_fn, optimizer, rule, n_workers, interpret=interpret,
+            allow_adaptive_local_steps=True)
         if config.mode == "async" and not self.engine._fused_opt:
             raise ValueError("async mode applies the fused flat-plane Adam "
                              "update server-side; pass a FusedAMSGrad")
@@ -183,6 +203,8 @@ class SimRuntime:
     # ------------------------------------------------------------ barrier
     def _run_barrier(self, params, batches) -> SimResult:
         eng, cfg = self.engine, self.cfg
+        if eng.strategy.delta_payload:
+            return self._run_barrier_delta(params, batches)
         compute, link = cfg.network.compute, cfg.network.link
         steps = jax.tree.leaves(batches)[0].shape[0]
         part = ParticipationModel(self.m, cfg.participation, cfg.seed)
@@ -240,6 +262,109 @@ class SimRuntime:
             upload_masks=masks, staleness=staleness,
             participation_masks=pmasks, metrics=mets)
 
+    # ------------------------------------------ barrier, delta payloads
+    def _run_barrier_delta(self, params, batches) -> SimResult:
+        """Barrier rounds for delta-payload (local-steps) rules.
+
+        Batches carry a local axis: (rounds, H, M, b...) — or the plain
+        (rounds, M, b...) form at the H = 1 degenerate point. Delta rules
+        always upload, so the wall-clock schedule is TRAJECTORY-
+        INDEPENDENT: the per-round per-worker local-step counts H_m and
+        all link/compute times are computed host-side in one pass BEFORE
+        the numeric run, then (for adaptive H) handed to the engine as a
+        (rounds, M) int32 schedule that masks each worker's scan to its
+        first H_m local steps.
+
+        Adaptation generalizes avp's period rule from "skip uploads" to
+        "take local steps": a worker whose observed comm time (download +
+        upload) exceeded its compute time for the round grows H by one,
+        else shrinks — clipped to [local_steps_min, min(local_steps_max,
+        batch H capacity)] via :func:`repro.core.comm.adapt_period`.
+        Offline rounds freeze a worker's H. Pricing charges
+        ``compute.round_time(w, k * h_pad, ·, H_m, evals)`` — H_m
+        successive local-iteration draws per round, rounds spaced by the
+        batch's H capacity so draws never collide across rounds."""
+        eng, cfg, rule = self.engine, self.cfg, self.rule
+        compute, link = cfg.network.compute, cfg.network.link
+        leaves = jax.tree.leaves(batches)[0]
+        has_h = rule.local_steps > 1 or rule.adapt_local_steps
+        steps = leaves.shape[0]
+        h_pad = leaves.shape[1] if has_h else 1
+        adaptive = rule.adapt_local_steps
+        h_min = rule.local_steps_min
+        h_cap = (min(rule.resolved_local_steps_max, h_pad) if adaptive
+                 else min(rule.local_steps, h_pad))
+        if adaptive and h_pad < h_min:
+            raise ValueError(
+                f"adaptive local steps need batches with at least "
+                f"local_steps_min={h_min} local iterations per round; "
+                f"got H axis {h_pad}")
+        part = ParticipationModel(self.m, cfg.participation, cfg.seed)
+        pmasks = (np.ones((steps, self.m), bool) if part.full
+                  else part.masks(steps))
+
+        st = eng.init(params)
+        n = eng._layout.n if eng.fused else sum(
+            x.size for x in jax.tree.leaves(params))
+        up_bytes, down_bytes = self._byte_costs(n)
+        evals = eng.strategy.grad_evals_per_iter
+
+        h = np.full(self.m, min(max(rule.local_steps, h_min), h_cap)
+                    if adaptive else h_cap, np.int64)
+        hsched = np.zeros((steps, self.m), np.int64)
+        t = 0.0
+        t_end = np.zeros(steps)
+        busy = np.zeros(self.m)
+        bytes_up = bytes_down = 0.0
+        comm_s = np.zeros(self.m)
+        comp_s = np.zeros(self.m)
+        for k in range(steps):
+            hsched[k] = h
+            finish = t
+            for w in range(self.m):
+                if not pmasks[k, w]:
+                    continue
+                dt_down = link.down_time(w, down_bytes, now=t)
+                dt_comp = compute.round_time(w, k * h_pad, t + dt_down,
+                                             int(h[w]), evals)
+                dt_up = link.up_time(w, up_bytes,
+                                     now=t + dt_down + dt_comp)
+                busy[w] += dt_comp
+                bytes_down += down_bytes
+                bytes_up += up_bytes
+                comm_s[w] = dt_down + dt_up
+                comp_s[w] = dt_comp
+                finish = max(finish, t + dt_down + dt_comp + dt_up)
+            if adaptive:
+                h = np.where(
+                    pmasks[k],
+                    np.asarray(adapt_period(h, comm_s > comp_s,
+                                            h_min, h_cap)),
+                    h)
+            t = finish + cfg.server_update_s
+            t_end[k] = t
+
+        part_arg = None if part.full else jnp.asarray(pmasks)
+        hs_arg = jnp.asarray(hsched, jnp.int32) if adaptive else None
+        fst, mets = jax.jit(eng.run)(st, batches, part_arg, hs_arg)
+
+        masks = np.asarray(mets["upload_mask"])          # (steps, M)
+        staleness = np.asarray(mets["staleness"])
+        losses = np.asarray(mets["loss"], np.float64)
+        wall = float(t)
+        return SimResult(
+            mode="barrier", profile=cfg.network.name, steps=steps,
+            wall_s=wall, times=t_end, loss_times=t_end, losses=losses,
+            uploads=int(masks.sum()),
+            grad_evals=int(np.asarray(mets["grad_evals"]).sum()),
+            bytes_up=bytes_up, bytes_down=bytes_down,
+            utilization=busy / wall if wall > 0 else np.zeros(self.m),
+            max_staleness=int(staleness.max()),
+            final_params=fst.params,
+            upload_masks=masks, staleness=staleness,
+            participation_masks=pmasks,
+            metrics={**mets, "local_steps": hsched})
+
     # -------------------------------------------- barrier, federated cohort
     def _run_barrier_cohort(self, params, batches,
                             rounds: int | None = None) -> SimResult:
@@ -273,6 +398,12 @@ class SimRuntime:
         n = eng._layout.n
         up_bytes, down_bytes = self._byte_costs(n)
         evals = eng.strategy.grad_evals_per_iter
+        # delta-payload rules run a fixed H local steps per round on the
+        # cohort plane; grad rules price exactly one iteration (h = 1
+        # collapses round_time to the pre-local-steps iter_time bitwise)
+        h_static = (self.rule.local_steps if eng.strategy.delta_payload
+                    else 1)
+        has_h = eng.strategy.delta_payload and self.rule.local_steps > 1
 
         t = 0.0
         t_end = np.zeros(steps)
@@ -286,7 +417,9 @@ class SimRuntime:
         for k in range(steps):
             cohort = cohorts[k]
             batch = (batches(k, cohort) if callable(batches)
-                     else jax.tree.map(lambda x: x[k][cohort], batches))
+                     else jax.tree.map(
+                         (lambda x: x[k][:, cohort]) if has_h
+                         else (lambda x: x[k][cohort]), batches))
             st, mets = eng.step_cohort(st, pool, batch, cohort)
             masks[k] = np.asarray(mets["upload_mask"])
             stal[k] = np.asarray(mets["staleness"])
@@ -296,7 +429,8 @@ class SimRuntime:
             finish = t
             for j, w in enumerate(int(x) for x in cohort):
                 dt_down = link.down_time(w, down_bytes, now=t)
-                dt_comp = compute.iter_time(w, k, t + dt_down, evals)
+                dt_comp = compute.round_time(w, k * h_static, t + dt_down,
+                                             h_static, evals)
                 dt_up = (link.up_time(w, up_bytes,
                                       now=t + dt_down + dt_comp)
                          if masks[k, j] else 0.0)

@@ -12,7 +12,7 @@ from repro.core.comm import (CommContext, CommState, broadcast_to_workers,
                              record_progress, select_rows, strategy_for,
                              strategy_kinds)
 from repro.core.quantize import per_worker_quantize_dequantize
-from repro.core.rules import RULES, CommRule
+from repro.core.rules import LOCAL_RULES, RULES, CommRule
 
 M = 2
 PARAMS = {"w": jnp.array([1.0, -1.0]), "b": jnp.array([0.5])}
@@ -37,8 +37,8 @@ def _wtree(w0, w1):
 # ------------------------------------------------------------------ registry
 
 def test_registry_covers_all_rule_kinds():
-    assert set(strategy_kinds()) == set(RULES)
-    for kind in RULES:
+    assert set(strategy_kinds()) == set(RULES) | set(LOCAL_RULES)
+    for kind in RULES + LOCAL_RULES:
         s = strategy_for(CommRule(kind=kind))
         assert s.kind == kind
         assert s.rule.kind == kind

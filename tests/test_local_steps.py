@@ -1,0 +1,335 @@
+"""The payload/cadence axis: delta-payload rules, per-worker local steps,
+and the H = 1 degenerate gate.
+
+Three contracts pinned here:
+
+  * **Seed-engine parity** — the strategy-layer ``local_momentum`` /
+    ``fedadam`` rules (core/local_update.py) reproduce the seed
+    :class:`LocalUpdateEngine` trajectories at the same H and seeds, on
+    both the per-leaf pytree plane and the fused flat plane. The seed
+    engine survives ONLY as this oracle; everything else routes through
+    the rule layer.
+  * **H = 1 degeneracy** — for the 8 gradient-payload rules the
+    refactored round is BIT-exact to the pre-axis form (the delta branch
+    is a static Python ``if``, so their graph is untouched): an inline
+    oracle of the pre-refactor ``comm_round`` body must match exactly.
+    For the delta rules, a plain (M, b, ·) batch and the explicit
+    (1, M, b, ·) local-axis form are bit-identical.
+  * **Adaptation** — ``adapt_period`` (the helper shared by avp's upload
+    period and per-worker H), the sim's comm-vs-compute H schedule (grows
+    on the WAN, collapses to 1 on free links), and the pricing identity
+    ``round_time(·, h=1) == iter_time``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.comm import (CommContext, adapt_period, comm_round,
+                             init_comm_state, select_rows, strategy_for)
+from repro.core.engine import CADAEngine
+from repro.core.local_update import LocalUpdateEngine
+from repro.core.rules import LOCAL_RULES, RULES, CommRule
+from repro.sim.clock import network_profile
+from repro.sim.runtime import SimConfig, SimRuntime
+
+M = 3
+H = 4
+ROUNDS = 5
+
+
+def _loss_fn(p, b):
+    x, y = b
+    return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+
+def _params():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    return {"w": jax.random.normal(k1, (6, 2)) * 0.3,
+            "b": jax.random.normal(k2, (2,)) * 0.1}
+
+
+def _batches(rounds=ROUNDS, h=H, m=M, seed=1):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(kx, (rounds, h, m, 8, 6)),
+            jax.random.normal(ky, (rounds, h, m, 8, 2)))
+
+
+def _local_rule(kind, h=H, **kw):
+    return CommRule(kind=kind, c=0.6, d_max=4, max_delay=10,
+                    local_steps=h, local_lr=0.05, local_beta=0.9,
+                    server_lr=0.01, **kw)
+
+
+# ------------------------------------------------- seed-engine parity
+
+@pytest.mark.parametrize("kind", LOCAL_RULES)
+@pytest.mark.parametrize("h", [1, H])
+@pytest.mark.parametrize("fused", [False, True])
+def test_strategy_rules_match_seed_engine(kind, h, fused):
+    """Same H, same seeds: the registered delta-payload rule's trajectory
+    equals the seed LocalUpdateEngine's (params allclose — the float
+    association differs; uploads / grad-eval accounting exactly)."""
+    params = _params()
+    batches = _batches(h=h)
+
+    seed_eng = LocalUpdateEngine(_loss_fn, n_workers=M, h_period=h,
+                                 algo=kind, lr=0.05, beta=0.9,
+                                 server_lr=0.01)
+    sst, smets = jax.jit(seed_eng.run)(seed_eng.init(params), batches)
+
+    rule = _local_rule(kind, h=h)
+    eng = CADAEngine(_loss_fn, None, rule, M, fused=fused)
+    ebatches = (batches if h > 1
+                else jax.tree.map(lambda x: x[:, 0], batches))
+    est, emets = jax.jit(eng.run)(eng.init(params), ebatches)
+
+    for a, b in zip(jax.tree.leaves(sst.params),
+                    jax.tree.leaves(est.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+    # per-round accounting: M uploads, M·H gradient evaluations
+    np.testing.assert_array_equal(
+        np.asarray(smets["uploads"]),
+        np.asarray(emets["uploads"]).astype(np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(smets["grad_evals"]),
+        np.asarray(emets["grad_evals"]).astype(np.int32))
+    # per-round mean loss (grand mean over the H × M evaluations)
+    np.testing.assert_allclose(
+        np.asarray(smets["loss"]).mean(axis=1),
+        np.asarray(emets["loss"]), rtol=1e-5, atol=1e-7)
+
+
+# --------------------------------------------------- H = 1 degeneracy
+
+def _oracle_round(strategy, comm, params, batch, k, *, vgrad, vgrad_per):
+    """The PRE-refactor ``comm_round`` body, inlined verbatim (gradient
+    payload, no participation): the bit-exactness oracle for the 8
+    gradient-payload rules."""
+    r = strategy.rule
+    m = comm.staleness.shape[0]
+    extras = strategy.pre_step(comm.extras, params, k)
+    losses, fresh = vgrad(params, batch)
+    ctx = CommContext(params=params, batch=batch, fresh=fresh,
+                      comm=comm._replace(extras=extras), step=k, m=m,
+                      vgrad=vgrad, vgrad_per=vgrad_per,
+                      participation=None)
+    lhs, cache = strategy.lhs(ctx, extras)
+    rhs = r.rhs(comm.diff_hist)
+    upload = (lhs > rhs) | (comm.staleness >= r.max_delay)
+    delta = jax.tree.map(
+        lambda f, s: f.astype(jnp.float32) - s.astype(jnp.float32),
+        fresh, comm.worker_grads)
+    delta = strategy.wire_delta(ctx, extras, cache, delta)
+    zeros = jax.tree.map(jnp.zeros_like, delta)
+    wire = jax.tree.map(
+        lambda d, s: d.astype(s.dtype),
+        select_rows(upload, delta, zeros), comm.worker_grads)
+    nabla = jax.tree.map(
+        lambda n, d: (n.astype(jnp.float32)
+                      + jnp.mean(d.astype(jnp.float32), axis=0)
+                      ).astype(n.dtype),
+        comm.nabla, wire)
+    worker_grads = jax.tree.map(
+        lambda s, d: (s.astype(jnp.float32) + d.astype(jnp.float32)
+                      ).astype(s.dtype),
+        comm.worker_grads, wire)
+    staleness = jnp.where(upload, 1, comm.staleness + 1)
+    extras = strategy.post_upload(extras, cache, upload, ctx)
+    return (losses, upload, staleness, nabla, worker_grads, extras)
+
+
+@pytest.mark.parametrize("kind", RULES)
+def test_grad_rules_bit_exact_vs_pre_refactor_round(kind):
+    """The refactored round leaves every gradient-payload rule's graph
+    untouched: outputs are BITWISE equal to the inline pre-refactor
+    oracle, iteration by iteration."""
+    rule = CommRule(kind=kind, c=0.6, d_max=4, max_delay=10)
+    strategy = strategy_for(rule)
+    params = _params()
+    vgrad = jax.vmap(jax.value_and_grad(_loss_fn), in_axes=(None, 0))
+    vgrad_per = jax.vmap(jax.value_and_grad(_loss_fn), in_axes=(0, 0))
+    comm = init_comm_state(strategy, params, M)
+    batches = jax.tree.map(lambda x: x[:, 0], _batches(h=1))
+
+    for k in range(ROUNDS):
+        b = jax.tree.map(lambda x: x[k], batches)
+        out = comm_round(strategy, comm, params, b, k,
+                         vgrad=vgrad, vgrad_per=vgrad_per)
+        ol, ou, os_, on, ow, oe = _oracle_round(
+            strategy, comm, params, b, k,
+            vgrad=vgrad, vgrad_per=vgrad_per)
+        np.testing.assert_array_equal(np.asarray(out.upload),
+                                      np.asarray(ou))
+        np.testing.assert_array_equal(np.asarray(out.comm.staleness),
+                                      np.asarray(os_))
+        for a, e in zip(jax.tree.leaves((out.losses, out.comm.nabla,
+                                         out.comm.worker_grads,
+                                         out.comm.extras)),
+                        jax.tree.leaves((ol, on, ow, oe))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(e))
+        comm = out.comm
+        # drift the params so later iterations exercise fresh state
+        params = jax.tree.map(lambda p: p - 0.01 * p, params)
+
+
+@pytest.mark.parametrize("kind", LOCAL_RULES)
+@pytest.mark.parametrize("fused", [False, True])
+def test_delta_rules_plain_batch_equals_h1_axis(kind, fused):
+    """At H = 1 a delta rule accepts the plain (M, b, ·) batch form; the
+    explicit (1, M, b, ·) local-axis form (driven by an all-ones
+    per-worker schedule, the sim's adaptive plumbing) is bit-identical."""
+    params = _params()
+    batches = _batches(h=1)
+    rule = _local_rule(kind, h=1)
+    eng = CADAEngine(_loss_fn, None, rule, M, fused=fused)
+    st0 = eng.init(params)
+    st_a, mets_a = jax.jit(eng.run)(
+        st0, batches, None, jnp.ones((ROUNDS, M), jnp.int32))
+    st_b, mets_b = jax.jit(eng.run)(
+        st0, jax.tree.map(lambda x: x[:, 0], batches))
+    for a, b in zip(jax.tree.leaves(st_a.params),
+                    jax.tree.leaves(st_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(mets_a["loss"]),
+                                  np.asarray(mets_b["loss"]))
+
+
+def test_cohort_matches_dense_participation_local_momentum():
+    """Fixed-H local momentum on the cohort plane is bit-exact to the
+    dense flat plane run with the cohort's indicator mask (the pooled
+    momenta plane rides the same gather/scatter as laq's residual)."""
+    from repro.core.engine import cohorts_to_participation, sample_cohorts
+
+    params = _params()
+    rule = _local_rule("local_momentum", h=H)
+    batches = _batches()
+    cohorts = sample_cohorts(M, 2, ROUNDS, seed=3)
+    pmasks = cohorts_to_participation(cohorts, M)
+
+    dense = CADAEngine(_loss_fn, None, rule, M, fused=True)
+    dst, dmets = jax.jit(dense.run)(dense.init(params), batches,
+                                    jnp.asarray(pmasks))
+
+    coh = CADAEngine(_loss_fn, None, rule, M, fused=True)
+    cst, pool = coh.init_cohort(params)
+    for k in range(ROUNDS):
+        cohort = cohorts[k]
+        cb = jax.tree.map(lambda x: x[k][:, cohort], batches)
+        cst, cm = coh.step_cohort(cst, pool, cb, cohort)
+        np.testing.assert_array_equal(
+            np.asarray(dmets["upload_mask"])[k][cohort],
+            np.asarray(cm["upload_mask"]))
+    np.testing.assert_array_equal(np.asarray(dst.params_flat),
+                                  np.asarray(cst.params_flat))
+
+
+def test_quantize_composes_with_delta_payload():
+    """laq-style quantized uploads of the model delta ride the existing
+    wire hook: the run works and ships fewer bytes than fp32."""
+    params = _params()
+    batches = _batches()
+    fp32 = _local_rule("local_momentum")
+    q8 = _local_rule("local_momentum", quantize_bits=8)
+    b_fp32, b_q8 = [], []
+    for rule, sink in ((fp32, b_fp32), (q8, b_q8)):
+        eng = CADAEngine(_loss_fn, None, rule, M)
+        _, mets = jax.jit(eng.run)(eng.init(params), batches)
+        assert np.isfinite(np.asarray(mets["loss"])).all()
+        sink.append(float(np.asarray(mets["bytes_up"]).sum()))
+    assert b_q8[0] < b_fp32[0]
+
+
+# ----------------------------------------------------------- adaptation
+
+def test_adapt_period_shared_helper():
+    h = jnp.array([1, 3, 8], jnp.int32)
+    grow = jnp.array([True, False, True])
+    np.testing.assert_array_equal(
+        np.asarray(adapt_period(h, grow, 1, 8)), [2, 2, 8])
+    # clipping at both bounds
+    np.testing.assert_array_equal(
+        np.asarray(adapt_period(jnp.array([1]), jnp.array([False]), 1, 8)),
+        [1])
+
+
+@pytest.mark.parametrize("profile", ["wan", "hetero"])
+def test_round_time_h1_is_iter_time(profile):
+    compute = network_profile(profile, M).compute
+    for w in range(M):
+        for k in (0, 3, 7):
+            assert compute.round_time(w, k, 1.5, 1, 2) == \
+                compute.iter_time(w, k, 1.5, 2)
+    # h successive local iterations accumulate (start times advance)
+    assert compute.round_time(0, 0, 0.0, 4, 1) > \
+        compute.round_time(0, 0, 0.0, 1, 1)
+
+
+def test_adaptive_schedule_grows_on_wan_shrinks_on_zero():
+    params = _params()
+    batches = _batches(rounds=6, h=8)
+    rule = CommRule(kind="local_momentum", c=0.6, d_max=4, max_delay=10,
+                    adapt_local_steps=True, local_steps_max=8,
+                    local_lr=0.05)
+    hs = {}
+    for profile in ("wan", "zero"):
+        rt = SimRuntime(_loss_fn, rule, M,
+                        SimConfig(network=network_profile(profile, M)))
+        res = rt.run(params, batches)
+        hs[profile] = np.asarray(res.metrics["local_steps"])
+    # WAN: comm dominates -> H climbs toward the cap
+    assert (hs["wan"][-1] > hs["wan"][0]).all()
+    assert hs["wan"].max() > 1
+    # free links: compute dominates -> H collapses to (and stays at) 1
+    assert (hs["zero"][1:] == 1).all()
+
+
+# ----------------------------------------------------------- validation
+
+def test_rule_validation_rejects_bad_local_steps():
+    with pytest.raises(ValueError):
+        CommRule(kind="local_momentum", local_steps=0)
+    with pytest.raises(ValueError):
+        CommRule(kind="local_momentum", local_lr=0.0)
+    with pytest.raises(ValueError):
+        CommRule(kind="local_momentum", local_beta=1.0)
+    with pytest.raises(ValueError):
+        CommRule(kind="local_momentum", adapt_local_steps=True,
+                 local_steps_min=4, local_steps_max=2)
+    # the payload/cadence axis belongs to delta-payload rules only
+    with pytest.raises(ValueError):
+        CommRule(kind="cada2", local_steps=2)
+    with pytest.raises(ValueError):
+        CommRule(kind="cada2", adapt_local_steps=True)
+
+
+def test_bare_engine_rejects_adaptive_h():
+    rule = CommRule(kind="local_momentum", adapt_local_steps=True)
+    with pytest.raises(ValueError, match="clock"):
+        CADAEngine(_loss_fn, None, rule, M)
+    # the sim IS the clock: its constructor opts in
+    CADAEngine(_loss_fn, None, rule, M, allow_adaptive_local_steps=True)
+
+
+def test_sim_rejects_delta_async_and_adaptive_cohort():
+    rule = _local_rule("fedadam")
+    with pytest.raises(ValueError, match="barrier-only"):
+        SimRuntime(_loss_fn, rule, M,
+                   SimConfig(network=network_profile("wan", M),
+                             mode="async"))
+    arule = CommRule(kind="fedadam", adapt_local_steps=True,
+                     local_lr=0.05)
+    with pytest.raises(ValueError, match="cohort"):
+        SimRuntime(_loss_fn, arule, M,
+                   SimConfig(network=network_profile("wan", M),
+                             cohort_size=2))
+
+
+def test_grad_rules_reject_local_steps_argument():
+    rule = CommRule(kind="cada2", c=0.6, d_max=4, max_delay=10)
+    eng = CADAEngine(_loss_fn, None, rule, M)
+    st = eng.init(_params())
+    b = jax.tree.map(lambda x: x[0, 0], _batches(h=1))
+    with pytest.raises(ValueError, match="delta-payload"):
+        eng.step(st, b, local_steps=jnp.full((M,), 1, jnp.int32))
