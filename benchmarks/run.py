@@ -224,6 +224,14 @@ def _bench_m_sweep(ms=(10, 256, 2048), iters=(300, 100, 15),
     arm records the device/host byte split: the dense plane keeps the
     whole O(M·n) worker plane device-resident (``host_pool_bytes`` = 0),
     the cohort arm keeps O(C·n) on device and parks O(M·n) on the host.
+
+    ``{M}/cohort{C}`` is the serial transfer oracle (``pipeline=False``);
+    ``.../pipelined`` double-buffers the pool traffic under device
+    compute and ``.../pipelined/memmap`` runs the same pipeline over a
+    disk-backed pool. All three ride the same jitted step, so
+    ``speedup_vs_serial`` isolates the transfer time the overlap hides;
+    each arm also reports its per-round ``gather_ms/step_ms/scatter_ms``
+    host-side phase breakdown.
     """
     import jax
     import numpy as np
@@ -256,24 +264,41 @@ def _bench_m_sweep(ms=(10, 256, 2048), iters=(300, 100, 15),
         arms[m] = {"compiled": compiled, "st": st, "batches": batches,
                    "iters": its, "dt": float("inf")}
 
-    # cohort arm: same rule/problem/batch stream as the largest dense M,
-    # only the C sampled rows exist on device per round
+    # cohort arms: same rule/problem/batch stream as the largest dense M,
+    # only the C sampled rows exist on device per round. Three variants,
+    # interleaved with the dense arms: the serial oracle
+    # (pipeline=False), the double-buffered pipeline, and the pipeline
+    # over a disk-backed memmap pool — the pipelined-vs-serial delta is
+    # the transfer time the overlap hides, measured within ONE run.
+    import shutil
+    import tempfile
+
     m_big, its_big = ms[-1], iters[-1]
     eng_c = CADAEngine(logreg_loss, FusedAMSGrad(lr=0.01), rule, m_big)
     cohorts = sample_cohorts(m_big, cohort_c, its_big, seed=1)
     cohort_batches = [
         jax.tree.map(lambda x, i=i: x[i][cohorts[i]],
                      arms[m_big]["batches"]) for i in range(its_big)]
+    memmap_dir = tempfile.mkdtemp(prefix="bench_pool_")
+    variants = {
+        "serial": {"pipeline": False, "storage": "ram", "path": None},
+        "pipelined": {"pipeline": True, "storage": "ram", "path": None},
+        "pipelined/memmap": {"pipeline": True, "storage": "memmap",
+                             "path": memmap_dir},
+    }
 
-    def fresh_cohort():
-        st, pool = eng_c.init_cohort(params)
+    def fresh_cohort(v):
+        st, pool = eng_c.init_cohort(params, pool_storage=v["storage"],
+                                     pool_path=v["path"])
         jax.block_until_ready(st.params_flat)
         return st, pool
 
-    st_w, pool_w = fresh_cohort()                       # compile + warmup
-    st_w, _ = eng_c.run_cohort(st_w, pool_w, cohort_batches, cohorts)
-    jax.block_until_ready(st_w.params_flat)
-    dt_cohort = float("inf")
+    for v in variants.values():                         # compile + warmup
+        st_w, pool_w = fresh_cohort(v)
+        st_w, _ = eng_c.run_cohort(st_w, pool_w, cohort_batches, cohorts,
+                                   pipeline=v["pipeline"])
+        jax.block_until_ready(st_w.params_flat)
+        v.update(dt=float("inf"), timings={}, pool=pool_w)
 
     for _ in range(3):
         for m, arm in arms.items():
@@ -282,11 +307,18 @@ def _bench_m_sweep(ms=(10, 256, 2048), iters=(300, 100, 15),
             st2, _ = arm["compiled"](fresh, arm["batches"])
             jax.block_until_ready(st2.params)
             arm["dt"] = min(arm["dt"], time.time() - t0)
-        st_c, pool_c = fresh_cohort()
-        t0 = time.time()
-        st_c, _ = eng_c.run_cohort(st_c, pool_c, cohort_batches, cohorts)
-        jax.block_until_ready(st_c.params_flat)
-        dt_cohort = min(dt_cohort, time.time() - t0)
+        for v in variants.values():
+            st_c, pool_c = fresh_cohort(v)
+            t = {}
+            t0 = time.time()
+            st_c, _ = eng_c.run_cohort(st_c, pool_c, cohort_batches,
+                                       cohorts, pipeline=v["pipeline"],
+                                       timings=t)
+            jax.block_until_ready(st_c.params_flat)
+            dt = time.time() - t0
+            if dt < v["dt"]:
+                v.update(dt=dt, timings=t, pool=pool_c)
+    shutil.rmtree(memmap_dir, ignore_errors=True)
     sweep = {}
     for m, arm in arms.items():
         _, eval_b = _comm_state_bytes(arm["st"].comm)
@@ -300,22 +332,43 @@ def _bench_m_sweep(ms=(10, 256, 2048), iters=(300, 100, 15),
             "device_worker_plane_bytes": m * n_flat * 4,
             "host_pool_bytes": 0,
         }
-    sps_cohort = round(its_big / dt_cohort, 1)
-    if sps_cohort < 5 * sweep[str(m_big)]["steps_per_sec"]:
+    sps_serial = round(its_big / variants["serial"]["dt"], 1)
+    if sps_serial < 5 * sweep[str(m_big)]["steps_per_sec"]:
         print(f"[cada] WARNING: cohort arm at M={m_big} C={cohort_c} is "
-              f"{sps_cohort} steps/s vs dense "
+              f"{sps_serial} steps/s vs dense "
               f"{sweep[str(m_big)]['steps_per_sec']} — below the 5x the "
               f"O(C·n) plane is supposed to buy", file=sys.stderr)
-    sweep[f"{m_big}/cohort{cohort_c}"] = {
-        "workers": m_big,
-        "cohort": cohort_c,
-        "iters": its_big,
-        "steps_per_sec": sps_cohort,
-        "device_worker_plane_bytes": pool_c.device_row_bytes(cohort_c),
-        "host_pool_bytes": pool_c.nbytes,
-        "speedup_vs_dense": round(
-            sps_cohort / sweep[str(m_big)]["steps_per_sec"], 2),
-    }
+    for name, v in variants.items():
+        sps = round(its_big / v["dt"], 1)
+        t, pool_v = v["timings"], v["pool"]
+        rounds = max(1, t.get("rounds", its_big))
+        key = (f"{m_big}/cohort{cohort_c}" if name == "serial"
+               else f"{m_big}/cohort{cohort_c}/{name}")
+        sweep[key] = {
+            "workers": m_big,
+            "cohort": cohort_c,
+            "iters": its_big,
+            "pipeline": v["pipeline"],
+            "pool_storage": v["storage"],
+            "steps_per_sec": sps,
+            "gather_ms": round(t.get("gather_s", 0.0) / rounds * 1e3, 3),
+            "step_ms": round(t.get("step_s", 0.0) / rounds * 1e3, 3),
+            "scatter_ms": round(t.get("scatter_s", 0.0) / rounds * 1e3, 3),
+            "device_worker_plane_bytes": pool_v.device_row_bytes(cohort_c),
+            "host_pool_bytes": pool_v.nbytes,
+            "host_pool_mapped_bytes": pool_v.mapped_nbytes,
+            "host_pool_resident_bytes": pool_v.resident_nbytes,
+            "speedup_vs_dense": round(
+                sps / sweep[str(m_big)]["steps_per_sec"], 2),
+        }
+        if name != "serial":
+            sweep[key]["speedup_vs_serial"] = round(sps / sps_serial, 2)
+    if sweep[f"{m_big}/cohort{cohort_c}/pipelined"]["speedup_vs_serial"] \
+            < 1.0:
+        print(f"[cada] WARNING: pipelined cohort arm did not beat the "
+              f"serial oracle within this run "
+              f"({sweep[f'{m_big}/cohort{cohort_c}/pipelined']})",
+              file=sys.stderr)
     return sweep
 
 

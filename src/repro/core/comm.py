@@ -321,7 +321,17 @@ class CommStrategy:
         (M,)-scalar vectors (slots, periods) are O(n) / O(M), not O(M·n).
         A pooled entry's flat hooks see a (C, n_flat) rows view; hooks that
         touch NON-pooled (M,)-length extras must index by ``ctx.cohort``
-        when it is set (see CADA2/AVP)."""
+        when it is set (see CADA2/AVP).
+
+        Writeback-ordering contract (the pipelined cohort driver): the
+        host pool is written back LAZILY — under ``pipeline=True`` round
+        i's rows land in the pool one round late, with overlapping
+        consecutive-cohort rows forwarded on device instead
+        (``flat.run_cohort_rounds``). Hooks therefore must treat the
+        in-round ``rows`` / returned extras as the single source of truth
+        for pooled state and must NEVER read the host pool mid-round; all
+        current hooks are pure device functions of their inputs, which is
+        exactly what makes the transfer reordering bit-exact."""
         return ()
 
     def flat_pre_step(self, extras: dict, params, params_flat, k) -> dict:

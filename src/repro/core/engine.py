@@ -248,15 +248,18 @@ class CADAEngine:
         return new_state, metrics
 
     # ------------------------------------------------------ cohort plane
-    def init_cohort(self, params):
+    def init_cohort(self, params, *, pool_storage: str = "ram",
+                    pool_path: str | None = None):
         """Cohort-virtualized state: (CohortEngineState, flat.WorkerPool).
 
         Device state is O(C·n) per round + O(n) server buffers + O(M)
         scalar vectors; the O(M·n) per-worker planes live in the returned
-        host pool. Requires the fused plane; the server optimizer is the
+        host pool (``pool_storage="memmap"`` + ``pool_path`` spill them
+        past RAM). Requires the fused plane; the server optimizer is the
         fused AMSGrad kernel or any protocol optimizer (delta-payload
         rules prescribe protocol servers — sgd(1.0) / server Adam — and
-        run cohort-virtualized through the same round).
+        run cohort-virtualized through the same round). The jitted cohort
+        step is built here, once — not lazily per round.
         """
         if not self.fused:
             raise ValueError("the cohort plane requires fused=True")
@@ -270,7 +273,8 @@ class CADAEngine:
                       else jnp.float32)
         server, pool = F.init_cohort_state(
             self.strategy, layout, params, self.m, grad_dtype=grad_dtype,
-            params_flat=params_flat)
+            params_flat=params_flat, pool_storage=pool_storage,
+            pool_path=pool_path)
         if self._fused_opt:
             opt_state = self.optimizer.init_flat(layout.n_flat)
         else:
@@ -281,13 +285,35 @@ class CADAEngine:
         state = CohortEngineState(
             step=jnp.zeros([], jnp.int32), params=params,
             opt_state=opt_state, server=server, params_flat=params_flat)
+        self._adopt_pool(pool)
         return state, pool
 
-    def _build_cohort_step(self):
-        layout = self._layout
+    def _adopt_pool(self, pool) -> None:
+        """Bind the cohort step to a pool's fused-plane layout (stacking
+        order + storage dtype) and build the jitted step once."""
+        if pool.plane_dtype is None:
+            raise ValueError("the cohort step needs a uniform-dtype pool "
+                             "(the fused staging block stacks the planes)")
+        key = (pool.plane_order, np.dtype(pool.plane_dtype).str)
+        if getattr(self, "_cohort_plane_key", None) != key:
+            self._cohort_plane_key = key
+            self._plane_order = pool.plane_order
+            self._plane_dtype = pool.plane_dtype
+            self._cohort_step = self._build_cohort_step()
 
-        def step(state, rows, batch, cohort):
+    def _build_cohort_step(self):
+        """The fused-block cohort step:
+        ``step(state, fused, batch, cohort)`` with ``fused`` the
+        (P, C, n_flat) gather block. The pipelined driver forwards
+        overlapping rows into ``fused`` in a SEPARATE jitted patch before
+        this runs (see flat.run_cohort_rounds) — serial and pipelined
+        drive this one executable, which is what pins bit-exact parity."""
+        layout = self._layout
+        order, dtype = self._plane_order, self._plane_dtype
+
+        def step(state, fused, batch, cohort):
             k = state.step
+            rows = F.split_fused_rows(fused, order)
             out = F.flat_cohort_round(
                 self.strategy, layout, state.server, rows, state.params,
                 state.params_flat, batch, k, cohort, m_total=self.m,
@@ -315,44 +341,64 @@ class CADAEngine:
                 step=k + 1, params=params,
                 opt_state=opt_state, server=server, params_flat=theta)
             metrics = {"loss": jnp.mean(out.losses), **out.metrics}
-            return new_state, out.rows, metrics
+            return new_state, F.stack_fused_rows(out.rows, order,
+                                                 dtype), metrics
 
-        # the gathered rows and the previous state are both dead after the
-        # round — donate them, so the device never holds two copies of the
-        # cohort plane (the "streamed through" discipline)
+        # the gathered block and the previous state are both dead after
+        # the round — donate them, so the device never holds two copies
+        # of the cohort plane
         return jax.jit(step, donate_argnums=(0, 1))
 
     def step_cohort(self, state: CohortEngineState, pool, batch, cohort):
-        """One cohort round: gather the C sampled rows from the host pool,
-        run the jitted round + fused server update, scatter the rows back.
-        ``batch`` holds ONLY the cohort rows ((C, b, ...) leaves); ``cohort``
-        is sorted ascending (the gather enforces it)."""
+        """One eager cohort round: gather the C sampled rows from the host
+        pool (one fused H2D), run the jitted round + fused server update,
+        scatter the block back (one D2H). ``batch`` holds ONLY the cohort
+        rows ((C, b, ...) leaves); ``cohort`` is sorted ascending (the
+        gather enforces it). Multi-round callers should prefer
+        :meth:`run_cohort`, which pipelines the transfers."""
         cohort = np.sort(np.asarray(cohort).astype(np.int32))
-        rows = pool.gather(cohort)
-        if self._cohort_step is None:
-            self._cohort_step = self._build_cohort_step()
-        state, new_rows, metrics = self._cohort_step(
-            state, rows, batch, jnp.asarray(cohort))
-        pool.scatter(cohort, new_rows)
+        self._adopt_pool(pool)
+        fused = pool.gather_fused(cohort)
+        state, out, metrics = self._cohort_step(
+            state, fused, batch, jnp.asarray(cohort))
+        pool.scatter_fused(cohort, out)
         return state, metrics
 
-    def run_cohort(self, state: CohortEngineState, pool, batches, cohorts):
-        """Python-loop driver over per-round (batch, cohort) pairs —
-        the cohort plane's gather/scatter is host-side, so there is no
-        scan. Applies the ``resum_every`` drift guard. Returns
-        (state, list-of-metrics)."""
-        mets = []
-        for i in range(len(cohorts)):
-            batch = jax.tree.map(lambda b: b[i], batches) \
-                if not isinstance(batches, (list, tuple)) else batches[i]
-            state, m = self.step_cohort(state, pool, batch, cohorts[i])
-            if self.resum_every and (i + 1) % self.resum_every == 0:
+    def run_cohort(self, state: CohortEngineState, pool, batches, cohorts,
+                   *, pipeline: bool = True, metrics_every: int = 8,
+                   timings: dict | None = None):
+        """Multi-round cohort driver over a precomputed (T, C) schedule.
+
+        ``batches`` is a list/tuple of per-round cohort batches, a stacked
+        tree with a leading rounds axis, or a callable
+        ``batches(i, cohort) -> batch``. ``pipeline=True`` (default) runs
+        the double-buffered transfer pipeline — bit-exact to
+        ``pipeline=False``, the serial oracle (flat.run_cohort_rounds
+        documents the mechanism). Metrics are fetched every
+        ``metrics_every`` rounds; the returned list holds HOST-side metric
+        dicts. Applies the ``resum_every`` drift guard (the driver drains
+        the pipeline before each re-sum). Returns (state, metrics).
+        """
+        cohorts = np.asarray(cohorts, np.int32)
+        self._adopt_pool(pool)
+        if callable(batches):
+            batch_fn = batches
+        elif isinstance(batches, (list, tuple)):
+            batch_fn = lambda i, _c: batches[i]             # noqa: E731
+        else:
+            batch_fn = lambda i, _c: jax.tree.map(          # noqa: E731
+                lambda b: b[i], batches)
+        on_round = None
+        if self.resum_every:
+            def on_round(_i, st):
                 nabla = jnp.asarray(pool.resum_nabla()).astype(
-                    state.server.nabla.dtype)
-                state = state._replace(
-                    server=state.server._replace(nabla=nabla))
-            mets.append(m)
-        return state, mets
+                    st.server.nabla.dtype)
+                return st._replace(server=st.server._replace(nabla=nabla))
+        return F.run_cohort_rounds(
+            self._cohort_step, state, pool, batch_fn, cohorts,
+            pipeline=pipeline, metrics_every=metrics_every,
+            on_round=on_round, on_round_every=self.resum_every,
+            timings=timings)
 
     # --------------------------------------------------------------- run
     def run(self, state: EngineState, batches, participation=None,

@@ -37,6 +37,8 @@ worlds (gradients are packed once per iteration, right after ``vgrad``).
 """
 from __future__ import annotations
 
+import os
+import time
 from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable, NamedTuple
@@ -752,17 +754,59 @@ class WorkerPool:
     order — the order the parity depends on); ``scatter`` writes the
     round's updated rows back. Planes keep their storage dtype (bf16
     planes round-trip bit-exactly via ml_dtypes' numpy bfloat16).
+
+    Transfers are FUSED: the P planes' cohort rows are staged into one
+    preallocated (P, C, n_flat) host buffer, so a round costs a single
+    H2D dispatch (``gather_fused``) and a single D2H copy
+    (``scatter_fused``) instead of one per plane. The staging buffer is
+    double-slotted so the pipelined driver can stage round i+1's rows
+    while round i's H2D transfer may still be draining. The dict-valued
+    ``gather``/``scatter`` route through the same staging path.
+
+    ``storage="memmap"`` backs each plane with an ``np.memmap`` file
+    under ``path`` so M beyond RAM works: only the touched pages are
+    resident, gathers/scatters fault in exactly the cohort's rows, and
+    checkpoint ``state_dict``/``load_state_dict`` round-trip in place
+    through the mapping. ``nbytes`` stays the logical O(M·n) plane total
+    (resident for RAM pools, address-space mapped for memmap pools);
+    ``mapped_nbytes``/``resident_nbytes`` report the split.
     """
 
-    def __init__(self, planes: dict):
-        # own the storage: np views of jax arrays arrive read-only, and
-        # scatter writes in place
-        self.planes = {name: (v if isinstance(v, np.ndarray)
-                              and v.flags.writeable else np.array(v))
-                       for name, v in planes.items()}
+    STORAGES = ("ram", "memmap")
+
+    def __init__(self, planes: dict, storage: str = "ram",
+                 path: str | None = None):
+        if storage not in self.STORAGES:
+            raise ValueError(f"storage must be one of {self.STORAGES}, "
+                             f"got {storage!r}")
+        if storage == "memmap" and path is None:
+            raise ValueError('storage="memmap" needs path= (a directory '
+                             "for the plane files)")
+        self.storage = storage
+        self.path = path
+        if storage == "memmap":
+            os.makedirs(path, exist_ok=True)
+            owned = {}
+            for name, v in planes.items():
+                src = np.asarray(v)
+                mm = np.memmap(os.path.join(path, f"{name}.plane"),
+                               dtype=src.dtype, mode="w+", shape=src.shape)
+                mm[...] = src
+                owned[name] = mm
+            self.planes = owned
+        else:
+            # own the storage: np views of jax arrays arrive read-only,
+            # and scatter writes in place
+            self.planes = {name: (v if isinstance(v, np.ndarray)
+                                  and v.flags.writeable else np.array(v))
+                           for name, v in planes.items()}
         shapes = {v.shape for v in self.planes.values()}
         if len(shapes) != 1:
             raise ValueError(f"pool planes disagree on shape: {shapes}")
+        self._order = tuple(self.planes)
+        dtypes = {v.dtype for v in self.planes.values()}
+        self._dtype = dtypes.pop() if len(dtypes) == 1 else None
+        self._stage = None        # (2, P, C, n_flat) host staging buffer
 
     @property
     def m(self) -> int:
@@ -773,27 +817,121 @@ class WorkerPool:
         return next(iter(self.planes.values())).shape[1]
 
     @property
+    def plane_order(self) -> tuple:
+        """Fixed plane stacking order of the fused (P, C, n_flat) block."""
+        return self._order
+
+    @property
+    def plane_dtype(self):
+        """The planes' common storage dtype (None if they disagree —
+        which disables the fused staging path)."""
+        return self._dtype
+
+    @property
     def nbytes(self) -> int:
-        """Host bytes held by the pool (the O(M·n) side of the split)."""
+        """Logical plane bytes (the O(M·n) side of the split) — host RAM
+        for ``storage="ram"``, mapped address space for memmap pools."""
         return int(sum(v.nbytes for v in self.planes.values()))
+
+    @property
+    def mapped_nbytes(self) -> int:
+        """Bytes living in memmap files rather than RAM."""
+        if self.storage != "memmap":
+            return 0
+        return int(sum(v.nbytes for v in self.planes.values()))
+
+    @property
+    def resident_nbytes(self) -> int:
+        """Bytes guaranteed RAM-resident: RAM planes + staging buffers.
+        (Memmap planes additionally cache touched pages at the OS's
+        discretion — that part is reclaimable and not counted.)"""
+        planes = 0 if self.storage == "memmap" else self.nbytes
+        stage = self._stage.nbytes if self._stage is not None else 0
+        return int(planes + stage)
 
     def device_row_bytes(self, c: int) -> int:
         """Device bytes a C-row gather materializes (the O(C·n) side)."""
         return int(sum(v.dtype.itemsize * c * v.shape[1]
                        for v in self.planes.values()))
 
+    # ---- fused staging path (one host copy per round per direction)
+    def _stage_view(self, c: int, slot: int) -> np.ndarray:
+        if self._stage is None or self._stage.shape[2] != c:
+            self._stage = np.empty(
+                (2, len(self._order), c, self.n_flat), self._dtype)
+        return self._stage[slot & 1]
+
+    def gather_fused(self, cohort, slot: int = 0) -> jnp.ndarray:
+        """Cohort rows -> device as ONE (P, C, n_flat) block.
+
+        All planes' rows are staged into the reused host buffer (slot
+        ``slot & 1`` of the double buffer), then shipped in a single H2D
+        dispatch. Plane p is ``plane_order[p]``; rows follow ``cohort``
+        order (sorted ascending — the order the parity depends on).
+        """
+        if self._dtype is None:
+            raise ValueError("fused gather needs a uniform plane dtype; "
+                             f"pool has {[str(v.dtype) for v in self.planes.values()]}")
+        idx = np.asarray(cohort, dtype=np.intp)
+        buf = self._stage_view(idx.shape[0], slot)
+        for p, name in enumerate(self._order):
+            np.take(self.planes[name], idx, axis=0, out=buf[p])
+        # jnp.array COPIES out of the staging buffer (jnp.asarray may
+        # alias host memory on CPU — the buffer is reused next round)
+        return jnp.array(buf)
+
+    def scatter_fused(self, cohort, fused) -> None:
+        """Write a (P, C, n_flat) fused block back into the planes.
+
+        ``np.asarray(fused)`` is the round's single D2H copy (it blocks
+        until the producing step is done — the pipelined driver calls
+        this one round late so the wait rides under the next round's
+        compute)."""
+        idx = np.asarray(cohort, dtype=np.intp)
+        arr = np.asarray(fused)
+        for p, name in enumerate(self._order):
+            plane = self.planes[name]
+            rows = arr[p]
+            if rows.dtype != plane.dtype:
+                rows = rows.astype(plane.dtype)
+            plane[idx] = rows
+
     def gather(self, cohort) -> dict:
-        """Cohort rows -> device: {name: (C, n_flat) jnp array}."""
-        idx = np.asarray(cohort)
-        return {name: jnp.asarray(plane[idx])
-                for name, plane in self.planes.items()}
+        """Cohort rows -> device: {name: (C, n_flat) jnp array}.
+
+        Routed through the fused staging buffer — one H2D for all
+        planes; the per-name values are device views into the block."""
+        if self._dtype is None:        # mixed dtypes: per-plane fallback
+            idx = np.asarray(cohort)
+            return {name: jnp.asarray(plane[idx])
+                    for name, plane in self.planes.items()}
+        fused = self.gather_fused(cohort)
+        return {name: fused[p] for p, name in enumerate(self._order)}
 
     def scatter(self, cohort, rows: dict) -> None:
-        """Write the round's updated (C, n_flat) rows back into the pool."""
-        idx = np.asarray(cohort)
-        for name, vals in rows.items():
-            plane = self.planes[name]
-            plane[idx] = np.asarray(vals).astype(plane.dtype, copy=False)
+        """Write the round's updated (C, n_flat) rows back into the pool
+        (one fused D2H copy when the rows are device-resident)."""
+        if self._dtype is None:
+            idx = np.asarray(cohort)
+            for name, vals in rows.items():
+                plane = self.planes[name]
+                plane[idx] = np.asarray(vals).astype(plane.dtype,
+                                                     copy=False)
+            return
+        vals = [rows[name] for name in self._order]
+        if all(isinstance(v, jax.Array) for v in vals):
+            fused = jnp.stack([v.astype(self._dtype) for v in vals])
+        else:
+            fused = np.stack([np.asarray(v).astype(self._dtype,
+                                                   copy=False)
+                              for v in vals])
+        self.scatter_fused(cohort, fused)
+
+    def flush(self) -> None:
+        """Sync memmap-backed planes to their files (no-op for RAM)."""
+        if self.storage == "memmap":
+            for v in self.planes.values():
+                v.flush()
 
     def resum_nabla(self) -> np.ndarray:
         """Drift guard: recompute ∇̄ = mean_m(worker_grads) from the pool.
@@ -820,10 +958,9 @@ class WorkerPool:
                 raise ValueError(
                     f"pool plane {name!r}: shape {arr.shape} != "
                     f"{self.planes[name].shape}")
-            arr = arr.astype(self.planes[name].dtype, copy=False)
-            if not arr.flags.writeable:
-                arr = np.array(arr)
-            self.planes[name] = arr
+            # in place: memmap planes stay mapped, RAM planes stay owned
+            self.planes[name][...] = arr.astype(self.planes[name].dtype,
+                                                copy=False)
 
 
 class CohortServerState(NamedTuple):
@@ -847,13 +984,18 @@ class FlatCohortRoundResult(NamedTuple):
 
 
 def init_cohort_state(strategy, layout: FlatLayout, params, m: int,
-                      grad_dtype=jnp.float32, params_flat=None):
+                      grad_dtype=jnp.float32, params_flat=None,
+                      pool_storage: str = "ram",
+                      pool_path: str | None = None):
     """Fresh cohort-plane state: (CohortServerState, WorkerPool).
 
     Field-for-field the split of :func:`init_flat_comm_state`'s state:
-    pooled per-worker planes land in the numpy pool, everything else on
+    pooled per-worker planes land in the numpy pool (``pool_storage`` /
+    ``pool_path`` pick RAM vs memmap backing), everything else on
     device. τ_m starts at D so every worker force-uploads on its first
-    sampled round.
+    sampled round. Plane order is ``worker_grads`` first, then the
+    strategy's ``pooled_extras()`` order — the fused staging block's
+    stacking order.
     """
     r = strategy.rule
     if params_flat is None:
@@ -863,18 +1005,17 @@ def init_cohort_state(strategy, layout: FlatLayout, params, m: int,
     pooled = strategy.pooled_extras()
     planes = {"worker_grads": np.zeros((m, layout.n_flat),
                                        np.dtype(grad_dtype))}
-    server_extras = {}
-    for name, val in full_extras.items():
-        if name in pooled:
-            planes[name] = np.asarray(val)
-        else:
-            server_extras[name] = val
+    for name in pooled:
+        if name in full_extras:
+            planes[name] = np.asarray(full_extras[name])
+    server_extras = {name: val for name, val in full_extras.items()
+                     if name not in planes}
     server = CohortServerState(
         nabla=jnp.zeros((layout.n_flat,), grad_dtype),
         staleness=jnp.full((m,), r.max_delay, jnp.int32),
         diff_hist=jnp.zeros((r.d_max,), jnp.float32),
         extras=server_extras)
-    return server, WorkerPool(planes)
+    return server, WorkerPool(planes, storage=pool_storage, path=pool_path)
 
 
 def flat_cohort_round(strategy, layout: FlatLayout,
@@ -1006,3 +1147,229 @@ def record_progress(comm: FlatCommState, dtheta_sq, k) -> FlatCommState:
 def nabla_f32(comm: FlatCommState) -> jnp.ndarray:
     """The server-update driver ∇^k as an fp32 flat buffer (line 16)."""
     return comm.nabla.astype(jnp.float32)
+
+
+# ------------------------------------------------- pipelined cohort driver
+#
+# The serial cohort loop is a chain per round: host gather (H2D), jitted
+# step, host scatter whose np.asarray BLOCKS on the D2H transfer. XLA
+# dispatch is asynchronous, so the chain wastes the device: while the
+# host waits on round i's transfers the device is idle, and vice versa.
+#
+# The pipelined driver reorders TRANSFERS, never arithmetic:
+#
+#   round i:   enqueue step(i)            [device busy with round i]
+#              scatter out(i-1)           [D2H wait rides under step(i)]
+#              stage + dispatch rows(i+1) [H2D rides under step(i)]
+#
+# Deferring round i's scatter one round means the pool misses round i's
+# updates when round i+1's rows are staged. When consecutive cohorts
+# overlap, the overlapping rows are instead forwarded ON DEVICE: the
+# precomputed ``src`` schedule maps each round-(i+1) cohort position to
+# its position in round i's output block (or -1), and
+# :func:`patch_fused_rows` substitutes round i's exact output rows. The
+# substituted values are bit-identical to what the scatter+gather round
+# trip would have produced, so the pipeline is bit-exact to the serial
+# loop — pinned for every registered rule by tests/test_cohort_pipeline.
+
+
+def cohort_overlap_schedule(cohorts: np.ndarray) -> np.ndarray:
+    """(T, C) int32 forwarding schedule for the deferred-scatter pipeline.
+
+    ``src[i, j]`` = position of worker ``cohorts[i, j]`` inside
+    ``cohorts[i-1]`` (whose output block is still on device when round i
+    runs), or -1 when the worker was not in the previous cohort. Row 0 is
+    all -1. Rows must be sorted ascending (``sample_cohorts`` invariant).
+    """
+    cohorts = np.asarray(cohorts, np.int64)
+    t, c = cohorts.shape
+    src = np.full((t, c), -1, np.int32)
+    for i in range(1, t):
+        prev = cohorts[i - 1]
+        pos = np.searchsorted(prev, cohorts[i])
+        pos = np.clip(pos, 0, c - 1)
+        hit = prev[pos] == cohorts[i]
+        src[i] = np.where(hit, pos, -1).astype(np.int32)
+    return src
+
+
+def patch_fused_rows(fused: jnp.ndarray, prev: jnp.ndarray,
+                     src: jnp.ndarray) -> jnp.ndarray:
+    """Forward the previous round's output rows into this round's gather.
+
+    ``fused``/``prev`` are (P, C, n_flat) / (P, C_prev, n_flat) blocks,
+    ``src`` the (C,) schedule row from :func:`cohort_overlap_schedule`.
+    Positions with ``src < 0`` keep the gathered rows. All shapes are
+    static, so the patch compiles once per (C, C_prev).
+
+    Bit-exactness contract: the pipelined driver runs this as its OWN
+    jitted call (:func:`_patch_fused_jit`) and feeds the materialized
+    result to the cohort step. Inlining the select into the step is NOT
+    safe — XLA duplicates fused consumer chains under the select's two
+    branches and LLVM contracts fma differently per copy, so a row
+    arriving through the ``prev`` gather picks up different low bits
+    than the SAME values arriving through ``fused``. Materializing the
+    patch as an executable boundary makes the step consume one memory
+    operand on both paths, which pins serial/pipelined parity by plain
+    determinism."""
+    safe = jnp.clip(src, 0, prev.shape[1] - 1)
+    forwarded = prev[:, safe, :]
+    return jnp.where((src >= 0)[None, :, None], forwarded, fused)
+
+
+# the gathered block is staging output and never reused: donate it so the
+# patch can write in place; ``prev`` is re-read by the deferred scatter
+# and MUST NOT be donated.
+_patch_fused_jit = jax.jit(patch_fused_rows, donate_argnums=(0,))
+
+
+def split_fused_rows(fused: jnp.ndarray, order: tuple) -> dict:
+    """(P, C, n_flat) block -> {plane_name: (C, n_flat)} views."""
+    return {name: fused[p] for p, name in enumerate(order)}
+
+
+def stack_fused_rows(rows: dict, order: tuple, dtype) -> jnp.ndarray:
+    """{plane_name: (C, n_flat)} -> one (P, C, n_flat) block in the
+    pool's storage dtype (the cast the host scatter used to do)."""
+    return jnp.stack([rows[name].astype(dtype) for name in order])
+
+
+def run_cohort_rounds(step_fn, state, pool: WorkerPool, batch_fn,
+                      cohorts: np.ndarray, *, pipeline: bool = True,
+                      metrics_every: int = 8, on_round=None,
+                      on_round_every: int = 0,
+                      timings: dict | None = None):
+    """Drive T cohort rounds through a fused jitted step.
+
+    ``step_fn(state, fused, batch, cohort) -> (state, fused_out,
+    metrics)`` may donate (state, fused) — serial and pipelined drive
+    the SAME executable. ``batch_fn(i, cohorts[i])`` supplies round i's
+    cohort batch; ``cohorts`` is (T, C) int32 sorted ascending.
+
+    ``pipeline=False`` is the serial parity oracle: eager
+    gather → step → scatter per round.
+
+    ``pipeline=True`` double-buffers: round i+1's rows are staged and
+    dispatched H2D while round i's step runs, and round i's scatter is
+    deferred one round so its D2H wait rides under round i+1's compute.
+    Rows that round i+1 shares with round i are stale in that early
+    gather; they are forwarded from round i's device output by
+    :func:`_patch_fused_jit` — a SEPARATE jitted call, so the step
+    consumes one materialized block on both paths and parity with the
+    serial oracle is plain single-executable determinism (see
+    :func:`patch_fused_rows` for why inlining the select would break
+    bit-exactness). Rounds with no overlap skip the patch entirely. The
+    pending scatter is drained on ANY exit (including exceptions), so
+    an interrupted run leaves the pool consistent through the last
+    completed round.
+
+    Metrics are accumulated device-side and fetched with one
+    ``jax.device_get`` every ``metrics_every`` rounds (the losses trace
+    rides in the same dicts). ``on_round(i, state) -> state|None`` fires
+    every ``on_round_every`` rounds AFTER the pool is drained through
+    round i (the ``resum_every`` drift-guard hook). ``timings``, when a
+    dict, accumulates wall-clock seconds per phase
+    (``gather_s``/``step_s``/``scatter_s``/``rounds``) for the bench
+    breakdown. Returns (state, list-of-host-metric-dicts).
+    """
+    cohorts = np.asarray(cohorts, np.int32)
+    t_rounds = cohorts.shape[0]
+    metrics_every = max(1, int(metrics_every))
+    clock = time.perf_counter if timings is not None else None
+
+    mets_host: list = []
+    mets_dev: list = []
+
+    def flush_metrics():
+        if mets_dev:
+            mets_host.extend(jax.device_get(mets_dev))
+            mets_dev.clear()
+
+    # per-round cohort/src rows ride into the jitted calls as numpy args
+    # (one inline transfer) — slicing a staged device matrix per round
+    # costs a full op dispatch, ~4x the price of the whole patch call
+
+    if not pipeline:
+        # serial oracle: eager gather → step → scatter, same executable
+        # as the pipelined path
+        for i in range(t_rounds):
+            t0 = clock() if clock else 0.0
+            fused = pool.gather_fused(cohorts[i])
+            t1 = clock() if clock else 0.0
+            state, out, met = step_fn(state, fused,
+                                      batch_fn(i, cohorts[i]),
+                                      cohorts[i])
+            t2 = clock() if clock else 0.0
+            pool.scatter_fused(cohorts[i], out)
+            if clock:
+                t3 = clock()
+                timings["gather_s"] = timings.get("gather_s", 0.0) + t1 - t0
+                timings["step_s"] = timings.get("step_s", 0.0) + t2 - t1
+                timings["scatter_s"] = (timings.get("scatter_s", 0.0)
+                                        + t3 - t2)
+                timings["rounds"] = timings.get("rounds", 0) + 1
+            mets_dev.append(met)
+            if len(mets_dev) >= metrics_every:
+                flush_metrics()
+            if on_round is not None and on_round_every \
+                    and (i + 1) % on_round_every == 0:
+                state = _maybe(on_round(i, state), state)
+        flush_metrics()
+        return state, mets_host
+
+    src_sched = cohort_overlap_schedule(cohorts)
+    has_overlap = (src_sched >= 0).any(axis=1)       # host-side, per round
+    prev = None                        # round i-1's device output block
+    fused_next = pool.gather_fused(cohorts[0], slot=0)
+    pending = None                     # (cohort_np, device_out) to scatter
+    try:
+        for i in range(t_rounds):
+            batch = batch_fn(i, cohorts[i])
+            if has_overlap[i]:
+                # rows shared with round i-1 are stale in the early
+                # gather: forward them from prev in a separate jit call
+                fused_next = _patch_fused_jit(fused_next, prev,
+                                              src_sched[i])
+            t0 = clock() if clock else 0.0
+            state, out, met = step_fn(state, fused_next,
+                                      batch, cohorts[i])
+            t1 = clock() if clock else 0.0
+            # round i-1's writeback: its D2H wait rides under step i
+            if pending is not None:
+                pool.scatter_fused(*pending)
+            pending = (cohorts[i], out)
+            prev = out
+            t2 = clock() if clock else 0.0
+            # stage round i+1 while step i runs; round i's rows are
+            # forwarded on device by the src schedule, everything older
+            # is already in the pool
+            if i + 1 < t_rounds:
+                fused_next = pool.gather_fused(cohorts[i + 1],
+                                               slot=(i + 1) & 1)
+            if clock:
+                t3 = clock()
+                timings["step_s"] = timings.get("step_s", 0.0) + t1 - t0
+                timings["scatter_s"] = (timings.get("scatter_s", 0.0)
+                                        + t2 - t1)
+                timings["gather_s"] = timings.get("gather_s", 0.0) + t3 - t2
+                timings["rounds"] = timings.get("rounds", 0) + 1
+            mets_dev.append(met)
+            if len(mets_dev) >= metrics_every:
+                flush_metrics()
+            if on_round is not None and on_round_every \
+                    and (i + 1) % on_round_every == 0:
+                # the hook reads the pool: drain round i's rows first
+                pool.scatter_fused(*pending)
+                pending = None
+                state = _maybe(on_round(i, state), state)
+    finally:
+        # drain on ANY exit: the pool is consistent through the last
+        # completed round even when the run is interrupted mid-flight
+        if pending is not None:
+            pool.scatter_fused(*pending)
+    flush_metrics()
+    return state, mets_host
+
+
+def _maybe(new_state, state):
+    return state if new_state is None else new_state

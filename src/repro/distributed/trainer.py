@@ -614,11 +614,14 @@ class CohortTrainState(NamedTuple):
 
 
 def init_cohort_train_state(cfg: ModelConfig, hp: TrainHParams, m: int,
-                            rng):
+                            rng, *, pool_storage: str = "ram",
+                            pool_path: str | None = None):
     """(CohortTrainState, WorkerPool) for M federated workers — device
-    memory O(n), host pool O(M·n). Requires the fused plane (the cohort
-    round is a flat-plane op; there is no per-leaf cohort oracle at the
-    trainer layer — core/flat.py's dense plane is the parity oracle)."""
+    memory O(n), host pool O(M·n) (``pool_storage="memmap"`` +
+    ``pool_path`` spill it past RAM). Requires the fused plane (the
+    cohort round is a flat-plane op; there is no per-leaf cohort oracle
+    at the trainer layer — core/flat.py's dense plane is the parity
+    oracle)."""
     if not hp.fused:
         raise ValueError("the cohort plane requires fused=True")
     params = init_params(cfg, rng)
@@ -627,7 +630,8 @@ def init_cohort_train_state(cfg: ModelConfig, hp: TrainHParams, m: int,
     strategy = strategy_for(hp.rule)
     server, pool = F.init_cohort_state(
         strategy, layout, params, m, grad_dtype=hp.cada_jnp_dtype,
-        params_flat=params_flat)
+        params_flat=params_flat, pool_storage=pool_storage,
+        pool_path=pool_path)
     state = CohortTrainState(
         step=jnp.zeros([], jnp.int32), params=params,
         h=jnp.zeros((layout.n_flat,), hp.moments_jnp_dtype),
@@ -657,36 +661,75 @@ def make_cohort_train_step(cfg: ModelConfig, hp: TrainHParams, m: int):
     vgrad = jax.vmap(worker_grad, in_axes=(None, 0))
     vgrad_per = jax.vmap(worker_grad, in_axes=(0, 0))
 
-    def step(state: CohortTrainState, rows, batch, cohort):
-        k = state.step
-        out = F.flat_cohort_round(
-            strategy, layout, state.server, rows, state.params,
-            state.params_flat, batch, k, cohort, m_total=m,
-            vgrad=vgrad, vgrad_per=vgrad_per, fuse_evals=True)
-        theta, h, vhat, dsq = kops.fused_amsgrad_flat(
-            state.params_flat, state.h, state.vhat,
-            out.server.nabla.astype(jnp.float32), hp.lr,
-            b1=hp.b1, b2=hp.b2, eps=hp.eps)
-        theta = layout.cast_roundtrip(theta)
-        server = F.record_progress(out.server, dsq, k)
-        new_state = CohortTrainState(
-            step=k + 1, params=layout.unpack(theta), h=h, vhat=vhat,
-            server=server, params_flat=theta)
-        metrics = {"loss": jnp.mean(out.losses), "dtheta_sq": dsq,
-                   **out.metrics}
-        return new_state, out.rows, metrics
+    built = {}
 
-    jitted = jax.jit(step, donate_argnums=(0, 1))
+    def fused_step_for(pool):
+        """The jitted fused-block step bound to ``pool``'s plane layout
+        (stacking order + storage dtype) — built once per layout. Shared
+        by the eager ``train_step`` and the pipelined driver."""
+        if pool.plane_dtype is None:
+            raise ValueError("the cohort step needs a uniform-dtype pool")
+        order, dtype = pool.plane_order, pool.plane_dtype
+        key = (order, np.dtype(dtype).str)
+        if built.get("key") == key:
+            return built["step"]
+
+        def step(state: CohortTrainState, fused, batch, cohort):
+            k = state.step
+            rows = F.split_fused_rows(fused, order)
+            out = F.flat_cohort_round(
+                strategy, layout, state.server, rows, state.params,
+                state.params_flat, batch, k, cohort, m_total=m,
+                vgrad=vgrad, vgrad_per=vgrad_per, fuse_evals=True)
+            theta, h, vhat, dsq = kops.fused_amsgrad_flat(
+                state.params_flat, state.h, state.vhat,
+                out.server.nabla.astype(jnp.float32), hp.lr,
+                b1=hp.b1, b2=hp.b2, eps=hp.eps)
+            theta = layout.cast_roundtrip(theta)
+            server = F.record_progress(out.server, dsq, k)
+            new_state = CohortTrainState(
+                step=k + 1, params=layout.unpack(theta), h=h, vhat=vhat,
+                server=server, params_flat=theta)
+            metrics = {"loss": jnp.mean(out.losses), "dtheta_sq": dsq,
+                       **out.metrics}
+            return new_state, F.stack_fused_rows(out.rows, order,
+                                                 dtype), metrics
+
+        built["key"] = key
+        built["step"] = jax.jit(step, donate_argnums=(0, 1))
+        return built["step"]
 
     def train_step(state: CohortTrainState, pool, batch, cohort):
         cohort = np.sort(np.asarray(cohort).astype(np.int32))
-        rows = pool.gather(cohort)
-        state, new_rows, metrics = jitted(state, rows, batch,
-                                          jnp.asarray(cohort))
-        pool.scatter(cohort, new_rows)
+        jitted = fused_step_for(pool)
+        fused = pool.gather_fused(cohort)
+        state, out, metrics = jitted(state, fused, batch,
+                                     jnp.asarray(cohort))
+        pool.scatter_fused(cohort, out)
         return state, metrics
 
+    train_step.fused_step_for = fused_step_for
     return train_step
+
+
+def run_cohort_train(train_step, state: CohortTrainState, pool, batches,
+                     cohorts, *, pipeline: bool = True,
+                     metrics_every: int = 8, timings: dict | None = None):
+    """Multi-round cohort driver for the trainer — the federated analogue
+    of ``CADAEngine.run_cohort``. ``train_step`` is the callable from
+    :func:`make_cohort_train_step`; ``batches`` is a list/tuple of
+    per-round cohort batches or a callable ``batches(i, cohort)``.
+    ``pipeline=True`` double-buffers transfers (bit-exact to the serial
+    ``pipeline=False`` oracle); metrics are fetched every
+    ``metrics_every`` rounds. Returns (state, list-of-metric-dicts)."""
+    cohorts = np.asarray(cohorts, np.int32)
+    if callable(batches):
+        batch_fn = batches
+    else:
+        batch_fn = lambda i, _c: batches[i]                 # noqa: E731
+    return F.run_cohort_rounds(
+        train_step.fused_step_for(pool), state, pool, batch_fn, cohorts,
+        pipeline=pipeline, metrics_every=metrics_every, timings=timings)
 
 
 def jit_train_step(cfg: ModelConfig, mesh, hp: TrainHParams):

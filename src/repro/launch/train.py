@@ -61,7 +61,13 @@ def run_sim(cfg, rule, args) -> None:
     res = simulate(lambda p, wb: lm_loss(cfg, p, wb)[0], rule, params,
                    batches, n_workers=m, network=args.network, mode=mode,
                    async_tau=args.async_tau,
-                   participation=args.participation, lr=args.lr,
+                   participation=args.participation,
+                   cohort_size=args.cohort_size,
+                   host_pool=bool(args.async_tau and args.pool_memmap),
+                   pipeline=not args.no_pipeline,
+                   metrics_every=args.metrics_every,
+                   pool_storage="memmap" if args.pool_memmap else "ram",
+                   pool_path=args.pool_memmap or None, lr=args.lr,
                    eval_s=args.sim_eval_ms * 1e-3)
     row = summarize(res, args.target_loss or None)
     print(f"[sim] {args.network}/{mode} rule={rule.kind}: "
@@ -108,6 +114,20 @@ def main() -> None:
     p.add_argument("--participation", type=float, default=1.0,
                    help="sim barrier mode: fraction of workers "
                         "participating per round")
+    p.add_argument("--cohort-size", type=int, default=0,
+                   help="sim barrier mode: >0 runs the FEDERATED cohort "
+                        "plane — C sampled workers per round through the "
+                        "host WorkerPool, O(C*n) device state")
+    p.add_argument("--no-pipeline", action="store_true",
+                   help="cohort rounds: disable the double-buffered "
+                        "transfer pipeline (serial parity oracle)")
+    p.add_argument("--metrics-every", type=int, default=8,
+                   help="cohort rounds: fetch device-side metrics every "
+                        "K rounds instead of per round")
+    p.add_argument("--pool-memmap", default="",
+                   help="back the WorkerPool's O(M*n) planes with "
+                        "np.memmap files under this directory (M beyond "
+                        "RAM); empty = RAM")
     p.add_argument("--sim-eval-ms", type=float, default=1.0,
                    help="sim runtime: simulated milliseconds per worker "
                         "gradient evaluation")

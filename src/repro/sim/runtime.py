@@ -82,6 +82,15 @@ class SimConfig:
     #                               pooled extras) live in a numpy
     #                               WorkerPool instead of an (M, n_flat)
     #                               device plane
+    pipeline: bool = True         # cohort rounds: double-buffered
+    #                               transfer pipeline (False = the serial
+    #                               parity oracle)
+    metrics_every: int = 8        # cohort rounds: fetch device metrics
+    #                               every K rounds instead of per round
+    pool_storage: str = "ram"     # "memmap" spills the WorkerPool's
+    #                               O(M·n) planes to files under
+    #                               pool_path (M beyond RAM)
+    pool_path: str | None = None
     seed: int = 0
 
     def __post_init__(self):
@@ -107,6 +116,17 @@ class SimConfig:
                 "participation sampling is a barrier-mode knob (async "
                 "workers free-run; model slow/absent workers with the "
                 "ComputeModel's straggler injection instead)")
+        if self.metrics_every < 1:
+            raise ValueError("metrics_every must be >= 1")
+        if self.pool_storage not in ("ram", "memmap"):
+            raise ValueError('pool_storage must be "ram" or "memmap", '
+                             f"got {self.pool_storage!r}")
+        if self.pool_storage == "memmap" and self.pool_path is None:
+            raise ValueError('pool_storage="memmap" needs pool_path=')
+        if self.pool_storage == "memmap" and not (self.cohort_size
+                                                  or self.host_pool):
+            raise ValueError("pool_storage is a WorkerPool knob — set "
+                             "cohort_size (barrier) or host_pool (async)")
 
 
 @dataclass
@@ -380,7 +400,14 @@ class SimRuntime:
         federated cross-device regime rather than the all-M cluster.
         Numerically each round is bit-exact to the dense plane run with
         the cohort's indicator mask as participation (the
-        tests/test_cohort_plane.py parity gate)."""
+        tests/test_cohort_plane.py parity gate).
+
+        The numerics run FIRST, through the engine's pipelined cohort
+        driver (``cfg.pipeline`` / ``cfg.metrics_every`` — transfers
+        overlap device compute, metrics fetch every K rounds); the
+        wall-clock pricing loop then replays the returned host metrics.
+        Pricing never feeds back into the numerics, so the split is
+        exact."""
         eng, cfg = self.engine, self.cfg
         compute, link = cfg.network.compute, cfg.network.link
         c = cfg.cohort_size
@@ -394,7 +421,8 @@ class SimRuntime:
             steps = jax.tree.leaves(batches)[0].shape[0]
         cohorts = sample_cohorts(self.m, c, steps, seed=cfg.seed)
 
-        st, pool = eng.init_cohort(params)
+        st, pool = eng.init_cohort(params, pool_storage=cfg.pool_storage,
+                                   pool_path=cfg.pool_path)
         n = eng._layout.n
         up_bytes, down_bytes = self._byte_costs(n)
         evals = eng.strategy.grad_evals_per_iter
@@ -405,6 +433,19 @@ class SimRuntime:
                     else 1)
         has_h = eng.strategy.delta_payload and self.rule.local_steps > 1
 
+        def batch_fn(k, cohort):
+            if callable(batches):
+                return batches(k, cohort)
+            return jax.tree.map(
+                (lambda x: x[k][:, cohort]) if has_h
+                else (lambda x: x[k][cohort]), batches)
+
+        # numerics first, through the pipelined driver
+        st, all_mets = eng.run_cohort(st, pool, batch_fn, cohorts,
+                                      pipeline=cfg.pipeline,
+                                      metrics_every=cfg.metrics_every)
+
+        # wall-clock pricing replays the host metrics
         t = 0.0
         t_end = np.zeros(steps)
         busy = np.zeros(self.m)
@@ -416,11 +457,7 @@ class SimRuntime:
         max_stale = 0
         for k in range(steps):
             cohort = cohorts[k]
-            batch = (batches(k, cohort) if callable(batches)
-                     else jax.tree.map(
-                         (lambda x: x[k][:, cohort]) if has_h
-                         else (lambda x: x[k][cohort]), batches))
-            st, mets = eng.step_cohort(st, pool, batch, cohort)
+            mets = all_mets[k]
             masks[k] = np.asarray(mets["upload_mask"])
             stal[k] = np.asarray(mets["staleness"])
             losses[k] = float(mets["loss"])
@@ -454,6 +491,9 @@ class SimRuntime:
             upload_masks=masks, staleness=stal,
             metrics={"cohorts": cohorts,
                      "host_pool_bytes": pool.nbytes,
+                     "host_pool_mapped_bytes": pool.mapped_nbytes,
+                     "host_pool_resident_bytes": pool.resident_nbytes,
+                     "pipeline": cfg.pipeline,
                      "device_worker_plane_bytes": pool.device_row_bytes(c)})
 
     # -------------------------------------------------------------- async
@@ -584,17 +624,32 @@ class SimRuntime:
 
         # host_pool: the O(M·n) per-worker rows (grads + pooled extras)
         # move to a numpy WorkerPool; each gate streams ONE row in/out, so
-        # async device state is O(n) + shared extras however large M gets
+        # async device state is O(n) + shared extras however large M gets.
+        # Gate traffic is PIPELINED: the row comes up in one fused H2D
+        # (all planes in one block) and the gate's writeback is DEFERRED —
+        # parked device-side and flushed lazily, right before the same
+        # worker's next gather (only w's own gate ever reads w's row, so
+        # the deferral is bit-exact) or at loop exit.
         pool = None
         pooled = ()
+        pending_rows: dict = {}        # w -> (P, 1, n_flat) device block
         if cfg.host_pool:
             pooled = eng.strategy.pooled_extras()
             planes = {"worker_grads": np.asarray(worker_grads)}
             extras = dict(extras)
             for name in pooled:
                 planes[name] = np.asarray(extras.pop(name))
-            pool = F.WorkerPool(planes)
+            pool = F.WorkerPool(planes, storage=cfg.pool_storage,
+                                path=cfg.pool_path)
             worker_grads = None
+
+        def flush_pending(w=None):
+            if w is None:
+                while pending_rows:
+                    flush_pending(next(iter(pending_rows)))
+            elif w in pending_rows:
+                pool.scatter_fused(np.asarray([w], np.int32),
+                                   pending_rows.pop(w))
 
         # per-worker copies of θ (everyone starts at the init point, free)
         wparams = [srv_params] * self.m
@@ -633,20 +688,25 @@ class SimRuntime:
                 p.max_staleness = max(p.max_staleness, stale)
                 row_view = self._slice_extras(extras, w, stale_eval[w])
                 if pool is not None:
-                    wg_in = jnp.asarray(pool.planes["worker_grads"][w:w + 1])
-                    row_view.update(
-                        {name: jnp.asarray(pool.planes[name][w:w + 1])
-                         for name in pooled})
+                    flush_pending(w)   # w's deferred writeback, if parked
+                    fused_row = pool.gather_fused(
+                        np.asarray([w], np.int32))   # one H2D, all planes
+                    rowd = F.split_fused_rows(fused_row, pool.plane_order)
+                    wg_in = rowd["worker_grads"]
+                    row_view.update({name: rowd[name] for name in pooled})
                 else:
                     wg_in = worker_grads[w:w + 1]
                 loss, upload, wire, wg_row, extras_row = gate(
                     wparams[w], wflat[w], batch1, wg_in,
                     jnp.full((1,), stale, jnp.int32), diff_hist, row_view)
                 if pool is not None:
-                    pool.scatter(np.asarray([w]),
-                                 {"worker_grads": wg_row[None],
-                                  **{name: extras_row[name]
-                                     for name in pooled}})
+                    # defer the D2H: park the fused row on device; it
+                    # lands in the pool before w's next gather (or at
+                    # loop exit), riding under other workers' gates
+                    pending_rows[w] = F.stack_fused_rows(
+                        {"worker_grads": wg_row[None],
+                         **{name: extras_row[name] for name in pooled}},
+                        pool.plane_order, pool.plane_dtype)
                 else:
                     worker_grads = worker_grads.at[w].set(wg_row)
                 extras = self._merge_extras(extras, extras_row, w)
@@ -692,6 +752,8 @@ class SimRuntime:
                 p.busy_s += dt
                 q.push(t + dt, COMPUTE_DONE, w)
 
+        if pool is not None:
+            flush_pending()            # drain deferred rows on exit
         wall = float(srv_times[-1] if srv_times else t)
         return SimResult(
             mode="async", profile=cfg.network.name, steps=k_srv,
@@ -712,7 +774,9 @@ def simulate(loss_fn, rule: CommRule, params, batches, *,
              n_workers: int, network: str | NetworkProfile = "zero",
              mode: str = "barrier", async_tau: int = 0,
              participation: float = 1.0, cohort_size: int = 0,
-             host_pool: bool = False, rounds: int | None = None,
+             host_pool: bool = False, pipeline: bool = True,
+             metrics_every: int = 8, pool_storage: str = "ram",
+             pool_path: str | None = None, rounds: int | None = None,
              lr: float = 0.01, eval_s: float = 1e-3, seed: int = 0,
              optimizer=None, interpret=None) -> SimResult:
     """One-call front door: build the profile + config + runtime and run."""
@@ -721,7 +785,9 @@ def simulate(loss_fn, rule: CommRule, params, batches, *,
                                   seed=seed)
     cfg = SimConfig(network=network, mode=mode, async_tau=async_tau,
                     participation=participation, cohort_size=cohort_size,
-                    host_pool=host_pool, seed=seed)
+                    host_pool=host_pool, pipeline=pipeline,
+                    metrics_every=metrics_every, pool_storage=pool_storage,
+                    pool_path=pool_path, seed=seed)
     rt = SimRuntime(loss_fn, rule, n_workers, cfg, lr=lr,
                     optimizer=optimizer, interpret=interpret)
     return rt.run(params, batches, rounds=rounds)

@@ -1,0 +1,498 @@
+"""The pipelined cohort driver (core/flat.py::run_cohort_rounds).
+
+The contract under test: the double-buffered transfer pipeline — fused
+one-block gathers, H2D prefetch of round i+1 under round i's compute,
+round i's scatter deferred one round with overlapping cohort rows
+forwarded ON DEVICE — reorders TRANSFERS, never arithmetic. It must be
+BIT-EXACT against the serial oracle (``pipeline=False``) for every
+registered rule, on the engine, trainer and sim paths, for params, masks,
+staleness, ∇̄, pooled planes and server extras.
+
+Also here: the memmap-backed WorkerPool (gather/scatter round-trip,
+checkpoint reshard, residency accounting), drain-on-early-exit (an
+interrupted pipeline leaves the pool consistent through the last
+completed round), ``metrics_every`` equivalence, the overlap-forwarding
+schedule property, and the pipelined/memmap federated smokes the CI
+``federated-smoke`` leg runs under the 6 GiB cap.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm, flat as F
+from repro.core.engine import (CADAEngine, make_cohort_sampler,
+                               make_sampler, sample_cohorts)
+from repro.core.rules import RULES, CommRule
+from repro.data.partition import pad_to_matrix, uniform_partition
+from repro.data.synthetic import ijcnn1_like
+from repro.models.small import logreg_init, logreg_loss, mlp_init, mlp_loss
+from repro.optim.fused import FusedAMSGrad
+
+M = 8
+C = 3
+STEPS = 18
+
+ARMS = RULES + ("topk_sparse", "local_momentum", "fedadam")
+
+
+def _rule(kind):
+    if kind == "topk_sparse":
+        return CommRule(kind="topk", c=5.0, d_max=4, max_delay=6,
+                        topk_frac=0.5, sparse_wire=True)
+    if kind in ("local_momentum", "fedadam"):
+        return CommRule(kind=kind, c=0.6, d_max=4, max_delay=6,
+                        local_steps=2, local_lr=0.05, local_beta=0.9)
+    kw = dict(kind=kind, c=5.0, d_max=4, max_delay=6)
+    if kind == "topk":
+        kw["topk_frac"] = 0.5
+    if kind == "avp":
+        kw.update(period_min=1, period_max=4)
+    return CommRule(**kw)
+
+
+def _problem(m=M, steps=STEPS, seed=2, n=400, batch=8):
+    ds = ijcnn1_like(n=n)
+    mtx = pad_to_matrix(uniform_partition(ds.n, m, seed=0))
+    sample = make_sampler(ds.x, ds.y, mtx, batch)
+    params = logreg_init(None, 22, 2)
+    batches = jax.vmap(sample)(
+        jax.random.split(jax.random.PRNGKey(seed), steps))
+    return params, batches
+
+
+def _delta_batches(steps=STEPS, h=2, m=M, seed=1):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(kx, (steps, h, m, 8, 22)),
+            jax.random.normal(ky, (steps, h, m, 8, 2)))
+
+
+def _delta_loss(p, b):
+    x, y = b
+    return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+
+def _cohort_run(kind, cohorts, *, pipeline, metrics_every=8,
+                pool_storage="ram", pool_path=None, resum_every=0):
+    """One cohort run of ``kind`` over ``cohorts`` — returns
+    (state, pool, host metrics, engine)."""
+    rule = _rule(kind)
+    delta = kind in ("local_momentum", "fedadam")
+    if delta:
+        params = {"w": jax.random.normal(jax.random.PRNGKey(0),
+                                         (22, 2)) * 0.3,
+                  "b": jnp.zeros((2,))}
+        batches = _delta_batches(steps=cohorts.shape[0])
+        eng = CADAEngine(_delta_loss, None, rule, M,
+                         resum_every=resum_every)
+        cohort_batches = [
+            jax.tree.map(lambda x, i=i: x[i][:, cohorts[i]], batches)
+            for i in range(cohorts.shape[0])]
+    else:
+        params, batches = _problem(steps=cohorts.shape[0])
+        eng = CADAEngine(logreg_loss, FusedAMSGrad(lr=0.05), rule, M,
+                         resum_every=resum_every)
+        cohort_batches = [
+            jax.tree.map(lambda x, i=i: x[i][cohorts[i]], batches)
+            for i in range(cohorts.shape[0])]
+    st, pool = eng.init_cohort(params, pool_storage=pool_storage,
+                               pool_path=pool_path)
+    st, mets = eng.run_cohort(st, pool, cohort_batches, cohorts,
+                              pipeline=pipeline,
+                              metrics_every=metrics_every)
+    return st, pool, mets, eng
+
+
+def _assert_bit_exact(st_p, pool_p, mets_p, st_s, pool_s, mets_s, kind):
+    """Pipelined vs serial: every state surface, bit for bit."""
+    assert len(mets_p) == len(mets_s)
+    for i, (mp, ms) in enumerate(zip(mets_p, mets_s)):
+        for key in ("upload_mask", "staleness", "loss", "uploads",
+                    "bytes_up"):
+            np.testing.assert_array_equal(
+                np.asarray(mp[key]), np.asarray(ms[key]),
+                err_msg=f"{kind}: metrics[{key}] diverged at round {i}")
+    np.testing.assert_array_equal(
+        np.asarray(st_p.server.staleness), np.asarray(st_s.server.staleness),
+        err_msg=f"{kind}: staleness diverged")
+    np.testing.assert_array_equal(
+        np.asarray(st_p.server.nabla), np.asarray(st_s.server.nabla),
+        err_msg=f"{kind}: nabla diverged")
+    np.testing.assert_array_equal(
+        np.asarray(st_p.server.diff_hist),
+        np.asarray(st_s.server.diff_hist),
+        err_msg=f"{kind}: diff_hist diverged")
+    for name in pool_s.planes:
+        np.testing.assert_array_equal(
+            np.asarray(pool_p.planes[name]), np.asarray(pool_s.planes[name]),
+            err_msg=f"{kind}: pool plane {name!r} diverged")
+    for a, b in zip(jax.tree.leaves(st_p.params),
+                    jax.tree.leaves(st_s.params)):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            err_msg=f"{kind}: params diverged")
+    for name, val in st_s.server.extras.items():
+        for a, b in zip(jax.tree.leaves(st_p.server.extras[name]),
+                        jax.tree.leaves(val)):
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                err_msg=f"{kind}: server extras[{name}] diverged")
+
+
+# --------------------------------- pipelined vs serial (engine, all rules)
+
+@pytest.mark.parametrize("kind", ARMS)
+def test_pipelined_matches_serial_all_rules(kind):
+    """The acceptance gate: the pipeline reorders transfers, never
+    arithmetic — bit-exact vs the serial oracle for all 8 grad rules,
+    the true-sparse wire and both delta-payload rules. The shared
+    ``sample_cohorts`` schedule has overlapping consecutive cohorts
+    (C=3 of M=8), so the on-device forwarding path is genuinely hot."""
+    cohorts = sample_cohorts(M, C, STEPS, seed=5)
+    # meta-check: consecutive cohorts DO overlap somewhere in the
+    # schedule, or the forwarding patch would be untested
+    src = F.cohort_overlap_schedule(cohorts)
+    assert (src >= 0).any()
+    st_s, pool_s, mets_s, _ = _cohort_run(kind, cohorts, pipeline=False)
+    st_p, pool_p, mets_p, _ = _cohort_run(kind, cohorts, pipeline=True)
+    _assert_bit_exact(st_p, pool_p, mets_p, st_s, pool_s, mets_s, kind)
+
+
+def test_pipelined_resum_drains_before_guard():
+    """The ``resum_every`` drift guard reads the host pool: the pipelined
+    driver must drain the deferred scatter first, making the guarded
+    pipelined run bit-exact to the guarded serial run."""
+    cohorts = sample_cohorts(M, C, 20, seed=3)   # 20 % resum_every == 0
+    st_s, pool_s, mets_s, _ = _cohort_run("cada2", cohorts, pipeline=False,
+                                          resum_every=5)
+    st_p, pool_p, mets_p, _ = _cohort_run("cada2", cohorts, pipeline=True,
+                                          resum_every=5)
+    _assert_bit_exact(st_p, pool_p, mets_p, st_s, pool_s, mets_s,
+                      "cada2+resum")
+    # the run ends ON a guard round, so the invariant holds exactly
+    np.testing.assert_array_equal(np.asarray(st_p.server.nabla),
+                                  pool_p.resum_nabla())
+
+
+def test_metrics_every_equivalence():
+    """``metrics_every`` only batches the device→host fetch: the metric
+    VALUES are identical whatever the stride (including one larger than
+    the whole run)."""
+    cohorts = sample_cohorts(M, C, STEPS, seed=7)
+    runs = [_cohort_run("cada2", cohorts, pipeline=True, metrics_every=k)
+            for k in (1, 5, STEPS + 10)]
+    base = runs[0][2]
+    for st, _, mets, _ in runs[1:]:
+        assert len(mets) == len(base)
+        for i, (ma, mb) in enumerate(zip(mets, base)):
+            assert set(ma) == set(mb)
+            for key in ma:
+                np.testing.assert_array_equal(
+                    np.asarray(ma[key]), np.asarray(mb[key]),
+                    err_msg=f"metrics[{key}] diverged at round {i}")
+
+
+# ------------------------------------------------ overlap schedule property
+
+def test_cohort_overlap_schedule_property():
+    """src[i, j] points at cohorts[i][j]'s row in round i-1's output
+    block, -1 exactly when the worker was absent from the previous
+    cohort; row 0 forwards nothing."""
+    cohorts = sample_cohorts(50, 7, 40, seed=1)
+    src = F.cohort_overlap_schedule(cohorts)
+    assert src.shape == cohorts.shape and src.dtype == np.int32
+    assert (src[0] == -1).all()
+    for i in range(1, cohorts.shape[0]):
+        for j, w in enumerate(cohorts[i]):
+            hits = np.nonzero(cohorts[i - 1] == w)[0]
+            assert src[i, j] == (hits[0] if hits.size else -1)
+
+
+def test_patch_fused_rows_forwards_prev():
+    """The on-device patch substitutes the previous block's rows at
+    forwarded positions and keeps the gathered rows elsewhere."""
+    rng = np.random.default_rng(0)
+    fused = jnp.asarray(rng.normal(size=(2, 4, 6)).astype(np.float32))
+    prev = jnp.asarray(rng.normal(size=(2, 5, 6)).astype(np.float32))
+    src = jnp.asarray(np.array([3, -1, 0, -1], np.int32))
+    out = np.asarray(F.patch_fused_rows(fused, prev, src))
+    np.testing.assert_array_equal(out[:, 0], np.asarray(prev)[:, 3])
+    np.testing.assert_array_equal(out[:, 1], np.asarray(fused)[:, 1])
+    np.testing.assert_array_equal(out[:, 2], np.asarray(prev)[:, 0])
+    np.testing.assert_array_equal(out[:, 3], np.asarray(fused)[:, 3])
+
+
+# ------------------------------------------------- drain on early exit
+
+def test_pipelined_drain_on_early_exit():
+    """A pipeline interrupted mid-run (here: the batch supplier raises at
+    round j) drains its deferred scatter — the pool holds exactly the
+    serial oracle's state after the j completed rounds."""
+    j = 9
+    cohorts = sample_cohorts(M, C, STEPS, seed=5)
+    params, batches = _problem()
+    cohort_batches = [
+        jax.tree.map(lambda x, i=i: x[i][cohorts[i]], batches)
+        for i in range(STEPS)]
+
+    class Boom(RuntimeError):
+        pass
+
+    def exploding(i, cohort):
+        if i == j:
+            raise Boom
+        return cohort_batches[i]
+
+    rule = _rule("cada2")
+    eng = CADAEngine(logreg_loss, FusedAMSGrad(lr=0.05), rule, M)
+    st, pool = eng.init_cohort(params)
+    with pytest.raises(Boom):
+        eng.run_cohort(st, pool, exploding, cohorts, pipeline=True)
+
+    # serial oracle truncated to the j completed rounds
+    eng_s = CADAEngine(logreg_loss, FusedAMSGrad(lr=0.05), rule, M)
+    st_s, pool_s = eng_s.init_cohort(params)
+    eng_s.run_cohort(st_s, pool_s, cohort_batches[:j], cohorts[:j],
+                     pipeline=False)
+    for name in pool_s.planes:
+        np.testing.assert_array_equal(
+            pool.planes[name], pool_s.planes[name],
+            err_msg=f"interrupted pool plane {name!r} inconsistent")
+
+
+# ------------------------------------------------------- trainer driver
+
+@pytest.mark.parametrize("kind", ("cada2", "cada1", "laq", "topk"))
+def test_trainer_pipelined_matches_serial(kind):
+    """The trainer's cohort driver (run_cohort_train) through the same
+    fused step: pipelined vs serial, bit-exact params/pool/masks on the
+    smoke LM."""
+    from repro.distributed.trainer import (init_cohort_train_state,
+                                           make_cohort_train_step,
+                                           run_cohort_train, worker_split)
+    from tests.test_trainer_distributed import CFG, TrainHParams, _batch
+
+    m, c, rounds = 16, 4, 5
+    hp = TrainHParams(rule=_rule(kind), microbatches=2)
+    cohorts = sample_cohorts(m, c, rounds, seed=0)
+    batches = []
+    for k in range(rounds):
+        full = _batch(jax.random.PRNGKey(50 + k), b=c * 2)
+        batches.append(worker_split(full, c))
+
+    outs = {}
+    for pipeline in (False, True):
+        step = make_cohort_train_step(CFG, hp, m)
+        st, pool = init_cohort_train_state(CFG, hp, m,
+                                           jax.random.PRNGKey(3))
+        st, mets = run_cohort_train(step, st, pool, batches, cohorts,
+                                    pipeline=pipeline, metrics_every=3)
+        outs[pipeline] = (st, pool, mets)
+    st_s, pool_s, mets_s = outs[False]
+    st_p, pool_p, mets_p = outs[True]
+    for i, (mp, ms) in enumerate(zip(mets_p, mets_s)):
+        np.testing.assert_array_equal(
+            np.asarray(mp["upload_mask"]), np.asarray(ms["upload_mask"]),
+            err_msg=f"trainer {kind}: masks diverged at round {i}")
+        np.testing.assert_array_equal(np.asarray(mp["loss"]),
+                                      np.asarray(ms["loss"]))
+    np.testing.assert_array_equal(np.asarray(st_p.params_flat),
+                                  np.asarray(st_s.params_flat),
+                                  err_msg=f"trainer {kind}: params diverged")
+    for name in pool_s.planes:
+        np.testing.assert_array_equal(
+            pool_p.planes[name], pool_s.planes[name],
+            err_msg=f"trainer {kind}: pool plane {name!r} diverged")
+
+
+# ------------------------------------------------------------- sim paths
+
+@pytest.mark.parametrize("kind", ("cada2", "laq"))
+def test_sim_barrier_cohort_pipelined_matches_serial(kind):
+    """The sim's federated barrier rounds through the pipelined driver:
+    pipeline on/off give identical losses, masks, staleness and final
+    params (the pricing replay reads the same host metrics)."""
+    from repro.sim import simulate
+
+    params, batches = _problem(m=8, steps=10)
+    rule = _rule(kind)
+    runs = [simulate(logreg_loss, rule, params, batches, n_workers=8,
+                     network="lan", mode="barrier", cohort_size=3,
+                     pipeline=p, metrics_every=4, lr=0.01)
+            for p in (False, True)]
+    np.testing.assert_array_equal(runs[0].losses, runs[1].losses)
+    np.testing.assert_array_equal(runs[0].upload_masks,
+                                  runs[1].upload_masks)
+    np.testing.assert_array_equal(runs[0].staleness, runs[1].staleness)
+    assert runs[0].wall_s == runs[1].wall_s
+    for a, b in zip(jax.tree.leaves(runs[0].final_params),
+                    jax.tree.leaves(runs[1].final_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("kind", ("cada2", "topk", "avp"))
+def test_sim_async_host_pool_deferred_scatter_parity(kind):
+    """The async ``host_pool`` streaming now defers each gate's writeback
+    (fused one-block row up, parked device row down) — still bit-exact
+    with the device (M, n_flat) plane, broadening test_sim's cada1/laq
+    gate to more rule families."""
+    from repro.sim import simulate
+
+    params, batches = _problem(m=4, steps=10)
+    rule = _rule(kind)
+    runs = [simulate(logreg_loss, rule, params, batches, n_workers=4,
+                     network="hetero", mode="async", async_tau=5,
+                     host_pool=hp, lr=0.01)
+            for hp in (False, True)]
+    np.testing.assert_array_equal(runs[0].losses, runs[1].losses)
+    assert runs[0].uploads == runs[1].uploads
+    assert runs[0].wall_s == runs[1].wall_s
+    for a, b in zip(jax.tree.leaves(runs[0].final_params),
+                    jax.tree.leaves(runs[1].final_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------- memmap pool
+
+@pytest.mark.parametrize("dtype", (np.float32, jnp.bfloat16),
+                         ids=("f32", "bf16"))
+def test_memmap_pool_gather_scatter_roundtrip(tmp_path, dtype):
+    """pool → (C, n_flat) → pool through np.memmap planes is bit-exact,
+    bf16 storage included; the files back the full O(M·n) mapping while
+    RAM residency is just the staging buffer."""
+    rng = np.random.default_rng(0)
+    m, n_flat = 32, 48
+    dt = np.dtype(dtype)
+    planes = {
+        "worker_grads": rng.normal(size=(m, n_flat)).astype(dt),
+        "residual": rng.normal(size=(m, n_flat)).astype(dt),
+    }
+    pool = F.WorkerPool({k: v.copy() for k, v in planes.items()},
+                        storage="memmap", path=str(tmp_path))
+    assert (tmp_path / "worker_grads.plane").exists()
+    assert pool.nbytes == pool.mapped_nbytes == 2 * m * n_flat * dt.itemsize
+    assert pool.resident_nbytes == 0          # no staging allocated yet
+
+    cohort = np.sort(rng.choice(m, 7, replace=False)).astype(np.int32)
+    rows = pool.gather(cohort)
+    for name in planes:
+        np.testing.assert_array_equal(np.asarray(rows[name]),
+                                      planes[name][cohort])
+    assert pool.resident_nbytes > 0           # the double staging buffer
+    assert pool.resident_nbytes < pool.mapped_nbytes
+
+    new_rows = {name: jnp.asarray(rng.normal(size=(7, n_flat)), dtype=dt)
+                for name in planes}
+    pool.scatter(cohort, new_rows)
+    pool.flush()
+    off = np.setdiff1d(np.arange(m), cohort)
+    for name in planes:
+        np.testing.assert_array_equal(np.asarray(pool.planes[name][cohort]),
+                                      np.asarray(new_rows[name]))
+        np.testing.assert_array_equal(np.asarray(pool.planes[name][off]),
+                                      planes[name][off])
+
+
+def test_memmap_pool_checkpoint_reshard_roundtrip(tmp_path):
+    """checkpoint save → reshard restore → load_state_dict lands IN the
+    memmap mapping (same files, new contents), bit-exact on the true
+    entries."""
+    import repro.checkpoint.io as ckpt
+    params = logreg_init(None, 22, 2)
+    lay_src = F.layout_of(params)
+    lay_dst = F.layout_of(params, shards=16)
+    assert lay_src.n_flat != lay_dst.n_flat
+    rng = np.random.default_rng(1)
+    strat = comm.strategy_for(_rule("laq"))
+    _, pool = F.init_cohort_state(strat, lay_src, params, M,
+                                  pool_storage="memmap",
+                                  pool_path=str(tmp_path / "src"))
+    for name in pool.planes:
+        pool.planes[name][:, :lay_src.n] = rng.normal(
+            size=(M, lay_src.n)).astype(np.float32)
+    ckpt.save(str(tmp_path / "ck"), {"pool": pool.state_dict()}, step=3,
+              flat_meta=lay_src)
+    template = {"pool": {name: np.zeros((M, lay_dst.n_flat), np.float32)
+                         for name in pool.planes}}
+    restored, step_no = ckpt.restore(str(tmp_path / "ck"), template)
+    assert step_no == 3
+    _, pool2 = F.init_cohort_state(strat, lay_dst, params, M,
+                                   pool_storage="memmap",
+                                   pool_path=str(tmp_path / "dst"))
+    pool2.load_state_dict(restored["pool"])
+    for name in pool.planes:
+        got = pool2.planes[name]
+        assert isinstance(got, np.memmap)     # loaded IN PLACE, still mapped
+        assert got.shape == (M, lay_dst.n_flat)
+        np.testing.assert_array_equal(got[:, :lay_src.n],
+                                      pool.planes[name][:, :lay_src.n])
+        np.testing.assert_array_equal(got[:, lay_src.n:], 0.0)
+
+
+def test_memmap_pipelined_matches_ram(tmp_path):
+    """Storage backend is invisible to the numerics: a pipelined run on a
+    memmap pool is bit-exact with the RAM pool run."""
+    cohorts = sample_cohorts(M, C, STEPS, seed=5)
+    st_r, pool_r, mets_r, _ = _cohort_run("laq", cohorts, pipeline=True)
+    st_m, pool_m, mets_m, _ = _cohort_run("laq", cohorts, pipeline=True,
+                                          pool_storage="memmap",
+                                          pool_path=str(tmp_path))
+    _assert_bit_exact(st_m, pool_m, mets_m, st_r, pool_r, mets_r,
+                      "memmap-vs-ram")
+    assert pool_m.mapped_nbytes == pool_r.nbytes
+
+
+# ------------------------------------------- federated smokes (CI leg)
+
+def test_federated_smoke_m_10k_pipelined():
+    """The CI federated-smoke on the PIPELINED driver: M=10⁴ C=64 MLP
+    rounds under the 6 GiB cap, callable batch supplier, metrics batched
+    device-side — finite losses, round 0 force-uploads its cohort."""
+    m, c, rounds = 10_000, 64, 6
+    rule = CommRule(kind="cada2", c=0.6, d_max=10, max_delay=100)
+    ds = ijcnn1_like(n=20_000)
+    mtx = pad_to_matrix(uniform_partition(ds.n, m, seed=0))
+    sample = make_cohort_sampler(ds.x, ds.y, mtx, 32)
+    params = mlp_init(jax.random.PRNGKey(7), 22, 64, 2)
+    eng = CADAEngine(mlp_loss, FusedAMSGrad(lr=0.05), rule, m)
+    st, pool = eng.init_cohort(params)
+    cohorts = sample_cohorts(m, c, rounds, seed=0)
+
+    def batch_fn(i, cohort):
+        return sample(jax.random.PRNGKey(200 + i), jnp.asarray(cohort))
+
+    st, mets = eng.run_cohort(st, pool, batch_fn, cohorts, pipeline=True,
+                              metrics_every=4)
+    assert len(mets) == rounds
+    losses = np.asarray([mm["loss"] for mm in mets])
+    assert np.isfinite(losses).all()
+    assert int(np.asarray(mets[0]["uploads"])) == c
+    assert int(st.step) == rounds
+
+
+def test_federated_smoke_memmap_pool(tmp_path):
+    """The CI memmap-pool smoke: M=10⁴ C=64 pipelined rounds with the
+    O(M·n) planes living in files — RAM residency is the staging buffer,
+    not the plane."""
+    m, c, rounds = 10_000, 64, 4
+    rule = CommRule(kind="cada2", c=0.6, d_max=10, max_delay=100)
+    ds = ijcnn1_like(n=20_000)
+    mtx = pad_to_matrix(uniform_partition(ds.n, m, seed=0))
+    sample = make_cohort_sampler(ds.x, ds.y, mtx, 32)
+    params = mlp_init(jax.random.PRNGKey(7), 22, 64, 2)
+    eng = CADAEngine(mlp_loss, FusedAMSGrad(lr=0.05), rule, m)
+    st, pool = eng.init_cohort(params, pool_storage="memmap",
+                               pool_path=str(tmp_path))
+    n_flat = eng._layout.n_flat
+    assert pool.mapped_nbytes == m * n_flat * 4
+    cohorts = sample_cohorts(m, c, rounds, seed=0)
+
+    def batch_fn(i, cohort):
+        return sample(jax.random.PRNGKey(300 + i), jnp.asarray(cohort))
+
+    st, mets = eng.run_cohort(st, pool, batch_fn, cohorts, pipeline=True,
+                              metrics_every=4)
+    assert np.isfinite([mm["loss"] for mm in mets]).all()
+    # residency: staging is 2 slots × P planes × C rows — O(C·n), not O(M·n)
+    assert pool.resident_nbytes == 2 * len(pool.plane_order) * c * n_flat * 4
+    assert pool.resident_nbytes * 10 < pool.mapped_nbytes
