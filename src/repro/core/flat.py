@@ -1244,7 +1244,9 @@ def run_cohort_rounds(step_fn, state, pool: WorkerPool, batch_fn,
     ``step_fn(state, fused, batch, cohort) -> (state, fused_out,
     metrics)`` may donate (state, fused) — serial and pipelined drive
     the SAME executable. ``batch_fn(i, cohorts[i])`` supplies round i's
-    cohort batch; ``cohorts`` is (T, C) int32 sorted ascending.
+    cohort batch; ``cohorts`` is (T, C) int32, every row sorted
+    ascending with unique ids (validated up front — raises ValueError
+    otherwise). An empty schedule returns ``(state, [])``.
 
     ``pipeline=False`` is the serial parity oracle: eager
     gather → step → scatter per round.
@@ -1274,6 +1276,19 @@ def run_cohort_rounds(step_fn, state, pool: WorkerPool, batch_fn,
     """
     cohorts = np.asarray(cohorts, np.int32)
     t_rounds = cohorts.shape[0]
+    if t_rounds == 0:
+        return state, []
+    # both drivers depend on sorted-unique rows (sample_cohorts already
+    # guarantees it): the overlap schedule searchsorts the previous row,
+    # so an unsorted cohort would silently forward the WRONG rows —
+    # validate once up front instead of re-sorting per round, since
+    # sorting here would desynchronize cohorts from batch_fn's batches
+    if not (np.diff(cohorts, axis=1) > 0).all():
+        raise ValueError(
+            "run_cohort_rounds: every cohorts row must be sorted "
+            "ascending with unique worker ids (the sample_cohorts "
+            "invariant) — sort each cohort AND its batch together "
+            "before calling")
     metrics_every = max(1, int(metrics_every))
     clock = time.perf_counter if timings is not None else None
 

@@ -63,7 +63,8 @@ def run_sim(cfg, rule, args) -> None:
                    async_tau=args.async_tau,
                    participation=args.participation,
                    cohort_size=args.cohort_size,
-                   host_pool=bool(args.async_tau and args.pool_memmap),
+                   host_pool=bool(args.async_tau
+                                  and (args.host_pool or args.pool_memmap)),
                    pipeline=not args.no_pipeline,
                    metrics_every=args.metrics_every,
                    pool_storage="memmap" if args.pool_memmap else "ram",
@@ -124,6 +125,12 @@ def main() -> None:
     p.add_argument("--metrics-every", type=int, default=8,
                    help="cohort rounds: fetch device-side metrics every "
                         "K rounds instead of per round")
+    p.add_argument("--host-pool", action="store_true",
+                   help="sim async mode: stream per-worker rows through "
+                        "the host WorkerPool instead of holding the "
+                        "(M, n) plane on device (implied by "
+                        "--pool-memmap; this flag enables the RAM-backed "
+                        "pool without memmap spill)")
     p.add_argument("--pool-memmap", default="",
                    help="back the WorkerPool's O(M*n) planes with "
                         "np.memmap files under this directory (M beyond "

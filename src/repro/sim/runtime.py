@@ -57,6 +57,12 @@ from repro.sim.events import (COMPUTE_DONE, DOWNLOAD_DONE, UPLOAD_ARRIVE,
 
 MODES = ("barrier", "async")
 
+# async host_pool: most deferred-writeback rows parked on device at once.
+# Past the cap the OLDEST parked row is flushed, so the async device
+# overhead is a constant number of (P, 1, n_flat) rows however large M
+# gets — never the O(M·n) plane the pool exists to avoid.
+ASYNC_PENDING_CAP = 4
+
 
 @dataclass(frozen=True)
 class SimConfig:
@@ -623,13 +629,15 @@ class SimRuntime:
         k_srv = 0
 
         # host_pool: the O(M·n) per-worker rows (grads + pooled extras)
-        # move to a numpy WorkerPool; each gate streams ONE row in/out, so
-        # async device state is O(n) + shared extras however large M gets.
+        # move to a numpy WorkerPool; each gate streams ONE row in/out.
         # Gate traffic is PIPELINED: the row comes up in one fused H2D
         # (all planes in one block) and the gate's writeback is DEFERRED —
-        # parked device-side and flushed lazily, right before the same
-        # worker's next gather (only w's own gate ever reads w's row, so
-        # the deferral is bit-exact) or at loop exit.
+        # parked device-side and flushed before the same worker's next
+        # gather, at loop exit, or (oldest first) whenever more than
+        # ASYNC_PENDING_CAP rows are parked. Only w's own gate ever reads
+        # w's row, so flushing at ANY point up to its next gather is
+        # bit-exact — the cap keeps async device state at O(n) + a
+        # CONSTANT number of rows however large M gets.
         pool = None
         pooled = ()
         pending_rows: dict = {}        # w -> (P, 1, n_flat) device block
@@ -707,6 +715,10 @@ class SimRuntime:
                         {"worker_grads": wg_row[None],
                          **{name: extras_row[name] for name in pooled}},
                         pool.plane_order, pool.plane_dtype)
+                    # bounded parking: dict order is parking order, so
+                    # this evicts the OLDEST row(s) past the cap
+                    while len(pending_rows) > ASYNC_PENDING_CAP:
+                        flush_pending(next(iter(pending_rows)))
                 else:
                     worker_grads = worker_grads.at[w].set(wg_row)
                 extras = self._merge_extras(extras, extras_row, w)

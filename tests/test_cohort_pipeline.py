@@ -192,6 +192,38 @@ def test_metrics_every_equivalence():
                     err_msg=f"metrics[{key}] diverged at round {i}")
 
 
+def test_run_cohort_rounds_rejects_unsorted_cohorts():
+    """Correctness depends on sorted-unique cohort rows (the overlap
+    schedule searchsorts the previous row): the driver validates the
+    schedule up front instead of silently forwarding wrong rows."""
+    cohorts = sample_cohorts(M, C, 4, seed=5)
+    cohorts[2] = cohorts[2][::-1]
+    params, batches = _problem(steps=4)
+    cohort_batches = [
+        jax.tree.map(lambda x, i=i: x[i][cohorts[i]], batches)
+        for i in range(4)]
+    eng = CADAEngine(logreg_loss, FusedAMSGrad(lr=0.05), _rule("cada2"), M)
+    st, pool = eng.init_cohort(params)
+    for pipeline in (False, True):
+        with pytest.raises(ValueError, match="sorted"):
+            eng.run_cohort(st, pool, cohort_batches, cohorts,
+                           pipeline=pipeline)
+
+
+def test_run_cohort_rounds_empty_schedule():
+    """A (0, C) schedule is a no-op on both drivers: (state, []) with no
+    pool traffic (the pipelined branch used to gather cohorts[0] before
+    checking the round count)."""
+    params, _ = _problem(steps=1)
+    eng = CADAEngine(logreg_loss, FusedAMSGrad(lr=0.05), _rule("cada2"), M)
+    st, pool = eng.init_cohort(params)
+    empty = np.empty((0, C), np.int32)
+    for pipeline in (False, True):
+        st2, mets = eng.run_cohort(st, pool, [], empty, pipeline=pipeline)
+        assert mets == []
+        assert st2 is st
+
+
 # ------------------------------------------------ overlap schedule property
 
 def test_cohort_overlap_schedule_property():
@@ -341,6 +373,30 @@ def test_sim_async_host_pool_deferred_scatter_parity(kind):
     params, batches = _problem(m=4, steps=10)
     rule = _rule(kind)
     runs = [simulate(logreg_loss, rule, params, batches, n_workers=4,
+                     network="hetero", mode="async", async_tau=5,
+                     host_pool=hp, lr=0.01)
+            for hp in (False, True)]
+    np.testing.assert_array_equal(runs[0].losses, runs[1].losses)
+    assert runs[0].uploads == runs[1].uploads
+    assert runs[0].wall_s == runs[1].wall_s
+    for a, b in zip(jax.tree.leaves(runs[0].final_params),
+                    jax.tree.leaves(runs[1].final_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sim_async_pending_cap_bounds_parked_rows(monkeypatch):
+    """Deferred-writeback parking is BOUNDED: past ASYNC_PENDING_CAP the
+    oldest parked row is flushed, so async device overhead stays a
+    constant number of rows however large M gets. With cap=1 and M=8
+    free-running workers the eviction path fires on nearly every gate —
+    and any flush point before w's next gather is bit-exact, so parity
+    with the dense (M, n_flat) plane still holds."""
+    from repro.sim import runtime, simulate
+
+    monkeypatch.setattr(runtime, "ASYNC_PENDING_CAP", 1)
+    params, batches = _problem(m=8, steps=10)
+    rule = _rule("cada2")
+    runs = [simulate(logreg_loss, rule, params, batches, n_workers=8,
                      network="hetero", mode="async", async_tau=5,
                      host_pool=hp, lr=0.01)
             for hp in (False, True)]
