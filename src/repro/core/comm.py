@@ -434,6 +434,13 @@ class CommStrategy:
     def bytes_per_upload(self, n_params: int) -> float:
         return n_params * self.bits_per_entry / 8.0
 
+    @property
+    def wire_format(self) -> str:
+        """Which ledger bucket this rule's wire fills — ``dense``,
+        ``quantized``, or ``sparse`` (``obs.metrics.CommLedger`` splits
+        bytes-up by this)."""
+        return "quantized" if self.bits_per_entry < 32 else "dense"
+
 
 STRATEGIES: dict[str, type[CommStrategy]] = {}
 
@@ -930,6 +937,10 @@ class TopKStrategy(ErrorFeedbackStrategy):
             if n_params > 1 else 1
         return k * (self.bits_per_entry + index_bits) / 8.0
 
+    @property
+    def wire_format(self) -> str:
+        return "sparse"
+
 
 @register
 class AVPStrategy(CommStrategy):
@@ -1170,6 +1181,9 @@ def comm_round(strategy: CommStrategy, comm: CommState, params, batch, k,
         "upload_mask": upload,
         "staleness": staleness,
         "rhs": rhs,
+        # full per-worker gate LHS (inf for threshold-free rules) — the
+        # obs.metrics.CommLedger derives LHS−RHS gate margins from this
+        "lhs": lhs,
         "mean_lhs": jnp.mean(jnp.where(jnp.isfinite(lhs), lhs, 0.0)),
         "max_staleness": jnp.max(staleness),
         "grad_evals": grad_evals,

@@ -366,7 +366,7 @@ class CADAEngine:
 
     def run_cohort(self, state: CohortEngineState, pool, batches, cohorts,
                    *, pipeline: bool = True, metrics_every: int = 8,
-                   timings: dict | None = None):
+                   trace=None, metrics_out: list | None = None):
         """Multi-round cohort driver over a precomputed (T, C) schedule.
 
         ``batches`` is a list/tuple of per-round cohort batches, a stacked
@@ -377,7 +377,11 @@ class CADAEngine:
         documents the mechanism). Metrics are fetched every
         ``metrics_every`` rounds; the returned list holds HOST-side metric
         dicts. Applies the ``resum_every`` drift guard (the driver drains
-        the pipeline before each re-sum). Returns (state, metrics).
+        the pipeline before each re-sum). ``trace`` (an
+        ``obs.trace.Tracer`` or None) records per-round
+        gather/patch/step/scatter spans on the ``"pipeline"`` track;
+        ``metrics_out`` (a list) receives fetched metrics incrementally,
+        surviving mid-run exceptions. Returns (state, metrics).
         """
         cohorts = np.asarray(cohorts, np.int32)
         self._adopt_pool(pool)
@@ -398,7 +402,7 @@ class CADAEngine:
             self._cohort_step, state, pool, batch_fn, cohorts,
             pipeline=pipeline, metrics_every=metrics_every,
             on_round=on_round, on_round_every=self.resum_every,
-            timings=timings)
+            trace=trace, metrics_out=metrics_out)
 
     # --------------------------------------------------------------- run
     def run(self, state: EngineState, batches, participation=None,

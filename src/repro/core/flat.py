@@ -38,7 +38,6 @@ worlds (gradients are packed once per iteration, right after ``vgrad``).
 from __future__ import annotations
 
 import os
-import time
 from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable, NamedTuple
@@ -709,6 +708,9 @@ def flat_comm_round(strategy, layout: FlatLayout, comm: FlatCommState,
         "upload_mask": upload,
         "staleness": staleness,
         "rhs": rhs,
+        # full per-worker gate LHS (inf for threshold-free rules) — the
+        # obs.metrics.CommLedger derives LHS−RHS gate margins from this
+        "lhs": lhs,
         "mean_lhs": jnp.mean(jnp.where(jnp.isfinite(lhs), lhs, 0.0)),
         "max_staleness": jnp.max(staleness),
         "grad_evals": grad_evals,
@@ -1120,6 +1122,8 @@ def flat_cohort_round(strategy, layout: FlatLayout,
         "upload_mask": upload,
         "staleness": staleness[cohort],
         "rhs": rhs,
+        # per-cohort-member gate LHS for the obs ledger's margin split
+        "lhs": lhs,
         "mean_lhs": jnp.mean(jnp.where(jnp.isfinite(lhs), lhs, 0.0)),
         "max_staleness": jnp.max(staleness),
         "grad_evals": (jnp.sum(h_steps) if strategy.delta_payload
@@ -1238,7 +1242,7 @@ def run_cohort_rounds(step_fn, state, pool: WorkerPool, batch_fn,
                       cohorts: np.ndarray, *, pipeline: bool = True,
                       metrics_every: int = 8, on_round=None,
                       on_round_every: int = 0,
-                      timings: dict | None = None):
+                      trace=None, metrics_out: list | None = None):
     """Drive T cohort rounds through a fused jitted step.
 
     ``step_fn(state, fused, batch, cohort) -> (state, fused_out,
@@ -1267,17 +1271,26 @@ def run_cohort_rounds(step_fn, state, pool: WorkerPool, batch_fn,
 
     Metrics are accumulated device-side and fetched with one
     ``jax.device_get`` every ``metrics_every`` rounds (the losses trace
-    rides in the same dicts). ``on_round(i, state) -> state|None`` fires
-    every ``on_round_every`` rounds AFTER the pool is drained through
-    round i (the ``resum_every`` drift-guard hook). ``timings``, when a
-    dict, accumulates wall-clock seconds per phase
-    (``gather_s``/``step_s``/``scatter_s``/``rounds``) for the bench
-    breakdown. Returns (state, list-of-host-metric-dicts).
+    rides in the same dicts); the partial device-side window is flushed
+    on ANY exit too, so a traced/errored run never silently drops the
+    tail ``< metrics_every`` rounds — pass ``metrics_out`` (a list; it
+    doubles as the return value) to observe metrics through the last
+    completed round even when the run raises. ``on_round(i, state) ->
+    state|None`` fires every ``on_round_every`` rounds AFTER the pool is
+    drained through round i (the ``resum_every`` drift-guard hook).
+    ``trace`` is an ``obs.trace.Tracer`` (or None): each round emits
+    gather/patch/step/scatter spans on the ``"pipeline"`` track — the
+    one home for per-round phase timing; the bench harness reads
+    ``trace.aggregate("pipeline")`` instead of keeping its own clocks.
+    Returns (state, list-of-host-metric-dicts).
     """
+    from ..obs.trace import as_tracer
+
     cohorts = np.asarray(cohorts, np.int32)
     t_rounds = cohorts.shape[0]
+    mets_host: list = metrics_out if metrics_out is not None else []
     if t_rounds == 0:
-        return state, []
+        return state, mets_host
     # both drivers depend on sorted-unique rows (sample_cohorts already
     # guarantees it): the overlap schedule searchsorts the previous row,
     # so an unsorted cohort would silently forward the WRONG rows —
@@ -1290,9 +1303,8 @@ def run_cohort_rounds(step_fn, state, pool: WorkerPool, batch_fn,
             "invariant) — sort each cohort AND its batch together "
             "before calling")
     metrics_every = max(1, int(metrics_every))
-    clock = time.perf_counter if timings is not None else None
+    tracer = as_tracer(trace)
 
-    mets_host: list = []
     mets_dev: list = []
 
     def flush_metrics():
@@ -1307,35 +1319,31 @@ def run_cohort_rounds(step_fn, state, pool: WorkerPool, batch_fn,
     if not pipeline:
         # serial oracle: eager gather → step → scatter, same executable
         # as the pipelined path
-        for i in range(t_rounds):
-            t0 = clock() if clock else 0.0
-            fused = pool.gather_fused(cohorts[i])
-            t1 = clock() if clock else 0.0
-            state, out, met = step_fn(state, fused,
-                                      batch_fn(i, cohorts[i]),
-                                      cohorts[i])
-            t2 = clock() if clock else 0.0
-            pool.scatter_fused(cohorts[i], out)
-            if clock:
-                t3 = clock()
-                timings["gather_s"] = timings.get("gather_s", 0.0) + t1 - t0
-                timings["step_s"] = timings.get("step_s", 0.0) + t2 - t1
-                timings["scatter_s"] = (timings.get("scatter_s", 0.0)
-                                        + t3 - t2)
-                timings["rounds"] = timings.get("rounds", 0) + 1
-            mets_dev.append(met)
-            if len(mets_dev) >= metrics_every:
-                flush_metrics()
-            if on_round is not None and on_round_every \
-                    and (i + 1) % on_round_every == 0:
-                state = _maybe(on_round(i, state), state)
-        flush_metrics()
+        try:
+            for i in range(t_rounds):
+                with tracer.span("gather", track="pipeline"):
+                    fused = pool.gather_fused(cohorts[i])
+                with tracer.span("step", track="pipeline"):
+                    state, out, met = step_fn(state, fused,
+                                              batch_fn(i, cohorts[i]),
+                                              cohorts[i])
+                with tracer.span("scatter", track="pipeline"):
+                    pool.scatter_fused(cohorts[i], out)
+                mets_dev.append(met)
+                if len(mets_dev) >= metrics_every:
+                    flush_metrics()
+                if on_round is not None and on_round_every \
+                        and (i + 1) % on_round_every == 0:
+                    state = _maybe(on_round(i, state), state)
+        finally:
+            flush_metrics()
         return state, mets_host
 
     src_sched = cohort_overlap_schedule(cohorts)
     has_overlap = (src_sched >= 0).any(axis=1)       # host-side, per round
     prev = None                        # round i-1's device output block
-    fused_next = pool.gather_fused(cohorts[0], slot=0)
+    with tracer.span("gather", track="pipeline"):
+        fused_next = pool.gather_fused(cohorts[0], slot=0)
     pending = None                     # (cohort_np, device_out) to scatter
     try:
         for i in range(t_rounds):
@@ -1343,31 +1351,25 @@ def run_cohort_rounds(step_fn, state, pool: WorkerPool, batch_fn,
             if has_overlap[i]:
                 # rows shared with round i-1 are stale in the early
                 # gather: forward them from prev in a separate jit call
-                fused_next = _patch_fused_jit(fused_next, prev,
-                                              src_sched[i])
-            t0 = clock() if clock else 0.0
-            state, out, met = step_fn(state, fused_next,
-                                      batch, cohorts[i])
-            t1 = clock() if clock else 0.0
-            # round i-1's writeback: its D2H wait rides under step i
-            if pending is not None:
-                pool.scatter_fused(*pending)
+                with tracer.span("patch", track="pipeline"):
+                    fused_next = _patch_fused_jit(fused_next, prev,
+                                                  src_sched[i])
+            with tracer.span("step", track="pipeline"):
+                state, out, met = step_fn(state, fused_next,
+                                          batch, cohorts[i])
+            with tracer.span("scatter", track="pipeline"):
+                # round i-1's writeback: its D2H wait rides under step i
+                if pending is not None:
+                    pool.scatter_fused(*pending)
             pending = (cohorts[i], out)
             prev = out
-            t2 = clock() if clock else 0.0
             # stage round i+1 while step i runs; round i's rows are
             # forwarded on device by the src schedule, everything older
             # is already in the pool
             if i + 1 < t_rounds:
-                fused_next = pool.gather_fused(cohorts[i + 1],
-                                               slot=(i + 1) & 1)
-            if clock:
-                t3 = clock()
-                timings["step_s"] = timings.get("step_s", 0.0) + t1 - t0
-                timings["scatter_s"] = (timings.get("scatter_s", 0.0)
-                                        + t2 - t1)
-                timings["gather_s"] = timings.get("gather_s", 0.0) + t3 - t2
-                timings["rounds"] = timings.get("rounds", 0) + 1
+                with tracer.span("gather", track="pipeline"):
+                    fused_next = pool.gather_fused(cohorts[i + 1],
+                                                   slot=(i + 1) & 1)
             mets_dev.append(met)
             if len(mets_dev) >= metrics_every:
                 flush_metrics()
@@ -1378,11 +1380,12 @@ def run_cohort_rounds(step_fn, state, pool: WorkerPool, batch_fn,
                 pending = None
                 state = _maybe(on_round(i, state), state)
     finally:
-        # drain on ANY exit: the pool is consistent through the last
-        # completed round even when the run is interrupted mid-flight
+        # drain on ANY exit: the pool is consistent — and the partial
+        # metrics window fetched — through the last completed round even
+        # when the run is interrupted mid-flight
         if pending is not None:
             pool.scatter_fused(*pending)
-    flush_metrics()
+        flush_metrics()
     return state, mets_host
 
 

@@ -9,7 +9,15 @@ the max-staleness override τ_m ≥ D.
 This module holds only the HYPER-PARAMETERS. The per-rule behaviour — LHS
 computation, extra state slices, post-upload transitions, accounting —
 lives in first-class strategy objects in :mod:`repro.core.comm`; the
-``kind`` string selects one via ``comm.strategy_for(rule)``:
+``kind`` string selects one via ``comm.strategy_for(rule)``.
+
+Observability: every rule's decisions are ledgered per run by
+:class:`repro.obs.metrics.CommLedger` — uploads and bytes split by the
+strategy's ``wire_format`` (dense/quantized/sparse), the LHS−RHS gate
+margins (how decisively each rule fires), and the staleness histogram
+its ``max_delay`` cap produced. Ledger byte totals reuse the strategy's
+property-pinned ``bytes_per_upload`` accounting bit-for-bit; see
+``src/repro/obs/README.md``. The rules:
 
   * ``cada1``  (eq. 7)  — SVRG-style innovation vs. a snapshot θ̃ refreshed
     every D iterations:  ||δ̃_m^k − δ̃_m^{k−τ}||² ≤ RHS.

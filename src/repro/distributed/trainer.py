@@ -714,14 +714,18 @@ def make_cohort_train_step(cfg: ModelConfig, hp: TrainHParams, m: int):
 
 def run_cohort_train(train_step, state: CohortTrainState, pool, batches,
                      cohorts, *, pipeline: bool = True,
-                     metrics_every: int = 8, timings: dict | None = None):
+                     metrics_every: int = 8, trace=None,
+                     metrics_out: list | None = None):
     """Multi-round cohort driver for the trainer — the federated analogue
     of ``CADAEngine.run_cohort``. ``train_step`` is the callable from
     :func:`make_cohort_train_step`; ``batches`` is a list/tuple of
     per-round cohort batches or a callable ``batches(i, cohort)``.
     ``pipeline=True`` double-buffers transfers (bit-exact to the serial
     ``pipeline=False`` oracle); metrics are fetched every
-    ``metrics_every`` rounds. Returns (state, list-of-metric-dicts)."""
+    ``metrics_every`` rounds. ``trace`` (an ``obs.trace.Tracer`` or
+    None) records per-round pipeline spans; ``metrics_out`` (a list)
+    receives fetched metrics incrementally, surviving mid-run
+    exceptions. Returns (state, list-of-metric-dicts)."""
     cohorts = np.asarray(cohorts, np.int32)
     if callable(batches):
         batch_fn = batches
@@ -729,7 +733,8 @@ def run_cohort_train(train_step, state: CohortTrainState, pool, batches,
         batch_fn = lambda i, _c: batches[i]                 # noqa: E731
     return F.run_cohort_rounds(
         train_step.fused_step_for(pool), state, pool, batch_fn, cohorts,
-        pipeline=pipeline, metrics_every=metrics_every, timings=timings)
+        pipeline=pipeline, metrics_every=metrics_every, trace=trace,
+        metrics_out=metrics_out)
 
 
 def jit_train_step(cfg: ModelConfig, mesh, hp: TrainHParams):

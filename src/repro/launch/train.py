@@ -34,14 +34,54 @@ def make_token_batches(cfg, *, global_batch, seq, steps, seed=0):
     return toks[:n].reshape(steps, global_batch, seq + 1)
 
 
+def _flatten_row(row: dict, prefix: str = "") -> dict:
+    """One-level flatten of nested dicts into metric-name keys."""
+    out = {}
+    for k, v in row.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten_row(v, prefix=f"{key}_"))
+        else:
+            out[key] = v
+    return out
+
+
+def _write_obs(args, tracer, row: dict) -> None:
+    """Write the requested telemetry sinks: Chrome-trace JSON
+    (``--trace``), metrics JSONL (``--metrics-out``), Prometheus
+    textfile (``--metrics-prom``)."""
+    from repro.obs import MetricsRegistry, write_chrome_trace, write_jsonl
+
+    if args.trace and tracer:
+        write_chrome_trace(tracer, args.trace,
+                           meta={"arch": args.arch, "rule": args.rule,
+                                 "runtime": args.runtime})
+        print(f"[obs] chrome trace ({len(tracer.events)} events, "
+              f"{len(tracer.tracks)} tracks) -> {args.trace}")
+    if args.metrics_out:
+        write_jsonl(args.metrics_out, row)
+        print(f"[obs] metrics jsonl -> {args.metrics_out}")
+    if args.metrics_prom:
+        reg = MetricsRegistry()
+        for k, v in _flatten_row(row).items():
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            reg.gauge(k).set(v)
+        reg.write_prom(args.metrics_prom)
+        print(f"[obs] prometheus textfile -> {args.metrics_prom}")
+
+
 def run_sim(cfg, rule, args) -> None:
     """`--runtime sim`: train under the discrete-event heterogeneous-
     cluster runtime (repro.sim) — simulated wall-clock under the chosen
     network profile, synchronous barrier or bounded-staleness async
-    (`--async-tau`). No mesh: workers are simulated processes."""
+    (`--async-tau`). No mesh: workers are simulated processes.
+    `--trace` exports every simulated compute/transfer/gate event as a
+    span on the simulated clock (one track per worker + a server track)."""
     import jax.numpy as jnp
 
     from repro.models.model import init_params, lm_loss
+    from repro.obs import Tracer
     from repro.sim import simulate, summarize
 
     m = args.workers or 4
@@ -57,6 +97,7 @@ def run_sim(cfg, rule, args) -> None:
     batches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
 
     mode = "async" if args.async_tau else "barrier"
+    tracer = Tracer() if args.trace else None
     params = init_params(cfg, jax.random.PRNGKey(0))
     res = simulate(lambda p, wb: lm_loss(cfg, p, wb)[0], rule, params,
                    batches, n_workers=m, network=args.network, mode=mode,
@@ -69,7 +110,7 @@ def run_sim(cfg, rule, args) -> None:
                    metrics_every=args.metrics_every,
                    pool_storage="memmap" if args.pool_memmap else "ram",
                    pool_path=args.pool_memmap or None, lr=args.lr,
-                   eval_s=args.sim_eval_ms * 1e-3)
+                   eval_s=args.sim_eval_ms * 1e-3, trace=tracer)
     row = summarize(res, args.target_loss or None)
     print(f"[sim] {args.network}/{mode} rule={rule.kind}: "
           f"{res.steps} server steps in {res.wall_s:.3f} simulated s, "
@@ -77,6 +118,7 @@ def run_sim(cfg, rule, args) -> None:
           f"up {row['mbytes_up']:.3f} MB, "
           f"utilization {row['utilization_mean']:.2f}")
     print(json.dumps(row, indent=1))
+    _write_obs(args, tracer, row)
 
 
 def _round_local_steps(rule: CommRule, args) -> int:
@@ -194,6 +236,20 @@ def main() -> None:
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-every", type=int, default=0)
     p.add_argument("--log-every", type=int, default=10)
+    p.add_argument("--trace", default="",
+                   help="write a Chrome-trace/Perfetto JSON timeline "
+                        "here: sim runtime = every simulated compute/"
+                        "transfer/gate event on the simulated clock (one "
+                        "track per worker + server); mesh runtime = "
+                        "per-step train spans on the wall clock. Open in "
+                        "chrome://tracing or ui.perfetto.dev")
+    p.add_argument("--metrics-out", default="",
+                   help="append the run's summary + per-rule comm ledger "
+                        "(uploads, bytes split, staleness histogram, gate "
+                        "margins) as one JSONL row to this path")
+    p.add_argument("--metrics-prom", default="",
+                   help="also write the metrics as a Prometheus "
+                        "textfile-collector snapshot to this path")
     args = p.parse_args()
 
     cfg = (C.get_smoke_config(args.arch) if args.smoke
@@ -254,6 +310,27 @@ def main() -> None:
         raise SystemExit(
             f"--global-batch {args.global_batch} must divide into "
             f"local_steps*workers = {h}*{m} per-local-step slices")
+    # telemetry: per-step train spans on the wall clock + a comm ledger
+    # fed from device-side metric buffers fetched every --metrics-every
+    # steps (same cadence contract as the cohort driver)
+    obs_on = bool(args.trace or args.metrics_out or args.metrics_prom)
+    tracer = None
+    ledger = None
+    obs_buf: list = []
+    if obs_on:
+        from repro.core.comm import strategy_for
+        from repro.obs import CommLedger, Tracer
+        tracer = Tracer() if args.trace else None
+        ledger = CommLedger.for_strategy(strategy_for(rule))
+    from repro.obs.trace import as_tracer
+    tr = as_tracer(tracer)
+
+    def drain_obs():
+        if ledger is not None and obs_buf:
+            for met in jax.device_get(obs_buf):
+                ledger.observe_round(met)
+            obs_buf.clear()
+
     with set_mesh(mesh):
         state = init_train_state(cfg, hp, m, jax.random.PRNGKey(0),
                                  shards=shards)
@@ -267,7 +344,12 @@ def main() -> None:
         history = []
         for i in range(args.steps):
             batch = worker_split({"tokens": batches[i]}, m, local_steps=h)
-            state, mets = step(state, batch)
+            with tr.span("train_step", track="train", args={"step": i}):
+                state, mets = step(state, batch)
+            if obs_on:
+                obs_buf.append(mets)
+                if len(obs_buf) >= max(1, args.metrics_every):
+                    drain_obs()
             if i % args.log_every == 0 or i == args.steps - 1:
                 # scalars only: per-worker arrays (upload_mask, staleness)
                 # don't belong in the scalar history log
@@ -292,6 +374,12 @@ def main() -> None:
             json.dump(history, f, indent=1)
     final = np.mean([h["loss"] for h in history[-3:]])
     print(f"done: final loss {final:.4f}")
+    if obs_on:
+        drain_obs()
+        row = {"runtime": "mesh", "arch": args.arch, "rule": args.rule,
+               "steps": args.steps, "final_loss": float(final),
+               **ledger.summary()}
+        _write_obs(args, tracer, row)
 
 
 if __name__ == "__main__":

@@ -27,6 +27,8 @@ def smoothed_loss(result: SimResult, window: int = 0):
     order = np.argsort(result.loss_times, kind="stable")
     t = np.asarray(result.loss_times)[order]
     x = np.asarray(result.losses)[order]
+    if len(x) == 0:                  # zero-round run: nothing to smooth
+        return t, x
     w = window or max(5, 2 * len(result.utilization))
     w = min(w, len(x)) or 1
     smooth = np.convolve(x, np.ones(w) / w, mode="valid")
@@ -48,10 +50,13 @@ def time_to_target(result: SimResult, target_loss: float,
     return float(t[int(np.argmax(ok))])
 
 
-def final_loss(result: SimResult, tail: int = 20) -> float:
-    """Mean loss over the last ``tail`` observations (time-ordered)."""
+def final_loss(result: SimResult, tail: int = 20) -> float | None:
+    """Mean loss over the last ``tail`` observations (time-ordered);
+    None for a zero-round run (NaN would poison the JSON sinks)."""
     order = np.argsort(result.loss_times, kind="stable")
     x = np.asarray(result.losses)[order]
+    if len(x) == 0:
+        return None
     return float(x[-min(tail, len(x)):].mean())
 
 
@@ -79,4 +84,22 @@ def summarize(result: SimResult, target_loss: float | None = None) -> dict:
         row["target_loss"] = target_loss
         row["time_to_target_s"] = (round(ttt, 6) if ttt is not None
                                    else None)
+    # obs ledger fields (additive — every pre-ledger key above is
+    # byte-identical with or without them): the per-rule byte split,
+    # staleness histogram and gate-margin quantiles record WHY a rule
+    # won, not just when it hit target
+    if result.ledger is not None:
+        led = result.ledger
+        row["wire_format"] = led["wire_format"]
+        for wf in ("dense", "quantized", "sparse"):
+            row[f"mbytes_up_{wf}"] = round(led[f"mbytes_up_{wf}"], 6)
+        row["staleness_hist"] = led["staleness_hist"]
+        if "gate_margin" in led:
+            row["gate_margin"] = {k: round(v, 8)
+                                  for k, v in led["gate_margin"].items()}
+        for key in ("ring_occupancy", "ring_capacity", "pool_nbytes",
+                    "pool_resident_nbytes", "pool_mapped_nbytes",
+                    "async_pending_max"):
+            if key in led:
+                row[key] = led[key]
     return row

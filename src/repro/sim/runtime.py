@@ -50,6 +50,8 @@ from repro.core import flat as F
 from repro.core.comm import STRATEGIES, adapt_period
 from repro.core.engine import CADAEngine, sample_cohorts
 from repro.core.rules import CommRule
+from repro.obs.metrics import CommLedger
+from repro.obs.trace import as_tracer
 from repro.optim.fused import FusedAMSGrad
 from repro.sim.clock import NetworkProfile, network_profile
 from repro.sim.events import (COMPUTE_DONE, DOWNLOAD_DONE, UPLOAD_ARRIVE,
@@ -158,6 +160,7 @@ class SimResult:
     staleness: np.ndarray | None = None       # barrier: (steps, M)
     participation_masks: np.ndarray | None = None  # barrier: (steps, M)
     metrics: dict = field(default_factory=dict)  # barrier: raw engine mets
+    ledger: dict | None = None     # obs.metrics.CommLedger.summary()
 
 
 class SimRuntime:
@@ -171,10 +174,14 @@ class SimRuntime:
 
     def __init__(self, loss_fn, rule: CommRule, n_workers: int,
                  config: SimConfig, *, lr: float = 0.01, optimizer=None,
-                 interpret=None):
+                 interpret=None, trace=None):
         self.cfg = config
         self.m = n_workers
         self.rule = rule
+        # obs.trace.Tracer or None: every simulated download/compute/
+        # upload/gate/server-apply becomes a span on the SIMULATED clock,
+        # one track per worker plus a "server" track
+        self.tracer = as_tracer(trace)
         if STRATEGIES[rule.kind].delta_payload:
             # delta-payload rules PRESCRIBE their server optimizer
             # (engine resolves strategy.server_optimizer() on None) —
@@ -207,6 +214,16 @@ class SimRuntime:
         down = (4.0 * n if self.cfg.download_bytes is None
                 else float(self.cfg.download_bytes))
         return up, down
+
+    def _new_ledger(self) -> CommLedger:
+        return CommLedger.for_strategy(self.engine.strategy)
+
+    def _observe_ring(self, led: CommLedger, extras: dict) -> None:
+        """Fold stale-ring occupancy (cada2's slot map) into the ledger."""
+        if "slot" in extras and "ring_version" in extras:
+            led.observe_ring(np.asarray(extras["slot"]),
+                             capacity=int(np.asarray(
+                                 extras["ring_version"]).shape[0]))
 
     def run(self, params, batches, rounds: int | None = None) -> SimResult:
         """Simulate over pre-sampled batches with leading axis
@@ -253,6 +270,7 @@ class SimRuntime:
         up_bytes, down_bytes = self._byte_costs(n)
         evals = eng.strategy.grad_evals_per_iter
 
+        tr = self.tracer
         t = 0.0
         t_end = np.zeros(steps)
         busy = np.zeros(self.m)
@@ -271,10 +289,32 @@ class SimRuntime:
                 bytes_down += down_bytes
                 if masks[k, w]:
                     bytes_up += up_bytes
+                if tr:
+                    trk = f"worker {w}"
+                    tr.add_span("download", t, dt_down, track=trk,
+                                cat="transfer")
+                    tr.add_span("compute", t + dt_down, dt_comp,
+                                track=trk, cat="compute")
+                    tr.instant("gate", t + dt_down + dt_comp, track=trk,
+                               args={"round": k,
+                                     "upload": bool(masks[k, w]),
+                                     "staleness": int(staleness[k, w])})
+                    if masks[k, w]:
+                        tr.add_span("upload", t + dt_down + dt_comp,
+                                    dt_up, track=trk, cat="transfer")
                 finish = max(finish, t + dt_down + dt_comp + dt_up)
+            if tr:
+                tr.add_span("round", t, finish + cfg.server_update_s - t,
+                            track="server",
+                            args={"round": k,
+                                  "uploads": int(masks[k].sum())})
             t = finish + cfg.server_update_s
             t_end[k] = t
 
+        led = self._new_ledger()
+        led.observe_run(mets, participation=pmasks)
+        led.add_bytes_down(bytes_down)
+        self._observe_ring(led, fst.comm.extras)
         wall = float(t)
         return SimResult(
             mode="barrier", profile=cfg.network.name, steps=steps,
@@ -286,7 +326,8 @@ class SimRuntime:
             max_staleness=int(staleness.max()),
             final_params=fst.params,
             upload_masks=masks, staleness=staleness,
-            participation_masks=pmasks, metrics=mets)
+            participation_masks=pmasks, metrics=mets,
+            ledger=led.summary())
 
     # ------------------------------------------ barrier, delta payloads
     def _run_barrier_delta(self, params, batches) -> SimResult:
@@ -335,6 +376,7 @@ class SimRuntime:
         up_bytes, down_bytes = self._byte_costs(n)
         evals = eng.strategy.grad_evals_per_iter
 
+        tr = self.tracer
         h = np.full(self.m, min(max(rule.local_steps, h_min), h_cap)
                     if adaptive else h_cap, np.int64)
         hsched = np.zeros((steps, self.m), np.int64)
@@ -360,7 +402,21 @@ class SimRuntime:
                 bytes_up += up_bytes
                 comm_s[w] = dt_down + dt_up
                 comp_s[w] = dt_comp
+                if tr:
+                    trk = f"worker {w}"
+                    tr.add_span("download", t, dt_down, track=trk,
+                                cat="transfer")
+                    tr.add_span("compute", t + dt_down, dt_comp,
+                                track=trk, cat="compute",
+                                args={"round": k, "local_steps": int(h[w])})
+                    tr.add_span("upload", t + dt_down + dt_comp, dt_up,
+                                track=trk, cat="transfer")
                 finish = max(finish, t + dt_down + dt_comp + dt_up)
+            if tr:
+                tr.add_span("round", t, finish + cfg.server_update_s - t,
+                            track="server",
+                            args={"round": k,
+                                  "uploads": int(pmasks[k].sum())})
             if adaptive:
                 h = np.where(
                     pmasks[k],
@@ -377,6 +433,10 @@ class SimRuntime:
         masks = np.asarray(mets["upload_mask"])          # (steps, M)
         staleness = np.asarray(mets["staleness"])
         losses = np.asarray(mets["loss"], np.float64)
+        led = self._new_ledger()
+        led.observe_run(mets, participation=pmasks)
+        led.add_bytes_down(bytes_down)
+        self._observe_ring(led, fst.comm.extras)
         wall = float(t)
         return SimResult(
             mode="barrier", profile=cfg.network.name, steps=steps,
@@ -389,7 +449,8 @@ class SimRuntime:
             final_params=fst.params,
             upload_masks=masks, staleness=staleness,
             participation_masks=pmasks,
-            metrics={**mets, "local_steps": hsched})
+            metrics={**mets, "local_steps": hsched},
+            ledger=led.summary())
 
     # -------------------------------------------- barrier, federated cohort
     def _run_barrier_cohort(self, params, batches,
@@ -452,6 +513,8 @@ class SimRuntime:
                                       metrics_every=cfg.metrics_every)
 
         # wall-clock pricing replays the host metrics
+        tr = self.tracer
+        led = self._new_ledger()
         t = 0.0
         t_end = np.zeros(steps)
         busy = np.zeros(self.m)
@@ -469,6 +532,7 @@ class SimRuntime:
             losses[k] = float(mets["loss"])
             grad_evals += int(mets["grad_evals"])
             max_stale = max(max_stale, int(mets["max_staleness"]))
+            led.observe_round(mets)
             finish = t
             for j, w in enumerate(int(x) for x in cohort):
                 dt_down = link.down_time(w, down_bytes, now=t)
@@ -481,10 +545,32 @@ class SimRuntime:
                 bytes_down += down_bytes
                 if masks[k, j]:
                     bytes_up += up_bytes
+                if tr:
+                    trk = f"worker {w}"
+                    tr.add_span("download", t, dt_down, track=trk,
+                                cat="transfer")
+                    tr.add_span("compute", t + dt_down, dt_comp,
+                                track=trk, cat="compute",
+                                args={"round": k})
+                    tr.instant("gate", t + dt_down + dt_comp, track=trk,
+                               args={"round": k,
+                                     "upload": bool(masks[k, j]),
+                                     "staleness": int(stal[k, j])})
+                    if masks[k, j]:
+                        tr.add_span("upload", t + dt_down + dt_comp,
+                                    dt_up, track=trk, cat="transfer")
                 finish = max(finish, t + dt_down + dt_comp + dt_up)
+            if tr:
+                tr.add_span("round", t, finish + cfg.server_update_s - t,
+                            track="server",
+                            args={"round": k, "cohort_size": c,
+                                  "uploads": int(masks[k].sum())})
             t = finish + cfg.server_update_s
             t_end[k] = t
 
+        led.add_bytes_down(bytes_down)
+        led.observe_pool(pool)
+        self._observe_ring(led, st.server.extras)
         wall = float(t)
         return SimResult(
             mode="barrier", profile=cfg.network.name, steps=steps,
@@ -500,7 +586,8 @@ class SimRuntime:
                      "host_pool_mapped_bytes": pool.mapped_nbytes,
                      "host_pool_resident_bytes": pool.resident_nbytes,
                      "pipeline": cfg.pipeline,
-                     "device_worker_plane_bytes": pool.device_row_bytes(c)})
+                     "device_worker_plane_bytes": pool.device_row_bytes(c)},
+            ledger=led.summary())
 
     # -------------------------------------------------------------- async
     def _slice_extras(self, extras: dict, w: int, stale_point=None) -> dict:
@@ -563,7 +650,8 @@ class SimRuntime:
                 step=jnp.zeros([], jnp.int32), m=1,
                 interpret=eng._interpret, shard=None)
             lhs, cache = strategy.flat_lhs(ctx, extras_row)
-            upload = (lhs > rule.rhs(diff_hist)) | (stale1 >= tau)
+            rhs = rule.rhs(diff_hist)
+            upload = (lhs > rhs) | (stale1 >= tau)
             wg32 = wg_row.astype(jnp.float32)
             delta = strategy.flat_wire_delta(ctx, extras_row, cache,
                                              fresh - wg32)
@@ -572,7 +660,9 @@ class SimRuntime:
             new_wg = (wg32 + wire.astype(jnp.float32)).astype(wg_row.dtype)
             new_extras = strategy.flat_post_upload(extras_row, cache,
                                                    upload, ctx)
-            return losses[0], upload[0], wire[0], new_wg[0], new_extras
+            # lhs/rhs ride out for the obs ledger's gate-margin split
+            return (losses[0], upload[0], wire[0], new_wg[0], new_extras,
+                    lhs[0], rhs)
 
         return jax.jit(gate)
 
@@ -674,7 +764,11 @@ class SimRuntime:
             dt = compute.iter_time(w, 0, 0.0, evals)
             procs[w].busy_s += dt
             q.push(dt, COMPUTE_DONE, w)
+            self.tracer.add_span("compute", 0.0, dt, track=f"worker {w}",
+                                 cat="compute")
 
+        tr = self.tracer
+        led = self._new_ledger()
         loss_t, loss_v, srv_times = [], [], []
         t = 0.0
         max_events = steps * self.m * 64 + 1024    # runaway guard
@@ -704,9 +798,11 @@ class SimRuntime:
                     row_view.update({name: rowd[name] for name in pooled})
                 else:
                     wg_in = worker_grads[w:w + 1]
-                loss, upload, wire, wg_row, extras_row = gate(
+                loss, upload, wire, wg_row, extras_row, g_lhs, g_rhs = gate(
                     wparams[w], wflat[w], batch1, wg_in,
                     jnp.full((1,), stale, jnp.int32), diff_hist, row_view)
+                led.observe_margin(float(g_lhs), float(g_rhs))
+                led.observe_staleness(stale)
                 if pool is not None:
                     # defer the D2H: park the fused row on device; it
                     # lands in the pool before w's next gather (or at
@@ -725,6 +821,10 @@ class SimRuntime:
                 loss_t.append(t)
                 loss_v.append(float(loss))
                 p.local_iter += 1
+                if tr:
+                    tr.instant("gate", t, track=f"worker {w}",
+                               args={"upload": bool(upload),
+                                     "staleness": int(stale)})
                 if bool(upload):
                     # restart at 1, matching the sync engine's post-upload
                     # staleness (flat_comm_round: where(upload, 1, τ+1)),
@@ -737,13 +837,21 @@ class SimRuntime:
                     # evaluated (post_upload's θ̂_m ← θ^k, async form)
                     stale_eval[w] = wparams[w]
                     p.bytes_up += up_bytes
-                    q.push(t + link.up_time(w, up_bytes, now=t),
-                           UPLOAD_ARRIVE, w, wire=wire)
+                    dt_up = link.up_time(w, up_bytes, now=t)
+                    if tr:
+                        tr.add_span("upload", t, dt_up,
+                                    track=f"worker {w}", cat="transfer")
+                    q.push(t + dt_up, UPLOAD_ARRIVE, w, wire=wire)
                 else:
                     p.since_upload += 1
                     p.bytes_down += down_bytes
-                    q.push(t + link.down_time(w, down_bytes, now=t),
-                           DOWNLOAD_DONE, w)
+                    dt_down = link.down_time(w, down_bytes, now=t)
+                    if tr:
+                        tr.add_span("download", t, dt_down,
+                                    track=f"worker {w}", cat="transfer")
+                    q.push(t + dt_down, DOWNLOAD_DONE, w)
+                if pool is not None:
+                    led.observe_pending(len(pending_rows))
 
             elif ev.kind == UPLOAD_ARRIVE:
                 theta, srv_params, opt_state, nabla, diff_hist, extras = \
@@ -753,19 +861,35 @@ class SimRuntime:
                 srv_times.append(t + cfg.server_update_s)
                 p.upload_version = k_srv
                 p.bytes_down += down_bytes
-                q.push(t + cfg.server_update_s
-                       + link.down_time(w, down_bytes,
-                                        now=t + cfg.server_update_s),
+                if tr:
+                    tr.add_span("apply_update", t, cfg.server_update_s,
+                                track="server",
+                                args={"version": k_srv, "worker": w})
+                dt_down = link.down_time(w, down_bytes,
+                                         now=t + cfg.server_update_s)
+                if tr:
+                    tr.add_span("download", t + cfg.server_update_s,
+                                dt_down, track=f"worker {w}",
+                                cat="transfer")
+                q.push(t + cfg.server_update_s + dt_down,
                        DOWNLOAD_DONE, w)
 
             elif ev.kind == DOWNLOAD_DONE:
                 wparams[w], wflat[w] = srv_params, theta
                 dt = compute.iter_time(w, p.local_iter, t, evals)
                 p.busy_s += dt
+                if tr:
+                    tr.add_span("compute", t, dt, track=f"worker {w}",
+                                cat="compute")
                 q.push(t + dt, COMPUTE_DONE, w)
 
         if pool is not None:
             flush_pending()            # drain deferred rows on exit
+            led.observe_pool(pool)
+        led.uploads = sum(p.uploads for p in procs)
+        led.rounds = k_srv
+        led.bytes_up = sum(p.bytes_up for p in procs)
+        led.add_bytes_down(sum(p.bytes_down for p in procs))
         wall = float(srv_times[-1] if srv_times else t)
         return SimResult(
             mode="async", profile=cfg.network.name, steps=k_srv,
@@ -779,7 +903,8 @@ class SimRuntime:
             utilization=(np.asarray([p.busy_s for p in procs]) / wall
                          if wall > 0 else np.zeros(self.m)),
             max_staleness=max(p.max_staleness for p in procs),
-            final_params=srv_params)
+            final_params=srv_params,
+            ledger=led.summary())
 
 
 def simulate(loss_fn, rule: CommRule, params, batches, *,
@@ -790,8 +915,12 @@ def simulate(loss_fn, rule: CommRule, params, batches, *,
              metrics_every: int = 8, pool_storage: str = "ram",
              pool_path: str | None = None, rounds: int | None = None,
              lr: float = 0.01, eval_s: float = 1e-3, seed: int = 0,
-             optimizer=None, interpret=None) -> SimResult:
-    """One-call front door: build the profile + config + runtime and run."""
+             optimizer=None, interpret=None, trace=None) -> SimResult:
+    """One-call front door: build the profile + config + runtime and run.
+
+    ``trace`` (an ``obs.trace.Tracer`` or None) records every simulated
+    compute/transfer/gate event as a span on the simulated clock — export
+    with ``obs.export.write_chrome_trace`` for the timeline viewer."""
     if isinstance(network, str):
         network = network_profile(network, n_workers, eval_s=eval_s,
                                   seed=seed)
@@ -801,5 +930,5 @@ def simulate(loss_fn, rule: CommRule, params, batches, *,
                     metrics_every=metrics_every, pool_storage=pool_storage,
                     pool_path=pool_path, seed=seed)
     rt = SimRuntime(loss_fn, rule, n_workers, cfg, lr=lr,
-                    optimizer=optimizer, interpret=interpret)
+                    optimizer=optimizer, interpret=interpret, trace=trace)
     return rt.run(params, batches, rounds=rounds)

@@ -1,0 +1,99 @@
+"""sim/report.py edge cases: empty loss series, never-settling runs,
+final windows shorter than the smoothing window — and the additive-ledger
+contract (``summarize`` grows ledger fields without touching any
+pre-existing key)."""
+import numpy as np
+import pytest
+
+from repro.obs import CommLedger
+from repro.sim.report import (final_loss, smoothed_loss, summarize,
+                              time_to_target)
+from repro.sim.runtime import SimResult
+
+
+def _result(losses, times=None, m=4, wall=None, ledger=None):
+    losses = np.asarray(losses, np.float64)
+    if times is None:
+        times = np.arange(len(losses), dtype=np.float64)
+    times = np.asarray(times, np.float64)
+    wall = float(wall if wall is not None
+                 else (times[-1] if len(times) else 0.0))
+    return SimResult(
+        mode="barrier", profile="zero", steps=len(losses), wall_s=wall,
+        times=times, loss_times=times, losses=losses,
+        uploads=len(losses), grad_evals=len(losses) * m,
+        bytes_up=184.0 * len(losses), bytes_down=0.0,
+        utilization=np.full(m, 0.5), max_staleness=0,
+        final_params=None, ledger=ledger)
+
+
+# ------------------------------------------------------------ edge cases
+
+def test_time_to_target_empty_loss_series():
+    """A run that recorded no losses (zero rounds) settles nowhere."""
+    res = _result([])
+    t, smooth = smoothed_loss(res)
+    assert len(t) == 0 and len(smooth) == 0
+    assert time_to_target(res, target_loss=0.5) is None
+
+
+def test_time_to_target_never_settles():
+    """Loss stuck above target for the whole run -> None, not a crash."""
+    res = _result(np.linspace(2.0, 1.0, 40))
+    assert time_to_target(res, target_loss=0.5) is None
+    # and a transient dip below target must NOT claim it (suffix-max)
+    dip = np.full(40, 2.0)
+    dip[10] = 0.01
+    assert time_to_target(_result(dip), target_loss=0.5) is None
+
+
+def test_time_to_target_shorter_than_smoothing_window():
+    """A final window shorter than the smoothing window clips the window
+    to the series length instead of producing an empty convolution."""
+    res = _result([0.4, 0.3, 0.2], m=4)   # default window = max(5, 2*4) = 8
+    t, smooth = smoothed_loss(res)
+    assert len(smooth) == 1               # one full-series mean
+    np.testing.assert_allclose(smooth[0], np.mean([0.4, 0.3, 0.2]))
+    ttt = time_to_target(res, target_loss=0.5)
+    assert ttt == pytest.approx(2.0)      # settles at the window's end
+    assert final_loss(res) == pytest.approx(np.mean([0.4, 0.3, 0.2]))
+
+
+def test_single_observation_run():
+    res = _result([0.1], times=[3.0], wall=3.0)
+    t, smooth = smoothed_loss(res)
+    assert len(smooth) == 1
+    assert time_to_target(res, target_loss=0.5) == pytest.approx(3.0)
+
+
+def test_summarize_handles_zero_wall():
+    row = summarize(_result([], wall=0.0))
+    assert row["steps_per_sim_sec"] is None
+    assert row["final_loss"] is None      # not NaN — the JSON sinks choke
+    assert row["steps"] == 0
+
+
+# ------------------------------------------------- additive ledger fields
+
+def test_summarize_ledger_fields_are_additive():
+    """Every pre-ledger key is byte-identical with and without a ledger;
+    the ledger only ADDS fields."""
+    losses = np.linspace(1.0, 0.2, 30)
+    led = CommLedger(rule="cada2", wire_format="dense")
+    for k in range(30):
+        led.observe_round({"uploads": 2, "bytes_up": 368.0,
+                           "staleness": [0, 1, 0, 3]})
+    led.observe_margin([0.5, -0.25], 0.1)
+    led.observe_ring(np.array([0, 1, 1]), capacity=5)
+    bare = summarize(_result(losses), target_loss=0.5)
+    rich = summarize(_result(losses, ledger=led.summary()), target_loss=0.5)
+    for key, val in bare.items():
+        assert rich[key] == val, key      # byte-identical, not just close
+    extra = set(rich) - set(bare)
+    assert {"wire_format", "mbytes_up_dense", "mbytes_up_quantized",
+            "mbytes_up_sparse", "staleness_hist", "gate_margin",
+            "ring_occupancy", "ring_capacity"} <= extra
+    assert rich["wire_format"] == "dense"
+    assert rich["mbytes_up_quantized"] == 0.0
+    assert rich["staleness_hist"] == {"0": 60, "1": 30, "3": 30}
+    assert set(rich["gate_margin"]) == {"q10", "q50", "q90"}
